@@ -1,0 +1,33 @@
+"""Fig. 2: % of SpMV time spent communicating vs nnz/process (nlpkkt240-like).
+
+The paper shows communication dominating as the strong-scaling limit is
+approached (500k -> 50k nnz/process).  We reproduce the trend with the
+nlpkkt240 surrogate and the Blue Waters cost model.
+"""
+from __future__ import annotations
+
+from benchmarks.common import Table, default_topology, spmv_times
+from repro.core.partition import contiguous_partition
+from repro.core.topology import Topology
+from repro.sparse import suitesparse_like
+
+
+def run() -> Table:
+    t = Table("Fig 2 — communication fraction of SpMV time (nlpkkt240-like)",
+              ["nnz/process", "n_procs", "comm frac (standard)",
+               "comm frac (NAP)"])
+    a = suitesparse_like.build("nlpkkt240", scale=2048)
+    base_topo = default_topology()
+    for n_nodes in (2, 4, 8, 16, 32):
+        topo = Topology(n_nodes=n_nodes, ppn=base_topo.ppn)
+        part = contiguous_partition(a.shape[0], topo.n_procs)
+        r = spmv_times(a, part, topo)
+        nnz_pp = a.nnz // topo.n_procs
+        t.add(nnz_pp, topo.n_procs,
+              r["standard_comm"] / max(r["standard"], 1e-30),
+              r["nap_comm"] / max(r["nap"], 1e-30))
+    return t
+
+
+if __name__ == "__main__":
+    print(run().render())

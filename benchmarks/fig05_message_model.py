@@ -1,0 +1,23 @@
+"""Figs. 5/16: time to send one message vs size — max-rate (Eq. 10) inter-node
+model vs intra-node (Eq. 12) model, Blue Waters constants (Tables 3-4)."""
+from __future__ import annotations
+
+from benchmarks.common import Table
+from repro.core.cost_model import BLUE_WATERS, inter_node_time, intra_node_time
+
+
+def run() -> Table:
+    t = Table("Fig 5 — single message time (s), Blue Waters model",
+              ["bytes", "protocol", "inter-node (ppn=16)", "inter-node (ppn=1)",
+               "intra-node", "inter/intra"])
+    for nbytes in (8, 64, 512, 4096, 32768, 262144, 2097152):
+        inter16 = inter_node_time(nbytes, 16, BLUE_WATERS)
+        inter1 = inter_node_time(nbytes, 1, BLUE_WATERS)
+        intra = intra_node_time(nbytes, BLUE_WATERS)
+        t.add(nbytes, BLUE_WATERS.protocol(nbytes), inter16, inter1, intra,
+              inter16 / intra)
+    return t
+
+
+if __name__ == "__main__":
+    print(run().render())

@@ -1,0 +1,71 @@
+"""Figs. 8, 9, 10: per-AMG-level message counts/sizes and SpMV times.
+
+Builds smoothed-aggregation hierarchies for the rotated anisotropic and
+linear elasticity problems, then measures — per level — the max inter- and
+intra-node message count/volume of a single process (Figs. 8/9) and the
+modeled standard vs NAP SpMV time (Fig. 10).  Coarse levels are the paper's
+high-message-count regime where NAP wins most.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import Table, default_topology, message_stats, spmv_times
+from repro.amg import smoothed_aggregation_hierarchy
+from repro.configs.paper_spmv import CONFIG
+from repro.core.partition import contiguous_partition
+from repro.sparse import linear_elasticity_2d, rotated_anisotropic_2d
+
+
+def _problem(name: str):
+    if name == "anisotropic":
+        a = rotated_anisotropic_2d(CONFIG.anisotropic_grid, eps=0.001,
+                                   theta=np.pi / 6)
+        ns = np.ones((a.shape[0], 1))
+        return a, ns, 0.1
+    n = CONFIG.elasticity_grid
+    a = linear_elasticity_2d(n)
+    xy = np.stack(np.meshgrid(np.arange(n), np.arange(n), indexing="ij"),
+                  -1).reshape(-1, 2).astype(float)
+    ns = np.zeros((a.shape[0], 3))
+    ns[0::2, 0] = 1.0
+    ns[1::2, 1] = 1.0
+    ns[0::2, 2] = -xy[:, 1]
+    ns[1::2, 2] = xy[:, 0]
+    return a, ns, 0.05
+
+
+def run(problem: str = "elasticity"):
+    topo = default_topology()
+    a, ns, theta = _problem(problem)
+    levels = smoothed_aggregation_hierarchy(a, nullspace=ns, theta=theta,
+                                            coarse_size=2 * topo.n_procs)
+    t8 = Table(f"Fig 8 — max INTER-node msgs per process, {problem} AMG",
+               ["level", "rows", "nnz", "std #msg", "nap #msg",
+                "std bytes", "nap bytes"])
+    t9 = Table(f"Fig 9 — max INTRA-node msgs per process, {problem} AMG",
+               ["level", "std #msg", "nap #msg", "std bytes", "nap bytes"])
+    t10 = Table(f"Fig 10 — modeled SpMV time per level, {problem} AMG",
+                ["level", "standard (s)", "nap (s)", "speedup"])
+    for lvl, level in enumerate(levels):
+        al = level.a
+        if al.shape[0] < topo.n_procs:
+            break
+        part = contiguous_partition(al.shape[0], topo.n_procs)
+        ms = message_stats(al, part, topo)
+        t8.add(lvl, al.shape[0], al.nnz,
+               ms["standard"]["inter"].max_msgs, ms["nap"]["inter"].max_msgs,
+               ms["standard"]["inter"].max_bytes, ms["nap"]["inter"].max_bytes)
+        t9.add(lvl, ms["standard"]["intra"].max_msgs,
+               ms["nap"]["intra"].max_msgs,
+               ms["standard"]["intra"].max_bytes, ms["nap"]["intra"].max_bytes)
+        times = spmv_times(al, part, topo)
+        t10.add(lvl, times["standard"], times["nap"], times["speedup"])
+    return t8, t9, t10
+
+
+if __name__ == "__main__":
+    for prob in ("anisotropic", "elasticity"):
+        for t in run(prob):
+            print(t.render())
+            print()

@@ -1,0 +1,60 @@
+"""Figs. 11/12: weak & strong scaling on random fixed-nnz matrices.
+
+Fig 11: 5 seeds x densities {25, 50, 100} nnz/row at one scale (costs are
+seed-insensitive, matching the paper's observation).  Fig 12: weak scaling
+(1000 rows/process) and strong scaling (fixed global rows) over node counts.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import Table, spmv_times
+from repro.configs.paper_spmv import CONFIG
+from repro.core.partition import contiguous_partition
+from repro.core.topology import Topology
+from repro.sparse import random_fixed_nnz
+
+
+def run_fig11():
+    # seed/density insensitivity (the paper's point here) is scale-free;
+    # 250 rows/process keeps 15 plan builds tractable on one host.
+    topo = Topology(n_nodes=8, ppn=CONFIG.ppn)
+    n_rows = 250 * topo.n_procs
+    t = Table("Fig 11 — random matrices: 5 seeds x 3 densities (8 nodes)",
+              ["nnz/row", "seed", "standard (s)", "nap (s)", "speedup"])
+    for nnz in CONFIG.random_nnz_per_row:
+        for seed in range(5):
+            a = random_fixed_nnz(n_rows, nnz, seed=seed)
+            part = contiguous_partition(n_rows, topo.n_procs)
+            r = spmv_times(a, part, topo)
+            t.add(nnz, seed, r["standard"], r["nap"], r["speedup"])
+    return t
+
+
+def run_fig12():
+    t = Table("Fig 12 — weak & strong scaling, random (100 nnz/row)",
+              ["mode", "nodes", "procs", "rows", "standard (s)", "nap (s)",
+               "speedup"])
+    for n_nodes in (2, 4, 8, 16):
+        topo = Topology(n_nodes=n_nodes, ppn=CONFIG.ppn)
+        rows = 500 * topo.n_procs
+        a = random_fixed_nnz(rows, 100, seed=0)
+        part = contiguous_partition(rows, topo.n_procs)
+        r = spmv_times(a, part, topo)
+        t.add("weak", n_nodes, topo.n_procs, rows, r["standard"], r["nap"],
+              r["speedup"])
+    rows = CONFIG.strong_scale_rows
+    a = random_fixed_nnz(rows, 100, seed=0)
+    for n_nodes in (2, 4, 8, 16):
+        topo = Topology(n_nodes=n_nodes, ppn=CONFIG.ppn)
+        part = contiguous_partition(rows, topo.n_procs)
+        r = spmv_times(a, part, topo)
+        t.add("strong", n_nodes, topo.n_procs, rows, r["standard"], r["nap"],
+              r["speedup"])
+    return t
+
+
+if __name__ == "__main__":
+    print(run_fig11().render())
+    print()
+    print(run_fig12().render())

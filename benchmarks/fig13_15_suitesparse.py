@@ -1,0 +1,81 @@
+"""Figs. 13/14/15: SuiteSparse(-like) speedups and the partition crossover.
+
+Fig 13: NAP speedup over standard SpMV with STRIDED partitions (row r on
+process r mod np) at several nnz/core scales.  Fig 14: same with BALANCED
+(graph-partitioned) rows.  Fig 15: how many NAPSpMVs amortise the one-time
+graph-partitioning cost (crossover count).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import Table, spmv_times
+from repro.configs.paper_spmv import CONFIG
+from repro.core.partition import make_partition
+from repro.core.topology import Topology
+from repro.sparse import suitesparse_like
+
+MATRICES = ["nlpkkt240", "ML_Geer", "Flan_1565", "audikw_1", "Serena",
+            "StocF-1465"]
+
+
+def _topo_for(a, nnz_per_core: int) -> Topology:
+    n_procs = max(CONFIG.ppn * 2, min(512, a.nnz // max(nnz_per_core, 1)))
+    n_nodes = max(2, n_procs // CONFIG.ppn)
+    return Topology(n_nodes=n_nodes, ppn=CONFIG.ppn)
+
+
+def run_fig13_14():
+    t13 = Table("Fig 13 — NAP speedup, STRIDED partitions (x-like surrogates)",
+                ["matrix", "nnz/core", "standard (s)", "nap (s)", "speedup"])
+    t14 = Table("Fig 14 — NAP speedup, BALANCED partitions",
+                ["matrix", "nnz/core", "standard (s)", "nap (s)", "speedup"])
+    for name in MATRICES:
+        a = suitesparse_like.build(name, scale=4096)
+        for nnz_per_core in (50_000, 100_000):
+            topo = _topo_for(a, nnz_per_core)
+            if a.shape[0] < topo.n_procs:
+                continue
+            strided = make_partition("strided", a.shape[0], topo.n_procs)
+            r = spmv_times(a, strided, topo)
+            t13.add(f"{name}-like", nnz_per_core, r["standard"], r["nap"],
+                    r["speedup"])
+            balanced = make_partition("balanced", a.shape[0], topo.n_procs,
+                                      a.indptr, a.indices)
+            r = spmv_times(a, balanced, topo)
+            t14.add(f"{name}-like", nnz_per_core, r["standard"], r["nap"],
+                    r["speedup"])
+    return t13, t14
+
+
+def run_fig15():
+    t = Table("Fig 15 — NAPSpMV count to amortise graph partitioning",
+              ["matrix", "t_nap strided (s)", "t_nap balanced (s)",
+               "t_partition (s)", "crossover #spmvs"])
+    for name in MATRICES[:4]:
+        a = suitesparse_like.build(name, scale=4096)
+        topo = _topo_for(a, 50_000)
+        if a.shape[0] < topo.n_procs:
+            continue
+        strided = make_partition("strided", a.shape[0], topo.n_procs)
+        t0 = time.time()
+        balanced = make_partition("balanced", a.shape[0], topo.n_procs,
+                                  a.indptr, a.indices)
+        t_part = time.time() - t0   # stand-in for the PT-Scotch setup cost
+        rs = spmv_times(a, strided, topo)["nap"]
+        rb = spmv_times(a, balanced, topo)["nap"]
+        gain = rs - rb
+        crossover = int(np.ceil(t_part / gain)) if gain > 1e-12 else float("inf")
+        t.add(f"{name}-like", rs, rb, t_part, crossover)
+    return t
+
+
+if __name__ == "__main__":
+    a, b = run_fig13_14()
+    print(a.render())
+    print()
+    print(b.render())
+    print()
+    print(run_fig15().render())

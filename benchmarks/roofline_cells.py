@@ -1,0 +1,42 @@
+"""§Roofline table: render results/dryrun.json as the per-cell roofline."""
+from __future__ import annotations
+
+import json
+import pathlib
+
+from benchmarks.common import Table
+
+RESULTS = pathlib.Path(__file__).resolve().parent.parent / "results" / "dryrun.json"
+
+
+def run(mesh_filter: str = ""):
+    t = Table("Roofline terms per (arch x shape x mesh) — from the dry-run",
+              ["arch", "shape", "mesh", "compute s", "memory s", "coll s",
+               "dominant", "MFU %", "useful", "peak GB", "analytic GB"])
+    if not RESULTS.exists():
+        t.add("(run `python -m repro.launch.dryrun --all` first)",
+              *[""] * 10)
+        return t
+    cells = json.loads(RESULTS.read_text())["cells"]
+    for key in sorted(cells):
+        r = cells[key]
+        arch, shape, mesh = key.split("|")
+        if mesh_filter and mesh != mesh_filter:
+            continue
+        if r.get("skipped"):
+            t.add(arch, shape, mesh, "-", "-", "-", "SKIP", "-", "-", "-", "-")
+            continue
+        if not r.get("ok"):
+            t.add(arch, shape, mesh, "-", "-", "-", "FAIL", "-", "-", "-", "-")
+            continue
+        roof = r["roofline"]
+        t.add(arch, shape, mesh, roof["t_compute"], roof["t_memory"],
+              roof["t_collective"], roof["dominant"],
+              round(roof["mfu"] * 100, 2), round(roof["useful_ratio"], 2),
+              round(r["memory"]["peak_gb"], 1),
+              round(r["memory"].get("analytic", {}).get("total", 0), 1))
+    return t
+
+
+if __name__ == "__main__":
+    print(run().render())

@@ -1,0 +1,54 @@
+"""Benchmark driver: one experiment per paper table/figure + the roofline.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="skip the slowest experiments (fig13-15)")
+    args = ap.parse_args()
+    t_start = time.time()
+
+    from benchmarks import (fig02_comm_fraction, fig05_message_model,
+                            fig08_10_amg_levels, fig11_12_random,
+                            roofline_cells)
+
+    print("#" * 72)
+    print("# NAPSpMV benchmark suite — all Blue Waters numbers are")
+    print("# cost-model-derived (Eqs. 10-12, Tables 3-4); roofline numbers")
+    print("# come from the compiled multi-pod dry-run (results/dryrun.json).")
+    print("#" * 72, flush=True)
+
+    print(fig02_comm_fraction.run().render())
+    print()
+    print(fig05_message_model.run().render())
+    print()
+    for prob in ("anisotropic", "elasticity"):
+        for t in fig08_10_amg_levels.run(prob):
+            print(t.render())
+            print()
+    print(fig11_12_random.run_fig11().render())
+    print()
+    print(fig11_12_random.run_fig12().render())
+    print()
+    if not args.quick:
+        from benchmarks import fig13_15_suitesparse
+        t13, t14 = fig13_15_suitesparse.run_fig13_14()
+        print(t13.render())
+        print()
+        print(t14.render())
+        print()
+        print(fig13_15_suitesparse.run_fig15().render())
+        print()
+    print(roofline_cells.run().render())
+    print(f"\nall benchmarks done in {time.time() - t_start:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

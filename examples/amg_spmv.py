@@ -1,0 +1,59 @@
+"""AMG-preconditioned CG where every SpMV is the distributed NAPSpMV.
+
+This is the paper's driving application: algebraic multigrid solves spend
+their time in per-level SpMVs whose communication patterns degrade on coarse
+levels.  Here a rotated-anisotropic system is solved by AMG-PCG with the
+level-0 (and optionally every level's) SpMV executed through the exact
+NAPSpMV message-passing simulator, and the per-level communication savings
+are printed.
+
+    PYTHONPATH=src python examples/amg_spmv.py
+"""
+import numpy as np
+
+from repro.amg import amg_vcycle, cg_solve, smoothed_aggregation_hierarchy
+from repro.configs.paper_spmv import CONFIG
+from repro.core.cost_model import BLUE_WATERS, nap_cost, standard_cost
+from repro.core.partition import contiguous_partition
+from repro.core.spmv import DistSpMV
+from repro.core.topology import Topology
+from repro.sparse import CSR, rotated_anisotropic_2d
+
+
+def main() -> None:
+    a = rotated_anisotropic_2d(48, eps=0.01, theta=np.pi / 6)
+    a = CSR.from_dense(a.to_dense() + np.eye(a.shape[0]) * 1e-3)
+    topo = Topology(n_nodes=8, ppn=4)
+    levels = smoothed_aggregation_hierarchy(a, theta=0.1, coarse_size=64)
+    print(f"AMG hierarchy: {[lvl.a.shape[0] for lvl in levels]} rows/level")
+
+    # distributed SpMV per level (exact simulator) + modeled times
+    dists = []
+    for i, lvl in enumerate(levels):
+        if lvl.a.shape[0] < topo.n_procs:
+            dists.append(None)
+            continue
+        part = contiguous_partition(lvl.a.shape[0], topo.n_procs)
+        d = DistSpMV.build(lvl.a, part, topo)
+        dists.append(d)
+        ts = standard_cost(d.standard, BLUE_WATERS)["total"]
+        tn = nap_cost(d.nap, BLUE_WATERS)["total"]
+        print(f"  level {i}: rows {lvl.a.shape[0]:6d}  modeled comm "
+              f"std {ts:.2e}s  nap {tn:.2e}s  ({ts/tn:4.1f}x)")
+
+    def spmv_at(lvl_idx: int, vec: np.ndarray) -> np.ndarray:
+        d = dists[lvl_idx]
+        return d.run(vec, "nap") if d is not None else levels[lvl_idx].a.matvec(vec)
+
+    rng = np.random.default_rng(0)
+    b = rng.standard_normal(a.shape[0])
+    x, iters, rel = cg_solve(
+        a, b, tol=1e-8, maxiter=100,
+        precond=lambda r: amg_vcycle(levels, r, spmv_at=spmv_at),
+        spmv=lambda vec: dists[0].run(vec, "nap"))
+    print(f"AMG-PCG with NAPSpMV converged in {iters} iters (relres {rel:.1e})")
+    assert rel < 1e-8
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,65 @@
+"""NAPSpMV applied to Mixture-of-Experts dispatch (the paper -> LMs bridge).
+
+Runs the SAME MoE layer through its three dispatch modes on a simulated
+2-pod x 4-chip mesh and shows:
+  * all three agree numerically (vs the dense-masked oracle), and
+  * the NAP (3-step, pod-deduplicated) dispatch injects FEWER bytes across
+    the inter-pod boundary than the flat all-to-all — the paper's E(n, m)
+    dedup, applied to tokens routed to multiple experts on one remote pod.
+
+    PYTHONPATH=src python examples/moe_nap_dispatch.py
+"""
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import get_reduced
+from repro.core.hlo_analysis import analyze_hlo
+from repro.models.moe import EPInfo, moe_apply_local, moe_apply_sharded, moe_init
+
+
+def main() -> None:
+    cfg = get_reduced("qwen3-moe-235b-a22b").replace(
+        n_experts=8, top_k=4, moe_dff=64, d_model=64, capacity_factor=8.0)
+    mesh = jax.make_mesh((2, 4), ("pod", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    params = moe_init(jax.random.key(0), cfg, jnp.float32)
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((4, 16, cfg.d_model)) * 0.3,
+                    jnp.float32)
+
+    want = moe_apply_local(params, cfg, x)
+
+    results = {}
+    for mode in ("flat", "nap"):
+        mcfg = cfg.replace(moe_dispatch=mode)
+        ep = EPInfo(inner_axis="model", pod_axis="pod")
+        fn = jax.jit(lambda p, xx: moe_apply_sharded(p, mcfg, xx, ep, mesh))
+        with jax.set_mesh(mesh):
+            lowered = fn.lower(params, x)
+            compiled = lowered.compile()
+            got = np.asarray(fn(params, x))
+        # pod_boundary=4: devices 0-3 are pod 0, 4-7 pod 1 on the (2,4) mesh
+        cost = analyze_hlo(compiled.as_text(), pod_boundary=4)
+        results[mode] = (cost.dci_bytes, cost.total_collective_bytes)
+        err = np.abs(got - np.asarray(want)).max() / np.abs(np.asarray(want)).max()
+        print(f"{mode:4s} dispatch: max rel err vs dense oracle = {err:.2e}, "
+              f"pod-crossing (DCI) bytes = {cost.dci_bytes:,.0f}, "
+              f"total = {cost.total_collective_bytes:,.0f}")
+        assert err < 1e-4, f"{mode} dispatch diverged from the oracle"
+
+    (flat_dci, flat_tot), (nap_dci, nap_tot) = results["flat"], results["nap"]
+    print(f"\nEXPENSIVE-axis (inter-pod) bytes: flat {flat_dci:,.0f} -> "
+          f"nap {nap_dci:,.0f}  ({flat_dci / max(nap_dci, 1):.2f}x less)")
+    print(f"cheap intra-pod bytes grow: {flat_tot - flat_dci:,.0f} -> "
+          f"{nap_tot - nap_dci:,.0f} — the paper's Figs. 8-vs-9 trade.")
+    assert nap_dci < flat_dci, "NAP must reduce pod-crossing traffic"
+
+
+if __name__ == "__main__":
+    main()

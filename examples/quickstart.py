@@ -1,0 +1,80 @@
+"""Quickstart: node-aware SpMV on a small problem, end to end.
+
+Builds a 2D anisotropic diffusion matrix, distributes it over a simulated
+(4 nodes x 4 processes) machine, runs the standard and node-aware SpMV
+through (a) the exact message-passing simulator and (b) the JAX shard_map
+SPMD executor, checks exactness, and prints the communication win.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=16")
+
+import numpy as np
+import jax
+
+from repro.core.comm_graph import build_nap_plan, build_standard_plan, nap_stats, standard_stats
+from repro.core.cost_model import BLUE_WATERS, nap_cost, standard_cost
+from repro.core.partition import contiguous_partition
+from repro.core.spmv import DistSpMV
+from repro.core.spmv_jax import (compile_nap, nap_spmv_shardmap, pack_vector,
+                                 unpack_vector)
+from repro.core.topology import Topology
+from repro.sparse import rotated_anisotropic_2d
+
+
+def main() -> None:
+    # -- problem + machine ----------------------------------------------------
+    a = rotated_anisotropic_2d(32, eps=0.01, theta=np.pi / 6)
+    topo = Topology(n_nodes=4, ppn=4)
+    part = contiguous_partition(a.shape[0], topo.n_procs)
+    rng = np.random.default_rng(0)
+    v = rng.standard_normal(a.shape[0])
+    want = a.matvec(v)
+
+    # -- exact message-passing simulation ------------------------------------
+    dist = DistSpMV.build(a, part, topo)
+    w_std = dist.run(v, "standard")
+    w_nap = dist.run(v, "nap")
+    np.testing.assert_allclose(w_std, want, rtol=1e-12)
+    np.testing.assert_allclose(w_nap, want, rtol=1e-12)
+    print("exactness: standard & NAP simulators match A@v")
+
+    # -- communication statistics (the paper's Figs. 11/12 in miniature) ------
+    # unstructured matrices are where the node-level dedup wins: many ranks
+    # of one node need the same remote value, and NAP injects it once.
+    from repro.sparse import random_fixed_nnz
+    ar = random_fixed_nnz(4096, 50, seed=0)
+    partr = contiguous_partition(ar.shape[0], topo.n_procs)
+    distr = DistSpMV.build(ar, partr, topo)
+    np.testing.assert_allclose(distr.run(v0 := rng.standard_normal(4096), "nap"),
+                               ar.matvec(v0), rtol=1e-9, atol=1e-12)
+    s = standard_stats(distr.standard)
+    n = nap_stats(distr.nap)
+    print("\nrandom 4096x4096, 50 nnz/row (the paper's unstructured case):")
+    print(f"inter-node messages: standard {s['inter'].total_msgs:4d}  "
+          f"nap {n['inter'].total_msgs:4d}")
+    print(f"inter-node bytes:    standard {s['inter'].total_bytes:6d}  "
+          f"nap {n['inter'].total_bytes:6d}")
+    print(f"intra-node bytes:    standard {s['intra'].total_bytes:6d}  "
+          f"nap {n['intra'].total_bytes:6d}   (cheap traffic grows)")
+    ts = standard_cost(distr.standard, BLUE_WATERS)["total"]
+    tn = nap_cost(distr.nap, BLUE_WATERS)["total"]
+    print(f"modeled comm time:   standard {ts:.2e}s  nap {tn:.2e}s  "
+          f"({ts / tn:.2f}x)")
+
+    # -- the same plan compiled to shard_map SPMD ------------------------------
+    if jax.device_count() >= topo.n_procs:
+        mesh = jax.make_mesh((topo.n_nodes, topo.ppn), ("node", "proc"),
+                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        compiled = compile_nap(a, part, topo)
+        run = nap_spmv_shardmap(compiled, mesh)
+        shards = pack_vector(v, part, topo, compiled.rows_pad)
+        w_spmd = unpack_vector(np.asarray(run(shards)), part, topo)
+        np.testing.assert_allclose(w_spmd, want, rtol=1e-4, atol=1e-5)
+        print("SPMD shard_map NAPSpMV matches on a 16-device host mesh")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,6 @@
+from repro.amg.hierarchy import Level, smoothed_aggregation_hierarchy
+from repro.amg.matmul import csr_matmul
+from repro.amg.solve import amg_vcycle, cg_solve
+
+__all__ = ["Level", "smoothed_aggregation_hierarchy", "csr_matmul",
+           "amg_vcycle", "cg_solve"]

@@ -1,0 +1,163 @@
+"""Smoothed-aggregation AMG setup (strength -> aggregate -> tentative ->
+smoothed P -> Galerkin RAP).
+
+The paper's Figs. 8-10 measure SpMV communication on every level of AMG
+hierarchies for a rotated-anisotropic diffusion and a linear-elasticity
+problem; this module builds equivalent hierarchies so those experiments run
+offline.  Coarse levels are small and *dense*, exactly the high-message-count
+regime where NAPSpMV wins most (paper Sec. 5).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import numpy as np
+
+from repro.amg.matmul import csr_matmul
+from repro.sparse.csr import CSR
+
+
+@dataclasses.dataclass
+class Level:
+    a: CSR
+    p: Optional[CSR] = None       # prolongation to THIS level from coarse
+    r: Optional[CSR] = None       # restriction (P^T)
+    aggregates: Optional[np.ndarray] = None  # fine node -> aggregate id
+
+
+def strength_graph(a: CSR, theta: float = 0.0) -> CSR:
+    """Symmetric strength-of-connection: keep A_ij with
+    |A_ij| >= theta * sqrt(|A_ii| |A_jj|); diagonal always kept."""
+    rows, cols, vals = a.to_coo()
+    diag = np.zeros(a.shape[0])
+    dmask = rows == cols
+    diag[rows[dmask]] = np.abs(vals[dmask])
+    diag[diag == 0] = 1.0
+    keep = np.abs(vals) >= theta * np.sqrt(diag[rows] * diag[cols])
+    keep |= dmask
+    return CSR.from_coo(rows[keep], cols[keep], vals[keep], a.shape,
+                        sum_duplicates=False)
+
+
+def standard_aggregation(s: CSR) -> np.ndarray:
+    """Greedy two-pass aggregation on the strength graph.  Returns agg id
+    per node (-1 never remains after pass 3)."""
+    n = s.shape[0]
+    agg = np.full(n, -1, dtype=np.int64)
+    next_agg = 0
+    # pass 1: nodes whose strong neighbourhood is fully unaggregated seed
+    # a new aggregate containing that neighbourhood.
+    for i in range(n):
+        if agg[i] != -1:
+            continue
+        nbrs = s.indices[s.indptr[i]:s.indptr[i + 1]]
+        if (agg[nbrs] == -1).all():
+            agg[nbrs] = next_agg
+            agg[i] = next_agg
+            next_agg += 1
+    # pass 2: attach stragglers to any aggregated strong neighbour.
+    attach = agg.copy()
+    for i in range(n):
+        if agg[i] != -1:
+            continue
+        nbrs = s.indices[s.indptr[i]:s.indptr[i + 1]]
+        hit = nbrs[agg[nbrs] != -1]
+        if hit.size:
+            attach[i] = agg[hit[0]]
+    agg = attach
+    # pass 3: remaining isolated nodes become singleton aggregates.
+    for i in range(n):
+        if agg[i] == -1:
+            agg[i] = next_agg
+            next_agg += 1
+    return agg
+
+
+def tentative_prolongator(agg: np.ndarray, nullspace: np.ndarray
+                          ) -> tuple[CSR, np.ndarray]:
+    """Local QR of the near-nullspace over each aggregate: P has one block
+    column per (aggregate, nullspace vector); returns (P, coarse nullspace)."""
+    n, nb = nullspace.shape
+    n_agg = int(agg.max()) + 1
+    rows_out, cols_out, vals_out = [], [], []
+    bc = np.zeros((n_agg * nb, nb))
+    order = np.argsort(agg, kind="stable")
+    bounds = np.searchsorted(agg[order], np.arange(n_agg + 1))
+    for a_id in range(n_agg):
+        nodes = order[bounds[a_id]:bounds[a_id + 1]]
+        blk = nullspace[nodes]                      # [sz, nb]
+        q, r = np.linalg.qr(blk)
+        if q.shape[1] < nb:  # aggregate smaller than the nullspace dim
+            q = np.pad(q, ((0, 0), (0, nb - q.shape[1])))
+            r = np.pad(r, ((0, nb - r.shape[0]), (0, 0)))
+        rows_out.append(np.repeat(nodes, nb))
+        cols_out.append(np.tile(a_id * nb + np.arange(nb), nodes.size))
+        vals_out.append(q.reshape(-1))
+        bc[a_id * nb:(a_id + 1) * nb] = r
+    p = CSR.from_coo(np.concatenate(rows_out), np.concatenate(cols_out),
+                     np.concatenate(vals_out), (n, n_agg * nb),
+                     sum_duplicates=False)
+    return p, bc
+
+
+def _spectral_radius_dinv_a(a: CSR, iters: int = 15, seed: int = 0) -> float:
+    diag = np.zeros(a.shape[0])
+    rows, cols, vals = a.to_coo()
+    m = rows == cols
+    diag[rows[m]] = vals[m]
+    diag[diag == 0] = 1.0
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal(a.shape[0])
+    lam = 1.0
+    for _ in range(iters):
+        y = a.matvec(x) / diag
+        lam = float(np.linalg.norm(y) / max(np.linalg.norm(x), 1e-30))
+        x = y / max(np.linalg.norm(y), 1e-30)
+    return max(lam, 1e-12)
+
+
+def smooth_prolongator(a: CSR, t: CSR, omega_scale: float = 4.0 / 3.0) -> CSR:
+    """P = (I - omega D^-1 A) T with omega = omega_scale / rho(D^-1 A)."""
+    omega = omega_scale / _spectral_radius_dinv_a(a)
+    rows, cols, vals = a.to_coo()
+    diag = np.zeros(a.shape[0])
+    m = rows == cols
+    diag[rows[m]] = vals[m]
+    diag[diag == 0] = 1.0
+    da = CSR.from_coo(rows, cols, -omega * vals / diag[rows], a.shape,
+                      sum_duplicates=False)
+    # add identity
+    eye_rows = np.arange(a.shape[0])
+    rows2 = np.concatenate([da.to_coo()[0], eye_rows])
+    cols2 = np.concatenate([da.to_coo()[1], eye_rows])
+    vals2 = np.concatenate([da.to_coo()[2], np.ones(a.shape[0])])
+    s = CSR.from_coo(rows2, cols2, vals2, a.shape)
+    return csr_matmul(s, t)
+
+
+def smoothed_aggregation_hierarchy(a: CSR, nullspace: Optional[np.ndarray] = None,
+                                   theta: float = 0.0, max_levels: int = 12,
+                                   coarse_size: int = 64) -> List[Level]:
+    """Build the SA-AMG hierarchy; levels[0].a is the fine matrix."""
+    if nullspace is None:
+        nullspace = np.ones((a.shape[0], 1))
+    levels = [Level(a=a)]
+    b = nullspace
+    while len(levels) < max_levels and levels[-1].a.shape[0] > coarse_size:
+        a_l = levels[-1].a
+        s = strength_graph(a_l, theta)
+        agg = standard_aggregation(s)
+        n_coarse_dofs = (int(agg.max()) + 1) * b.shape[1]
+        if n_coarse_dofs >= 0.8 * a_l.shape[0]:  # coarsening stalled
+            break
+        t, bc = tentative_prolongator(agg, b)
+        p = smooth_prolongator(a_l, t)
+        r = p.transpose()
+        a_c = csr_matmul(r, csr_matmul(a_l, p))
+        levels[-1].p = p
+        levels[-1].r = r
+        levels[-1].aggregates = agg
+        levels.append(Level(a=a_c))
+        b = bc
+    return levels

@@ -1,0 +1,29 @@
+"""Vectorized CSR x CSR product (numpy; no scipy in the library path)."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.sparse.csr import CSR
+
+
+def csr_matmul(a: CSR, b: CSR) -> CSR:
+    """C = A @ B by row expansion: every nonzero (i, k) of A contributes
+    a_ik * B[k, :]; duplicates are summed by CSR.from_coo."""
+    assert a.shape[1] == b.shape[0], (a.shape, b.shape)
+    ai, ak, av = a.to_coo()
+    if ai.size == 0:
+        return CSR.from_coo(np.empty(0, np.int64), np.empty(0, np.int64),
+                            np.empty(0), (a.shape[0], b.shape[1]))
+    b_counts = np.diff(b.indptr)
+    counts = b_counts[ak]
+    total = int(counts.sum())
+    if total == 0:
+        return CSR.from_coo(np.empty(0, np.int64), np.empty(0, np.int64),
+                            np.empty(0), (a.shape[0], b.shape[1]))
+    ends = np.cumsum(counts)
+    intra = np.arange(total) - np.repeat(ends - counts, counts)
+    take = np.repeat(b.indptr[ak], counts) + intra
+    rows = np.repeat(ai, counts)
+    cols = b.indices[take]
+    vals = np.repeat(av, counts) * b.data[take]
+    return CSR.from_coo(rows, cols, vals, (a.shape[0], b.shape[1]))

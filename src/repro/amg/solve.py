@@ -1,0 +1,79 @@
+"""AMG V-cycle + (preconditioned) CG, numpy reference solvers.
+
+These exercise the hierarchy end-to-end; the *distributed* SpMV inside each
+level is what the paper optimizes (examples/amg_spmv.py wires the NAPSpMV
+executor into this loop).
+"""
+from __future__ import annotations
+
+from typing import Callable, List, Optional
+
+import numpy as np
+
+from repro.amg.hierarchy import Level
+from repro.sparse.csr import CSR
+
+
+def _diag(a: CSR) -> np.ndarray:
+    rows, cols, vals = a.to_coo()
+    d = np.zeros(a.shape[0])
+    m = rows == cols
+    d[rows[m]] = vals[m]
+    d[d == 0] = 1.0
+    return d
+
+
+def jacobi(a: CSR, x: np.ndarray, b: np.ndarray, d: np.ndarray,
+           sweeps: int = 2, omega: float = 2.0 / 3.0,
+           spmv: Optional[Callable] = None) -> np.ndarray:
+    mv = spmv or a.matvec
+    for _ in range(sweeps):
+        x = x + omega * (b - mv(x)) / d
+    return x
+
+
+def amg_vcycle(levels: List[Level], b: np.ndarray,
+               x: Optional[np.ndarray] = None, lvl: int = 0,
+               spmv_at: Optional[Callable[[int, np.ndarray], np.ndarray]] = None
+               ) -> np.ndarray:
+    """One V(2,2)-cycle.  ``spmv_at(lvl, v)`` may override the per-level SpMV
+    (e.g. with the distributed NAP executor)."""
+    a = levels[lvl].a
+    mv = (lambda v: spmv_at(lvl, v)) if spmv_at else a.matvec
+    if x is None:
+        x = np.zeros_like(b)
+    if lvl == len(levels) - 1 or levels[lvl].p is None:
+        dense = a.to_dense()
+        return np.linalg.lstsq(dense, b, rcond=None)[0]
+    d = _diag(a)
+    x = jacobi(a, x, b, d, spmv=mv)
+    coarse_b = levels[lvl].r.matvec(b - mv(x))
+    coarse_x = amg_vcycle(levels, coarse_b, None, lvl + 1, spmv_at)
+    x = x + levels[lvl].p.matvec(coarse_x)
+    return jacobi(a, x, b, d, spmv=mv)
+
+
+def cg_solve(a: CSR, b: np.ndarray, tol: float = 1e-8, maxiter: int = 500,
+             precond: Optional[Callable[[np.ndarray], np.ndarray]] = None,
+             spmv: Optional[Callable] = None):
+    """(Preconditioned) conjugate gradients; returns (x, iters, relres)."""
+    mv = spmv or a.matvec
+    x = np.zeros_like(b)
+    r = b - mv(x)
+    z = precond(r) if precond else r
+    p = z.copy()
+    rz = float(r @ z)
+    b_norm = max(float(np.linalg.norm(b)), 1e-30)
+    for it in range(1, maxiter + 1):
+        ap = mv(p)
+        alpha = rz / max(float(p @ ap), 1e-300)
+        x += alpha * p
+        r -= alpha * ap
+        rel = float(np.linalg.norm(r)) / b_norm
+        if rel < tol:
+            return x, it, rel
+        z = precond(r) if precond else r
+        rz_new = float(r @ z)
+        p = z + (rz_new / max(rz, 1e-300)) * p
+        rz = rz_new
+    return x, maxiter, float(np.linalg.norm(r)) / b_norm

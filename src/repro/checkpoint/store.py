@@ -1,0 +1,158 @@
+"""Sharded checkpoints with manifest, async save, and ELASTIC restore.
+
+Layout per step:  <dir>/step_<n>/
+    manifest.json      tree structure, shapes, dtypes, mesh, data cursor
+    shard_<k>.npz      leaf arrays (chunked so no single file balloons)
+    _COMMITTED         written LAST — a crash mid-save never corrupts restore
+
+Elastic restore: arrays are stored UNSHARDED per leaf (on a real multi-host
+fleet each host writes its shard slice + index, same manifest), so restoring
+onto a *different* mesh is just device_put with the new sharding — the
+surviving-nodes restart path in runtime/elastic.py relies on this.
+"""
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+import threading
+import time
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+Pytree = Any
+
+
+def _flatten_with_names(tree: Pytree) -> Tuple[List[Tuple[str, Any]], Any]:
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        name = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                        for k in path)
+        out.append((name, leaf))
+    return out, treedef
+
+
+def save_checkpoint(directory: str, step: int, tree: Pytree,
+                    extra: Optional[Dict] = None,
+                    shard_mb: int = 512) -> str:
+    path = pathlib.Path(directory) / f"step_{step:08d}"
+    path.mkdir(parents=True, exist_ok=True)
+    named, _ = _flatten_with_names(tree)
+    manifest = {"step": step, "extra": extra or {}, "leaves": [], "shards": 0}
+    shard, shard_bytes, shard_id = {}, 0, 0
+    limit = shard_mb * 1_000_000
+
+    def flush():
+        nonlocal shard, shard_bytes, shard_id
+        if shard:
+            np.savez(path / f"shard_{shard_id}.npz", **shard)
+            shard, shard_bytes = {}, 0
+            shard_id += 1
+
+    for name, leaf in named:
+        arr = np.asarray(leaf)
+        key = name.replace("/", "__")
+        logical_dtype = str(arr.dtype)
+        if logical_dtype == "bfloat16":   # npz has no native bf16: bit-store
+            arr = arr.view(np.uint16)
+        manifest["leaves"].append({
+            "name": name, "key": key, "shard": shard_id,
+            "shape": list(arr.shape), "dtype": logical_dtype})
+        shard[key] = arr
+        shard_bytes += arr.nbytes
+        if shard_bytes >= limit:
+            flush()
+    flush()
+    manifest["shards"] = shard_id
+    with open(path / "manifest.json", "w") as f:
+        json.dump(manifest, f)
+    (path / "_COMMITTED").touch()       # atomicity marker, written last
+    return str(path)
+
+
+def load_checkpoint(directory: str, step: Optional[int] = None,
+                    target: Optional[Pytree] = None,
+                    shardings: Optional[Pytree] = None) -> Tuple[Pytree, Dict]:
+    """Restore (tree, extra).  ``target`` supplies the tree structure; with
+    ``shardings`` the leaves are device_put to the (possibly NEW) mesh."""
+    base = pathlib.Path(directory)
+    if step is None:
+        steps = sorted(int(p.name.split("_")[1]) for p in base.glob("step_*")
+                       if (p / "_COMMITTED").exists())
+        if not steps:
+            raise FileNotFoundError(f"no committed checkpoints in {directory}")
+        step = steps[-1]
+    path = base / f"step_{step:08d}"
+    if not (path / "_COMMITTED").exists():
+        raise FileNotFoundError(f"checkpoint {path} not committed")
+    with open(path / "manifest.json") as f:
+        manifest = json.load(f)
+    shards = {i: np.load(path / f"shard_{i}.npz")
+              for i in range(manifest["shards"] + 1)
+              if (path / f"shard_{i}.npz").exists()}
+    import ml_dtypes
+    by_name = {}
+    for l in manifest["leaves"]:
+        arr = shards[l["shard"]][l["key"]]
+        if l["dtype"] == "bfloat16":
+            arr = arr.view(ml_dtypes.bfloat16)
+        by_name[l["name"]] = arr
+    if target is None:
+        return by_name, manifest["extra"]
+    named, treedef = _flatten_with_names(target)
+    leaves = []
+    flat_shardings = (jax.tree.leaves(shardings)
+                      if shardings is not None else [None] * len(named))
+    for (name, tgt), sh in zip(named, flat_shardings):
+        arr = by_name[name]
+        if sh is not None:
+            arr = jax.device_put(arr, sh)
+        leaves.append(arr)
+    return jax.tree.unflatten(treedef, leaves), manifest["extra"]
+
+
+class CheckpointManager:
+    """Async, rolling checkpoints: save() returns immediately; the writer
+    thread serialises in the background (the train loop never stalls on I/O)."""
+
+    def __init__(self, directory: str, keep: int = 3):
+        self.directory = directory
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+        self.last_saved: Optional[int] = None
+
+    def save(self, step: int, tree: Pytree, extra: Optional[Dict] = None,
+             block: bool = False) -> None:
+        self.wait()                      # one in-flight save at a time
+        host_tree = jax.tree.map(np.asarray, tree)   # snapshot before async
+
+        def work():
+            save_checkpoint(self.directory, step, host_tree, extra)
+            self.last_saved = step
+            self._gc()
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+        if block:
+            self.wait()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def restore(self, target=None, shardings=None, step=None):
+        return load_checkpoint(self.directory, step, target, shardings)
+
+    def _gc(self) -> None:
+        base = pathlib.Path(self.directory)
+        steps = sorted(int(p.name.split("_")[1]) for p in base.glob("step_*")
+                       if (p / "_COMMITTED").exists())
+        for s in steps[:-self.keep]:
+            p = base / f"step_{s:08d}"
+            for f in p.iterdir():
+                f.unlink()
+            p.rmdir()

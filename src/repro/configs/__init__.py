@@ -1,0 +1,40 @@
+"""Architecture registry: ``get_config(name)`` + the shape grid."""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.models.config import ModelConfig
+
+ARCHS: List[str] = [
+    "gemma2_2b", "llama3_405b", "gemma2_27b", "gemma2_9b",
+    "qwen3_moe_235b_a22b", "deepseek_v2_236b", "whisper_small",
+    "chameleon_34b", "zamba2_2p7b", "rwkv6_3b",
+]
+
+# canonical dashed ids from the assignment -> module names
+ALIASES: Dict[str, str] = {
+    "gemma2-2b": "gemma2_2b", "llama3-405b": "llama3_405b",
+    "gemma2-27b": "gemma2_27b", "gemma2-9b": "gemma2_9b",
+    "qwen3-moe-235b-a22b": "qwen3_moe_235b_a22b",
+    "deepseek-v2-236b": "deepseek_v2_236b", "whisper-small": "whisper_small",
+    "chameleon-34b": "chameleon_34b", "zamba2-2.7b": "zamba2_2p7b",
+    "rwkv6-3b": "rwkv6_3b",
+}
+
+
+def _module(name: str):
+    mod = ALIASES.get(name, name.replace("-", "_").replace(".", "p"))
+    return importlib.import_module(f"repro.configs.{mod}")
+
+
+def get_config(name: str) -> ModelConfig:
+    return _module(name).CONFIG
+
+
+def get_reduced(name: str) -> ModelConfig:
+    return _module(name).reduced()
+
+
+def all_arch_ids() -> List[str]:
+    return list(ALIASES.keys())

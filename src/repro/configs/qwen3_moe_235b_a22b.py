@@ -1,0 +1,20 @@
+"""qwen3-moe-235b-a22b [moe] — 128 experts top-8, qk-norm [hf:Qwen/Qwen3-235B-A22B]."""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen3-moe-235b-a22b", family="moe",
+    n_layers=94, d_model=4096, n_heads=64, n_kv_heads=4, d_head=128,
+    d_ff=1536, vocab=151_936,
+    n_experts=128, top_k=8, moe_dff=1536,
+    qk_norm=True, rope_theta=1_000_000.0, tie_embeddings=False,
+    grad_accum=8,
+    opt_state_dtype="int8",  # 8-bit Adam moments (fp32 master kept)
+)
+
+
+def reduced() -> ModelConfig:
+    return CONFIG.replace(n_layers=4, d_model=64, n_heads=4, n_kv_heads=2,
+                          d_head=16, d_ff=96, vocab=512, n_experts=8, top_k=2,
+                          moe_dff=96, grad_accum=1,
+                          attn_block_q=32, attn_block_kv=32, xent_chunk=32,
+                          dtype="float32", remat=False)

@@ -1,0 +1,435 @@
+"""HLO-text analyzer: trip-count-aware FLOPs / HBM bytes / collective bytes.
+
+Why not ``compiled.cost_analysis()``: measured on this backend it (a) reports
+per-device numbers (fine) but (b) counts a ``while`` body ONCE, ignoring the
+trip count — and every model here drives its layers/microbatches through
+``lax.scan``.  This parser walks the computation call graph (ENTRY -> while
+bodies / calls / fusions / conditionals), multiplying by while trip counts
+(recovered from the loop-condition constant), and accumulates:
+
+* ``dot_flops``  — 2 * prod(result dims) * prod(contraction dims) per dot
+* ``hbm_bytes``  — operand + result bytes at fusion/op boundaries (a proxy
+  for HBM traffic; XLA:TPU fuses elementwise chains, so per-op results at
+  computation scope approximate fusion-boundary traffic)
+* ``collective_bytes`` by kind (all-reduce / all-gather / reduce-scatter /
+  all-to-all / collective-permute), operand bytes, with replica-group sizes
+  for ring-wire-byte refinement.
+
+All numbers are PER DEVICE: the compiled module is the SPMD per-device
+program.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+COLLECTIVE_KINDS = ("all-reduce", "all-gather", "reduce-scatter",
+                    "all-to-all", "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    """bytes of a (possibly tuple) HLO type string."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _shape_elems(type_str: str) -> int:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return 0
+    n = 1
+    for d in m.group(2).split(","):
+        if d:
+            n *= int(d)
+    return n
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    kind: str
+    type_str: str
+    operands: List[str]
+    attrs: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    ops: Dict[str, Op]
+    order: List[str]
+
+
+def _comp_header_name(stripped: str) -> Optional[str]:
+    """'%region_0.2 (arg: (s32[], f32[...])) -> ... {' -> 'region_0.2'."""
+    if not (stripped.endswith("{") and "->" in stripped):
+        return None
+    head = stripped.split("(", 1)[0].strip()
+    if head.startswith("ENTRY"):
+        head = head[len("ENTRY"):].strip()
+    head = head.lstrip("%").strip()
+    return head or None
+def _parse_op_line(line: str):
+    """Paren/comment-aware op parse: handles tuple types with /*index=N*/
+    comments (which contain '=' and defeat naive regexes)."""
+    s = line.strip()
+    if s.startswith("ROOT "):
+        s = s[5:]
+    eq = s.find(" = ")
+    if eq < 0 or not (s.startswith("%") or re.match(r"[\w.\-]+ =", s)):
+        return None
+    name = s[:eq].strip().lstrip("%")
+    rest = s[eq + 3:]
+    if rest.startswith("("):            # tuple type
+        depth = 0
+        end = 0
+        for i, ch in enumerate(rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        type_str = rest[:end + 1]
+        rest = rest[end + 1:].strip()
+    else:
+        sp = rest.find(" ")
+        if sp < 0:
+            return None
+        type_str = rest[:sp]
+        rest = rest[sp + 1:].strip()
+    par = rest.find("(")
+    if par < 0:
+        return None
+    kind = rest[:par].strip()
+    if not re.fullmatch(r"[\w\-]+", kind):
+        return None
+    depth = 0
+    end = len(rest) - 1
+    for i in range(par, len(rest)):
+        if rest[i] == "(":
+            depth += 1
+        elif rest[i] == ")":
+            depth -= 1
+            if depth == 0:
+                end = i
+                break
+    operands = rest[par + 1:end]
+    attrs = rest[end + 1:]
+    return name, type_str, kind, operands, attrs
+
+
+def parse_computations(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for line in text.splitlines():
+        stripped = line.strip()
+        if cur is None:
+            name = _comp_header_name(stripped)
+            if name:
+                cur = Computation(name, {}, [])
+            continue
+        if stripped.startswith("}"):
+            comps[cur.name] = cur
+            cur = None
+            continue
+        parsed = _parse_op_line(line)
+        if parsed is None:
+            continue
+        name, type_str, kind, operands, attrs = parsed
+        ops = [o.strip().lstrip("%").split(" ")[-1].lstrip("%")
+               for o in _split_operands(operands)]
+        cur.ops[name] = Op(name, kind, type_str.strip(), ops, attrs)
+        cur.order.append(name)
+    return comps
+
+
+def _split_operands(s: str) -> List[str]:
+    """Split top-level comma-separated operands (parens/braces aware)."""
+    out, depth, cur = [], 0, []
+    for ch in s:
+        if ch in "({[":
+            depth += 1
+        elif ch in ")}]":
+            depth -= 1
+        if ch == "," and depth == 0:
+            out.append("".join(cur))
+            cur = []
+        else:
+            cur.append(ch)
+    if cur:
+        out.append("".join(cur))
+    return [o.strip() for o in out if o.strip()]
+
+
+def _operand_bytes(comp: Computation, op: Op) -> int:
+    total = 0
+    for o in op.operands:
+        target = comp.ops.get(o)
+        if target is not None:
+            total += _shape_bytes(target.type_str)
+        else:
+            # parameter operands are written inline: "f32[8,16]{1,0} %param"
+            total += _shape_bytes(o)
+    return total
+
+
+def _trip_count(cond: Computation) -> int:
+    """Max integer constant in the loop condition (scan: lt(i, N))."""
+    best = 1
+    for op in cond.ops.values():
+        if op.kind == "constant":
+            m = re.search(r"constant\((\d+)\)", f"constant({op.operands[0]})"
+                          if op.operands else op.attrs)
+            if m:
+                best = max(best, int(m.group(1)))
+            else:
+                m2 = re.search(r"(\d+)", op.attrs)
+                if m2:
+                    best = max(best, int(m2.group(1)))
+    return best
+
+
+def _dot_flops(comp: Computation, op: Op) -> int:
+    out_elems = _shape_elems(op.type_str)
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.attrs)
+    if not m:
+        return 2 * out_elems
+    lhs_name = op.operands[0]
+    lhs = comp.ops.get(lhs_name)
+    lhs_type = lhs.type_str if lhs is not None else lhs_name
+    sm = _SHAPE_RE.search(lhs_type)
+    if not sm:
+        return 2 * out_elems
+    dims = [int(d) for d in sm.group(2).split(",") if d]
+    k = 1
+    for i in m.group(1).split(","):
+        if i:
+            k *= dims[int(i)]
+    return 2 * out_elems * k
+
+
+@dataclasses.dataclass
+class HLOCost:
+    dot_flops: float = 0.0
+    hbm_bytes: float = 0.0
+    collective_bytes: Dict[str, float] = dataclasses.field(default_factory=dict)
+    collective_counts: Dict[str, float] = dataclasses.field(default_factory=dict)
+    group_sizes: Dict[str, List[int]] = dataclasses.field(default_factory=dict)
+    dci_bytes: float = 0.0     # collectives whose groups cross the pod boundary
+
+    @property
+    def total_collective_bytes(self) -> float:
+        return sum(self.collective_bytes.values())
+
+    def add(self, other: "HLOCost", mult: float) -> None:
+        self.dot_flops += other.dot_flops * mult
+        self.hbm_bytes += other.hbm_bytes * mult
+        self.dci_bytes += other.dci_bytes * mult
+        for k, v in other.collective_bytes.items():
+            self.collective_bytes[k] = self.collective_bytes.get(k, 0.0) + v * mult
+        for k, v in other.collective_counts.items():
+            self.collective_counts[k] = (self.collective_counts.get(k, 0.0)
+                                         + v * mult)
+        for k, v in other.group_sizes.items():
+            self.group_sizes.setdefault(k, []).extend(v)
+
+
+_CALLED = re.compile(r"(?:calls|to_apply|body|condition)=%?([\w.\-]+)")
+_BRANCHES = re.compile(r"branch_computations=\{([^}]*)\}")
+_GROUPS = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_GROUPS_V2 = re.compile(
+    r"replica_groups=\[(\d+),(\d+)\]<=(\[[\d,]+\])(?:T\(([\d,]+)\))?")
+
+
+def _group_size(attrs: str) -> int:
+    m = _GROUPS.search(attrs)
+    if m:
+        return len(m.group(1).split(","))
+    m = _GROUPS_V2.search(attrs)  # [num_groups,group_size] iota form
+    if m:
+        return int(m.group(2))
+    return 0
+
+
+def _first_group(attrs: str):
+    """Device ids of the first replica group (exactly reconstructs the iota
+    form: transpose(reshape(iota, dims), perm).reshape(n_groups, size))."""
+    m = _GROUPS.search(attrs)
+    if m:
+        return [int(x) for x in m.group(1).split(",")]
+    m = _GROUPS_V2.search(attrs)
+    if m:
+        import numpy as _np
+        ng, size = int(m.group(1)), int(m.group(2))
+        dims = [int(x) for x in m.group(3).strip("[]").split(",")]
+        arr = _np.arange(int(_np.prod(dims))).reshape(dims)
+        if m.group(4):
+            perm = [int(x) for x in m.group(4).split(",")]
+            arr = arr.transpose(perm)
+        return arr.reshape(ng, size)[0].tolist()
+    return []
+
+
+_PAIRS = re.compile(r"source_target_pairs=\{\{(\d+),(\d+)\}")
+
+
+def _crosses_pod(attrs: str, pod_boundary: int) -> bool:
+    """Does the first replica group span devices on both sides of the pod
+    boundary (device ids are pod-major on the (pod, data, model) mesh)?
+    collective-permute carries source_target_pairs instead (a 2-pod
+    all-to-all lowers to a permute)."""
+    m = _PAIRS.search(attrs)
+    if m:
+        a, b = int(m.group(1)), int(m.group(2))
+        return (a < pod_boundary) != (b < pod_boundary)
+    g = _first_group(attrs)
+    if not g:
+        return False
+    return min(g) < pod_boundary <= max(g)
+
+
+_SKIP_HBM = {"parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+             "while", "conditional", "call", "after-all", "iota", "copy-start",
+             "copy-done"}
+
+# Fusion-boundary HBM model: on TPU, elementwise chains fuse into their
+# producers/consumers, so only these op kinds move HBM bytes.  The unfused
+# CPU module (which wraps every elementwise op in a kLoop fusion) would
+# otherwise claim ~10x the traffic a TPU program performs.  A `fusion` op
+# only counts if its computation contains a MAJOR op (dot/gather/scatter/...).
+_HBM_KINDS = {"dot", "convolution", "scatter", "gather",
+              "dynamic-slice", "dynamic-update-slice", "copy", "concatenate",
+              "custom-call", "sort", "cholesky", "triangular-solve"}
+_MAJOR_IN_FUSION = {"dot", "convolution", "scatter", "gather",
+                    "dynamic-slice", "dynamic-update-slice", "concatenate",
+                    "sort"}
+
+
+def analyze_hlo(text: str, pod_boundary: int = 0) -> HLOCost:
+    """pod_boundary: device-id threshold between pods (256 for the 2x16x16
+    mesh); 0 disables DCI attribution."""
+    comps = parse_computations(text)
+    entry = None
+    for line in text.splitlines():
+        if line.strip().startswith("ENTRY"):
+            entry = _comp_header_name(line.strip())
+    if entry is None or entry not in comps:
+        # fall back to the computation named main*
+        entry = next((n for n in comps if n.startswith("main")), None)
+        if entry is None:
+            raise ValueError("no ENTRY computation found")
+
+    has_major: Dict[str, bool] = {
+        name: any(op.kind in _MAJOR_IN_FUSION for op in comp.ops.values())
+        for name, comp in comps.items()}
+
+    local: Dict[str, HLOCost] = {}
+    edges: Dict[str, List[Tuple[str, float]]] = {}
+    for name, comp in comps.items():
+        cost = HLOCost()
+        edge: List[Tuple[str, float]] = []
+        for op in comp.ops.values():
+            if op.kind in ("dot", "convolution"):
+                cost.dot_flops += _dot_flops(comp, op)
+            base_kind = op.kind.replace("-start", "")
+            if op.kind.endswith("-done"):
+                continue
+            if base_kind in COLLECTIVE_KINDS:
+                b = _operand_bytes(comp, op)
+                cost.collective_bytes[base_kind] = (
+                    cost.collective_bytes.get(base_kind, 0.0) + b)
+                cost.collective_counts[base_kind] = (
+                    cost.collective_counts.get(base_kind, 0.0) + 1)
+                g = _group_size(op.attrs)
+                if g:
+                    cost.group_sizes.setdefault(base_kind, []).append(g)
+                if pod_boundary and _crosses_pod(op.attrs, pod_boundary):
+                    cost.dci_bytes += b
+            # HBM model: count each counted op's RESULT bytes (the write; the
+            # consumer's read of it is folded into a 2x at the end), plus dot
+            # operand bytes explicitly (weight/activation reads at the MXU
+            # boundary, incl. per-layer weight re-reads inside scans).
+            count_hbm = op.kind in _HBM_KINDS
+            if op.kind == "fusion":
+                m = re.search(r"calls=%?([\w.\-]+)", op.attrs)
+                count_hbm = bool(m and has_major.get(m.group(1), False))
+            if count_hbm:
+                cost.hbm_bytes += _shape_bytes(op.type_str)
+                if op.kind in ("dot", "convolution"):
+                    cost.hbm_bytes += _operand_bytes(comp, op)
+            if op.kind == "while":
+                bm = re.search(r"body=%?([\w.\-]+)", op.attrs)
+                cm = re.search(r"condition=%?([\w.\-]+)", op.attrs)
+                if bm and cm and bm.group(1) in comps:
+                    km = re.search(r'known_trip_count[":{\s]+n[":\s]+"?(\d+)',
+                                   op.attrs)
+                    trips = (int(km.group(1)) if km
+                             else _trip_count(comps[cm.group(1)]))
+                    edge.append((bm.group(1), float(trips)))
+                    edge.append((cm.group(1), float(trips)))
+            elif op.kind == "conditional":
+                bm = _BRANCHES.search(op.attrs)
+                if bm:
+                    for b in bm.group(1).split(","):
+                        edge.append((b.strip().lstrip("%"), 1.0))
+                for key in ("true_computation", "false_computation"):
+                    m = re.search(rf"{key}=%?([\w.\-]+)", op.attrs)
+                    if m:
+                        edge.append((m.group(1), 1.0))
+            else:
+                m = re.search(r"(?:calls|to_apply)=%?([\w.\-]+)", op.attrs)
+                if m and m.group(1) in comps:
+                    # fusions: dots inside count; bytes counted at call site
+                    edge.append((m.group(1), 1.0))
+        local[name] = cost
+        edges[name] = edge
+
+    total = HLOCost()
+    _visited_guard = set()
+
+    def visit(name: str, mult: float, stack: Tuple[str, ...]) -> None:
+        if name in stack or name not in local:   # cycles impossible, be safe
+            return
+        total.add(_strip_fusion_bytes(local[name], name), mult)
+        for child, m in edges[name]:
+            child_mult = mult * m
+            if _is_fusion_comp(child):
+                # fused computations: count flops but not per-op bytes
+                fcost = local.get(child)
+                if fcost:
+                    fc = HLOCost(dot_flops=fcost.dot_flops)
+                    total.add(fc, child_mult)
+            else:
+                visit(child, child_mult, stack + (name,))
+
+    def _is_fusion_comp(name: str) -> bool:
+        return "fused_computation" in name or name.startswith("fused.")
+
+    def _strip_fusion_bytes(cost: HLOCost, name: str) -> HLOCost:
+        return cost
+
+    visit(entry, 1.0, ())
+    return total
+
+
+def analyze_compiled(compiled) -> HLOCost:
+    return analyze_hlo(compiled.as_text())

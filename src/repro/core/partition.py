@@ -1,0 +1,173 @@
+"""Row partitions of an N x N system across n_p ranks (Sec. 2, Eq. 2; Sec. 5).
+
+Three partition kinds from the paper's experiments:
+
+* ``contiguous`` — Eq. (2): rank r owns rows [floor(N/np)*r, floor(N/np)*(r+1))
+  (the remainder rows are spread over the first ranks so every row is owned).
+* ``strided``    — Sec. 5 SuiteSparse tests: row r lives on process r mod n_p.
+* ``balanced``   — graph-partitioned surrogate for PT-Scotch: recursive
+  min-degree-cut bisection over the matrix adjacency graph (offline stand-in;
+  real deployments plug ParMETIS/PT-Scotch through the same interface).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class RowPartition:
+    """Ownership map of N global rows over n_p ranks.
+
+    ``owner[i]``  — rank owning global row i.
+    ``perm``      — global rows sorted by (owner, row): the *local* storage
+                    order. ``perm[first[r]:first[r+1]]`` are rank r's rows.
+    ``first``     — CSR-style offsets into ``perm`` per rank (len n_p + 1).
+    """
+
+    n_rows: int
+    n_procs: int
+    owner: np.ndarray
+    perm: np.ndarray
+    first: np.ndarray
+    kind: str = "contiguous"
+
+    def rows_of(self, rank: int) -> np.ndarray:
+        """R(r): global rows stored on ``rank`` (ascending)."""
+        return self.perm[self.first[rank] : self.first[rank + 1]]
+
+    def counts(self) -> np.ndarray:
+        return np.diff(self.first)
+
+    def local_index(self) -> np.ndarray:
+        """global row -> index within its owner's local block."""
+        loc = np.empty(self.n_rows, dtype=np.int64)
+        for r in range(self.n_procs):
+            rows = self.rows_of(r)
+            loc[rows] = np.arange(rows.size)
+        return loc
+
+    def validate(self) -> None:
+        assert self.owner.shape == (self.n_rows,)
+        assert self.first.shape == (self.n_procs + 1,)
+        assert self.first[0] == 0 and self.first[-1] == self.n_rows
+        got = np.sort(self.perm)
+        assert np.array_equal(got, np.arange(self.n_rows)), "perm must be a permutation"
+        assert np.array_equal(self.owner[self.perm], np.repeat(np.arange(self.n_procs), self.counts()))
+
+
+def _from_owner(owner: np.ndarray, n_procs: int, kind: str) -> RowPartition:
+    n_rows = owner.shape[0]
+    perm = np.argsort(owner, kind="stable").astype(np.int64)
+    counts = np.bincount(owner, minlength=n_procs)
+    first = np.concatenate([[0], np.cumsum(counts)]).astype(np.int64)
+    part = RowPartition(n_rows=n_rows, n_procs=n_procs, owner=owner.astype(np.int64),
+                        perm=perm, first=first, kind=kind)
+    part.validate()
+    return part
+
+
+def contiguous_partition(n_rows: int, n_procs: int) -> RowPartition:
+    """Eq. (2) with remainder rows distributed over the leading ranks."""
+    base, extra = divmod(n_rows, n_procs)
+    counts = np.full(n_procs, base, dtype=np.int64)
+    counts[:extra] += 1
+    owner = np.repeat(np.arange(n_procs), counts)
+    return _from_owner(owner, n_procs, "contiguous")
+
+
+def strided_partition(n_rows: int, n_procs: int) -> RowPartition:
+    """Sec. 5: row r on process r mod n_p."""
+    owner = np.arange(n_rows, dtype=np.int64) % n_procs
+    return _from_owner(owner, n_procs, "strided")
+
+
+def balanced_partition(indptr: np.ndarray, indices: np.ndarray, n_procs: int,
+                       seed: int = 0, max_iters: int = 8) -> RowPartition:
+    """Greedy KL-flavoured recursive bisection (PT-Scotch stand-in).
+
+    Splits the row set in halves minimising cut edges, recursively, until
+    n_procs parts exist (n_procs must be a power of two for the recursion;
+    otherwise falls back to contiguous on the remainder split).
+    """
+    n_rows = len(indptr) - 1
+    rng = np.random.default_rng(seed)
+    owner = np.zeros(n_rows, dtype=np.int64)
+
+    def bisect(rows: np.ndarray, lo: int, hi: int) -> None:
+        nparts = hi - lo
+        if nparts == 1 or rows.size == 0:
+            owner[rows] = lo
+            return
+        half = nparts // 2
+        target_left = rows.size * half // nparts
+        # BFS growth from a peripheral seed gives a contiguous-ish half.
+        in_set = np.zeros(n_rows, dtype=bool)
+        in_set[rows] = True
+        side = np.full(n_rows, -1, dtype=np.int8)  # 0 = left, 1 = right
+        start = rows[rng.integers(rows.size)]
+        frontier = [start]
+        side[rows] = 1
+        taken = 0
+        seen = np.zeros(n_rows, dtype=bool)
+        seen[start] = True
+        while frontier and taken < target_left:
+            nxt = []
+            for u in frontier:
+                if taken >= target_left:
+                    break
+                side[u] = 0
+                taken += 1
+                for v in indices[indptr[u] : indptr[u + 1]]:
+                    if in_set[v] and not seen[v]:
+                        seen[v] = True
+                        nxt.append(v)
+            frontier = nxt
+        if taken < target_left:  # disconnected: top up arbitrarily
+            rest = rows[side[rows] == 1]
+            need = target_left - taken
+            side[rest[:need]] = 0
+        # one pass of boundary refinement (move vertices that reduce cut, keep balance)
+        for _ in range(max_iters):
+            moved = 0
+            for u in rows:
+                s = side[u]
+                nbr = indices[indptr[u] : indptr[u + 1]]
+                nbr = nbr[in_set[nbr]]
+                if nbr.size == 0:
+                    continue
+                same = int(np.sum(side[nbr] == s))
+                other = nbr.size - same
+                if other > same:
+                    cnt_left = int(np.sum(side[rows] == 0))
+                    if s == 0 and cnt_left - 1 >= target_left - rows.size // (4 * nparts):
+                        side[u] = 1
+                        moved += 1
+                    elif s == 1 and cnt_left + 1 <= target_left + rows.size // (4 * nparts):
+                        side[u] = 0
+                        moved += 1
+            if moved == 0:
+                break
+        left = rows[side[rows] == 0]
+        right = rows[side[rows] == 1]
+        bisect(left, lo, lo + half)
+        bisect(right, lo + half, hi)
+
+    bisect(np.arange(n_rows, dtype=np.int64), 0, n_procs)
+    return _from_owner(owner, n_procs, "balanced")
+
+
+def make_partition(kind: str, n_rows: int, n_procs: int,
+                   indptr: Optional[np.ndarray] = None,
+                   indices: Optional[np.ndarray] = None, seed: int = 0) -> RowPartition:
+    if kind == "contiguous":
+        return contiguous_partition(n_rows, n_procs)
+    if kind == "strided":
+        return strided_partition(n_rows, n_procs)
+    if kind == "balanced":
+        if indptr is None or indices is None:
+            raise ValueError("balanced partition needs the matrix structure")
+        return balanced_partition(indptr, indices, n_procs, seed=seed)
+    raise ValueError(f"unknown partition kind {kind!r}")

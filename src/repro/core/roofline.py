@@ -1,0 +1,127 @@
+"""Three-term roofline from the compiled dry-run artifact (TPU v5e target).
+
+    compute term    = HLO_FLOPs_per_chip / peak_FLOPs
+    memory term     = HLO_bytes_per_chip / HBM_bw
+    collective term = collective_bytes_per_chip / link_bw
+
+The per-chip numbers come straight from the SPMD per-device module via
+:mod:`hlo_analysis` (trip-count aware — ``cost_analysis`` is not).  The
+dominant term is the bottleneck; its value is the modeled step time, and
+MODEL_FLOPS / (chips * peak * step_time) is the modeled MFU.
+
+Hardware constants (assignment): 197 TFLOP/s bf16 per chip, 819 GB/s HBM,
+~50 GB/s/link ICI.  ``collective term`` follows the assignment formula
+(operand bytes over one link's bandwidth); the ``wire`` refinement scales
+ring collectives by 2(g-1)/g (all-reduce) or (g-1)/g (gather/scatter) over
+the per-chip aggregate ICI bandwidth (v5e: 4 links usable per chip on a 2D
+torus axis pair).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+from repro.core.hlo_analysis import HLOCost
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes / s / chip
+LINK_BW = 50e9               # bytes / s / ICI link
+LINKS_PER_CHIP = 4           # usable concurrently on a v5e 2D torus
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    # raw per-chip quantities
+    flops: float
+    hbm_bytes: float
+    collective_bytes: float
+    collective_by_kind: Dict[str, float]
+    # terms (seconds)
+    t_compute: float
+    t_memory: float
+    t_collective: float
+    t_collective_wire: float
+    model_flops: float          # 6 * N(_active) * D tokens, GLOBAL
+    useful_ratio: float         # MODEL_FLOPS / (flops * chips)
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time(self) -> float:
+        """No-overlap upper bound is sum; perfectly-overlapped bound is max.
+        We report max (the roofline) — iteration drives the max down."""
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def mfu(self) -> float:
+        """Modeled model-FLOPs utilisation at the roofline step time."""
+        t = self.step_time
+        if t == 0:
+            return 0.0
+        return self.model_flops / (self.chips * PEAK_FLOPS * t)
+
+    @property
+    def hardware_util(self) -> float:
+        """Fraction of peak the dominant resource reaches if all three terms
+        ran at their roofline speed (1.0 = dominant term saturates)."""
+        t = self.step_time
+        return self.t_compute / t if t else 0.0
+
+    def row(self) -> str:
+        return (f"| {self.arch} | {self.shape} | {self.mesh} | "
+                f"{self.t_compute*1e3:9.2f} | {self.t_memory*1e3:9.2f} | "
+                f"{self.t_collective*1e3:9.2f} | {self.dominant:10s} | "
+                f"{self.model_flops:.3e} | {self.useful_ratio:5.2f} | "
+                f"{self.mfu*100:5.1f}% |")
+
+
+HEADER = ("| arch | shape | mesh | compute ms | memory ms | collective ms | "
+          "dominant | MODEL_FLOPS | useful | MFU |\n"
+          "|---|---|---|---|---|---|---|---|---|---|")
+
+
+def _wire_factor(kind: str, group: float) -> float:
+    if group <= 1:
+        return 0.0
+    if kind == "all-reduce":
+        return 2.0 * (group - 1) / group
+    if kind in ("all-gather", "reduce-scatter", "all-to-all"):
+        return (group - 1) / group
+    return 1.0  # collective-permute
+
+
+def build_roofline(arch: str, shape: str, mesh_name: str, chips: int,
+                   cost: HLOCost, model_flops: float) -> Roofline:
+    coll = cost.total_collective_bytes
+    wire = 0.0
+    for kind, b in cost.collective_bytes.items():
+        sizes = cost.group_sizes.get(kind, [])
+        g = (sum(sizes) / len(sizes)) if sizes else chips
+        wire += b * _wire_factor(kind, g)
+    flops = cost.dot_flops
+    global_flops = flops * chips
+    return Roofline(
+        arch=arch, shape=shape, mesh=mesh_name, chips=chips,
+        flops=flops, hbm_bytes=cost.hbm_bytes, collective_bytes=coll,
+        collective_by_kind=dict(cost.collective_bytes),
+        t_compute=flops / PEAK_FLOPS,
+        t_memory=cost.hbm_bytes / HBM_BW,
+        t_collective=coll / LINK_BW,
+        t_collective_wire=wire / (LINK_BW * LINKS_PER_CHIP),
+        model_flops=model_flops,
+        useful_ratio=(model_flops / global_flops) if global_flops else 0.0,
+    )
+
+
+def model_flops_for(kind: str, n_active_params: int, tokens: int) -> float:
+    """MODEL_FLOPS: 6*N*D for training; 2*N*D for inference (fwd only)."""
+    factor = 6.0 if kind == "train" else 2.0
+    return factor * n_active_params * tokens

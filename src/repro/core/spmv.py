@@ -1,0 +1,237 @@
+"""Distributed SpMV executors: Algorithm 1 (standard) and Algorithms 2+3 (NAP).
+
+Two executors share the comm plans of :mod:`repro.core.comm_graph`:
+
+* a **numpy message-passing simulator** with exact MPI semantics — each rank
+  touches only values it owns or that arrived in a message; the set of
+  messages is the plan itself.  This is the correctness oracle and the
+  source of the per-phase message statistics (Figs. 8–10).
+* a **JAX SPMD executor** (:mod:`repro.core.spmv_jax`) that lowers the same
+  plan to ``shard_map`` + ``all_to_all`` with static padded index maps.
+
+The local compute mirrors Algorithm 3's three ``local_spmv`` calls: each
+rank's rows are split into on-process / on-node / off-node *column* blocks
+(Eqs. 4–7), and each block multiplies against its own buffer.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.comm_graph import (Message, NAPPlan, StandardPlan,
+                                   build_nap_plan, build_standard_plan)
+from repro.core.partition import RowPartition
+from repro.core.topology import Topology
+from repro.sparse.csr import CSR
+
+
+# ---------------------------------------------------------------------------
+# Local block splitting (Eqs. 4-7)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class LocalBlocks:
+    """Rank-local matrix split by column class, with buffer-slot column maps."""
+
+    rank: int
+    rows: np.ndarray                 # global rows R(r), ascending
+    on_proc: CSR                     # cols -> local row index of owner (== this rank)
+    on_node: CSR                     # cols -> slot in the on-node buffer
+    off_node: CSR                    # cols -> slot in the off-node buffer
+    on_node_cols: np.ndarray         # global col ids, buffer order (ascending)
+    off_node_cols: np.ndarray
+
+
+def split_local_blocks(a: CSR, part: RowPartition, topo: Topology, rank: int) -> LocalBlocks:
+    rows = part.rows_of(rank)
+    local = a.select_rows(rows)
+    g_rows, g_cols, vals = local.to_coo()  # g_rows are positions within `rows`
+    col_owner = part.owner[g_cols]
+    col_node = topo.node_of_array(col_owner)
+    me_node = topo.node_of(rank)
+
+    on_proc_m = col_owner == rank
+    on_node_m = (col_owner != rank) & (col_node == me_node)
+    off_node_m = col_node != me_node
+
+    # on-process: remap columns to local index within R(r)
+    glob_to_loc = {int(g): i for i, g in enumerate(rows)}
+    op_cols = np.array([glob_to_loc[int(c)] for c in g_cols[on_proc_m]], dtype=np.int64)
+    on_proc = CSR.from_coo(g_rows[on_proc_m], op_cols, vals[on_proc_m],
+                           (rows.size, rows.size), sum_duplicates=False)
+
+    def buffer_block(mask: np.ndarray) -> Tuple[CSR, np.ndarray]:
+        cols = np.unique(g_cols[mask])
+        slot = {int(c): i for i, c in enumerate(cols)}
+        bc = np.array([slot[int(c)] for c in g_cols[mask]], dtype=np.int64)
+        blk = CSR.from_coo(g_rows[mask], bc, vals[mask],
+                           (rows.size, max(int(cols.size), 1)), sum_duplicates=False)
+        return blk, cols
+
+    on_node, on_node_cols = buffer_block(on_node_m)
+    off_node, off_node_cols = buffer_block(off_node_m)
+    return LocalBlocks(rank=rank, rows=rows, on_proc=on_proc, on_node=on_node,
+                       off_node=off_node, on_node_cols=on_node_cols,
+                       off_node_cols=off_node_cols)
+
+
+def split_all_blocks(a: CSR, part: RowPartition, topo: Topology) -> List[LocalBlocks]:
+    return [split_local_blocks(a, part, topo, r) for r in range(topo.n_procs)]
+
+
+# ---------------------------------------------------------------------------
+# Message-passing simulation
+# ---------------------------------------------------------------------------
+
+class _MailBox:
+    """Delivers plan messages; each value fetched from the *sender's* state."""
+
+    def __init__(self) -> None:
+        self.store: Dict[Tuple[int, int, int], np.ndarray] = {}
+
+    def post(self, msg: Message, values: np.ndarray) -> None:
+        assert values.shape == msg.idx.shape
+        self.store[(msg.src, msg.dst, int(msg.idx[0]) if msg.size else -1)] = values
+
+    def fetch(self, msg: Message) -> np.ndarray:
+        return self.store[(msg.src, msg.dst, int(msg.idx[0]) if msg.size else -1)]
+
+
+def _gather_from(available: Dict[int, float], idx: np.ndarray) -> np.ndarray:
+    missing = [int(j) for j in idx if int(j) not in available]
+    if missing:
+        raise AssertionError(f"rank accessed values it never received: {missing[:8]}")
+    return np.array([available[int(j)] for j in idx], dtype=np.float64)
+
+
+def simulate_standard_spmv(a: CSR, v: np.ndarray, plan: StandardPlan) -> np.ndarray:
+    """Algorithm 1 with explicit message passing (numpy)."""
+    part, topo = plan.partition, plan.topology
+    blocks = split_all_blocks(a, part, topo)
+    w = np.zeros(a.shape[0])
+    # post all sends (Isend)
+    box = _MailBox()
+    for r in range(topo.n_procs):
+        mine = {int(j): float(v[j]) for j in part.rows_of(r)}
+        for msg in plan.sends[r]:
+            box.post(msg, _gather_from(mine, msg.idx))
+    # receive + compute
+    for r in range(topo.n_procs):
+        blk = blocks[r]
+        mine = {int(j): float(v[j]) for j in blk.rows}
+        w_local = blk.on_proc.matvec(np.array([mine[int(j)] for j in blk.rows]))
+        recvd: Dict[int, float] = {}
+        for msg in plan.recvs[r]:
+            for jj, val in zip(msg.idx, box.fetch(msg)):
+                recvd[int(jj)] = float(val)
+        # standard algorithm has ONE off-process buffer (on-node ∪ off-node)
+        b_node = _gather_from(recvd, blk.on_node_cols)
+        b_off = _gather_from(recvd, blk.off_node_cols)
+        if blk.on_node_cols.size:
+            w_local = w_local + blk.on_node.matvec(b_node)
+        if blk.off_node_cols.size:
+            w_local = w_local + blk.off_node.matvec(b_off)
+        w[blk.rows] = w_local
+    return w
+
+
+def simulate_nap_spmv(a: CSR, v: np.ndarray, plan: NAPPlan) -> np.ndarray:
+    """Algorithms 2+3 with explicit per-phase message passing (numpy).
+
+    Phase order follows Algorithm 3: local full + local init first, then
+    inter-node Isend, local SpMVs overlap, then the final local scatter.
+    """
+    part, topo = plan.partition, plan.topology
+    blocks = split_all_blocks(a, part, topo)
+    w = np.zeros(a.shape[0])
+
+    owned = [{int(j): float(v[j]) for j in part.rows_of(r)} for r in range(topo.n_procs)]
+
+    # -- phase A: fully-local exchange (on_node -> on_node) ------------------
+    box_full = _MailBox()
+    for r in range(topo.n_procs):
+        for msg in plan.local_full_sends[r]:
+            assert topo.same_node(msg.src, msg.dst), "full-local must stay on node"
+            box_full.post(msg, _gather_from(owned[r], msg.idx))
+
+    # -- phase B: local init redistribution (on_node -> off_node) ------------
+    box_init = _MailBox()
+    for r in range(topo.n_procs):
+        for msg in plan.local_init_sends[r]:
+            assert topo.same_node(msg.src, msg.dst), "init redistribution stays on node"
+            box_init.post(msg, _gather_from(owned[r], msg.idx))
+    staged = [dict(owned[r]) for r in range(topo.n_procs)]
+    for r in range(topo.n_procs):
+        for msg in plan.local_init_recvs[r]:
+            for jj, val in zip(msg.idx, box_init.fetch(msg)):
+                staged[r][int(jj)] = float(val)
+
+    # -- phase C: inter-node exchange (the only network injection) -----------
+    box_inter = _MailBox()
+    for r in range(topo.n_procs):
+        for msg in plan.inter_sends[r]:
+            assert not topo.same_node(msg.src, msg.dst), "inter phase crosses nodes"
+            box_inter.post(msg, _gather_from(staged[r], msg.idx))
+    arrived = [dict() for _ in range(topo.n_procs)]  # type: List[Dict[int, float]]
+    for r in range(topo.n_procs):
+        for msg in plan.inter_recvs[r]:
+            for jj, val in zip(msg.idx, box_inter.fetch(msg)):
+                arrived[r][int(jj)] = float(val)
+
+    # -- phase D: local final scatter (off_node -> on_node) ------------------
+    box_final = _MailBox()
+    for r in range(topo.n_procs):
+        for msg in plan.local_final_sends[r]:
+            assert topo.same_node(msg.src, msg.dst)
+            box_final.post(msg, _gather_from(arrived[r], msg.idx))
+    for r in range(topo.n_procs):
+        for msg in plan.local_final_recvs[r]:
+            for jj, val in zip(msg.idx, box_final.fetch(msg)):
+                arrived[r][int(jj)] = float(val)
+
+    # -- compute: the three local_spmv calls of Algorithm 3 ------------------
+    for r in range(topo.n_procs):
+        blk = blocks[r]
+        w_local = blk.on_proc.matvec(np.array([owned[r][int(j)] for j in blk.rows])
+                                     if blk.rows.size else np.zeros(0))
+        if blk.on_node_cols.size:
+            b_ll: Dict[int, float] = {}
+            for msg in plan.local_full_recvs[r]:
+                for jj, val in zip(msg.idx, box_full.fetch(msg)):
+                    b_ll[int(jj)] = float(val)
+            w_local = w_local + blk.on_node.matvec(_gather_from(b_ll, blk.on_node_cols))
+        if blk.off_node_cols.size:
+            w_local = w_local + blk.off_node.matvec(_gather_from(arrived[r], blk.off_node_cols))
+        w[blk.rows] = w_local
+    return w
+
+
+# ---------------------------------------------------------------------------
+# Convenience wrapper
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class DistSpMV:
+    """A distributed SpMV problem: matrix + layout + both plans."""
+
+    a: CSR
+    partition: RowPartition
+    topology: Topology
+    standard: StandardPlan
+    nap: NAPPlan
+
+    @staticmethod
+    def build(a: CSR, part: RowPartition, topo: Topology,
+              pairing: str = "balanced") -> "DistSpMV":
+        std = build_standard_plan(a.indptr, a.indices, part, topo)
+        nap = build_nap_plan(a.indptr, a.indices, part, topo, pairing=pairing)
+        return DistSpMV(a=a, partition=part, topology=topo, standard=std, nap=nap)
+
+    def run(self, v: np.ndarray, algorithm: str = "nap") -> np.ndarray:
+        if algorithm == "standard":
+            return simulate_standard_spmv(self.a, v, self.standard)
+        if algorithm == "nap":
+            return simulate_nap_spmv(self.a, v, self.nap)
+        raise ValueError(algorithm)

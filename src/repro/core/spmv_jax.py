@@ -1,0 +1,384 @@
+"""SPMD (shard_map) executors for the distributed SpMV on a device mesh.
+
+XLA programs are static-SPMD, so the comm plans of :mod:`comm_graph` are
+*compiled* into padded gather maps + collectives, once, at plan-build time
+(exactly where the paper's MPI implementation builds its send lists):
+
+* ``standard``  — Algorithm 1: one padded all-to-all over the **flat** rank
+  axis (every rank pair may exchange), i.e. topology-oblivious.
+* ``allgather`` — the dense-JAX baseline: replicate v everywhere.
+* ``nap``       — Algorithms 2+3 with ``pairing="aligned"``: intra-node
+  all-to-all (proc axis) → **one aggregated inter-node all-to-all (node
+  axis)** → intra-node all-to-all.  Only the middle step crosses pods.
+
+Mesh convention: ``("node", "proc")`` with shape ``(n_nodes, ppn)`` — on a
+real fleet "node" is the pod/DCI axis and "proc" the intra-pod ICI axis.
+
+Padding note: all per-rank buffers are padded to the max over ranks; the
+paper's T/U load balancing minimises exactly this padding.  Effective vs
+padded bytes are both reported by :func:`padded_traffic`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.ops import segment_sum
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+from repro.core.comm_graph import Message, NAPPlan, StandardPlan, build_nap_plan, build_standard_plan
+from repro.core.partition import RowPartition
+from repro.core.spmv import LocalBlocks, split_all_blocks
+from repro.core.topology import Topology
+from repro.sparse.csr import CSR
+
+
+def _pad_to(arrs: List[np.ndarray], pad: int, fill: float = 0) -> np.ndarray:
+    out = np.full((len(arrs), pad), fill, dtype=arrs[0].dtype if arrs else np.int64)
+    for i, a in enumerate(arrs):
+        out[i, : a.size] = a
+    return out
+
+
+def _msg_by_dst(msgs: List[Message]) -> Dict[int, Message]:
+    return {m.dst: m for m in msgs}
+
+
+def _msg_by_src(msgs: List[Message]) -> Dict[int, Message]:
+    return {m.src: m for m in msgs}
+
+
+def _pos_in(idx: np.ndarray, j: int) -> int:
+    p = int(np.searchsorted(idx, j))
+    assert p < idx.size and idx[p] == j
+    return p
+
+
+@dataclasses.dataclass
+class CompiledNAP:
+    """Static arrays for the shard_map NAPSpMV, stacked over ranks."""
+
+    topo: Topology
+    part: RowPartition
+    rows_pad: int
+    pads: Dict[str, int]          # full/init/inter/final/bnode/boff/nnz pads
+    arrays: Dict[str, np.ndarray]  # stacked [n_procs, ...] index/value arrays
+
+    def device_arrays(self) -> Dict[str, np.ndarray]:
+        """Reshape the leading rank dim to (n_nodes, ppn) for mesh sharding."""
+        nn, ppn = self.topo.n_nodes, self.topo.ppn
+        return {k: v.reshape((nn, ppn) + v.shape[1:]) for k, v in self.arrays.items()}
+
+
+def compile_nap(a: CSR, part: RowPartition, topo: Topology,
+                plan: Optional[NAPPlan] = None) -> CompiledNAP:
+    if plan is None:
+        plan = build_nap_plan(a.indptr, a.indices, part, topo, pairing="aligned")
+    n_procs, ppn, n_nodes = topo.n_procs, topo.ppn, topo.n_nodes
+    blocks = split_all_blocks(a, part, topo)
+    local_index = part.local_index()
+    rows_pad = max(1, int(part.counts().max()))
+
+    def msg_pad(phase: List[List[Message]]) -> int:
+        sizes = [m.size for msgs in phase for m in msgs]
+        return max(1, max(sizes, default=1))
+
+    full_pad = msg_pad(plan.local_full_sends)
+    init_pad = msg_pad(plan.local_init_sends)
+    inter_pad = msg_pad(plan.inter_sends)
+    final_pad = msg_pad(plan.local_final_sends)
+    bnode_pad = max(1, max(b.on_node_cols.size for b in blocks))
+    boff_pad = max(1, max(b.off_node_cols.size for b in blocks))
+    nnz_pads = {
+        "on_proc": max(1, max(b.on_proc.nnz for b in blocks)),
+        "on_node": max(1, max(b.on_node.nnz for b in blocks)),
+        "off_node": max(1, max(b.off_node.nnz for b in blocks)),
+    }
+
+    A: Dict[str, List[np.ndarray]] = {k: [] for k in (
+        "v_loc_init",  # not an index array; filled by caller
+    )}
+    arrays: Dict[str, np.ndarray] = {}
+
+    def stack_int(name: str, per_rank: List[np.ndarray], shape: Tuple[int, ...]) -> None:
+        out = np.zeros((n_procs,) + shape, dtype=np.int32)
+        for r, arr in enumerate(per_rank):
+            out[r] = arr
+        arrays[name] = out
+
+    full_send, init_send, final_send = [], [], []
+    inter_gather, bnode_gather, boff_gather = [], [], []
+    coo = {k: {"rows": [], "cols": [], "vals": []} for k in nnz_pads}
+
+    for r in range(n_procs):
+        p_r, n_r = topo.proc_node(r)
+        blk = blocks[r]
+
+        # -- full-local sends: [ppn, full_pad] source local-row positions ----
+        fs = np.zeros((ppn, full_pad), dtype=np.int32)
+        for m in plan.local_full_sends[r]:
+            q = topo.local_of(m.dst)
+            fs[q, : m.size] = local_index[m.idx]
+        full_send.append(fs)
+
+        # -- init sends -------------------------------------------------------
+        isnd = np.zeros((ppn, init_pad), dtype=np.int32)
+        for m in plan.local_init_sends[r]:
+            q = topo.local_of(m.dst)
+            isnd[q, : m.size] = local_index[m.idx]
+        init_send.append(isnd)
+
+        # -- inter gather: positions into concat(v_loc, init_recv_flat) -------
+        init_recv_by_src = {topo.local_of(m.src): m for m in plan.local_init_recvs[r]}
+        ig = np.zeros((n_nodes, inter_pad), dtype=np.int32)
+        for m in plan.inter_sends[r]:
+            dst_node = topo.node_of(m.dst)
+            for k, j in enumerate(m.idx):
+                if part.owner[j] == r:
+                    ig[dst_node, k] = local_index[j]
+                else:
+                    src_p = topo.local_of(int(part.owner[j]))
+                    msg = init_recv_by_src[src_p]
+                    ig[dst_node, k] = rows_pad + src_p * init_pad + _pos_in(msg.idx, int(j))
+        inter_gather.append(ig)
+
+        # -- final sends: positions into inter_recv_flat ----------------------
+        inter_recv_by_node = {topo.node_of(m.src): m for m in plan.inter_recvs[r]}
+        fsnd = np.zeros((ppn, final_pad), dtype=np.int32)
+        for m in plan.local_final_sends[r]:
+            q = topo.local_of(m.dst)
+            for k, j in enumerate(m.idx):
+                src_n = None
+                for nn, rmsg in inter_recv_by_node.items():
+                    hit = np.searchsorted(rmsg.idx, j)
+                    if hit < rmsg.idx.size and rmsg.idx[hit] == j:
+                        src_n = nn
+                        fsnd[q, k] = nn * inter_pad + hit
+                        break
+                assert src_n is not None, "final-send value must have arrived inter-node"
+        final_send.append(fsnd)
+
+        # -- on-node buffer gather: positions into full_recv_flat -------------
+        full_recv_by_src = {topo.local_of(m.src): m for m in plan.local_full_recvs[r]}
+        bg = np.zeros((bnode_pad,), dtype=np.int32)
+        for slot, j in enumerate(blk.on_node_cols):
+            src_p = topo.local_of(int(part.owner[j]))
+            msg = full_recv_by_src[src_p]
+            bg[slot] = src_p * full_pad + _pos_in(msg.idx, int(j))
+        bnode_gather.append(bg)
+
+        # -- off-node buffer gather: concat(inter_recv_flat, final_recv_flat) -
+        final_recv_by_src = {topo.local_of(m.src): m for m in plan.local_final_recvs[r]}
+        og = np.zeros((boff_pad,), dtype=np.int32)
+        for slot, j in enumerate(blk.off_node_cols):
+            placed = False
+            for nn, rmsg in inter_recv_by_node.items():
+                hit = np.searchsorted(rmsg.idx, j)
+                if hit < rmsg.idx.size and rmsg.idx[hit] == j:
+                    og[slot] = nn * inter_pad + hit
+                    placed = True
+                    break
+            if not placed:
+                for src_p, rmsg in final_recv_by_src.items():
+                    hit = np.searchsorted(rmsg.idx, j)
+                    if hit < rmsg.idx.size and rmsg.idx[hit] == j:
+                        og[slot] = n_nodes * inter_pad + src_p * final_pad + hit
+                        placed = True
+                        break
+            assert placed, f"rank {r} off-node col {j} unreachable"
+        boff_gather.append(og)
+
+        # -- COO blocks --------------------------------------------------------
+        for key, block in (("on_proc", blk.on_proc), ("on_node", blk.on_node),
+                           ("off_node", blk.off_node)):
+            rows_i, cols_i, vals_i = block.to_coo()
+            coo[key]["rows"].append(rows_i.astype(np.int32))
+            coo[key]["cols"].append(cols_i.astype(np.int32))
+            coo[key]["vals"].append(vals_i)
+
+    stack_int("full_send", full_send, (ppn, full_pad))
+    stack_int("init_send", init_send, (ppn, init_pad))
+    stack_int("final_send", final_send, (ppn, final_pad))
+    stack_int("inter_gather", inter_gather, (n_nodes, inter_pad))
+    stack_int("bnode_gather", bnode_gather, (bnode_pad,))
+    stack_int("boff_gather", boff_gather, (boff_pad,))
+    for key in coo:
+        arrays[f"{key}_rows"] = _pad_to(coo[key]["rows"], nnz_pads[key]).astype(np.int32)
+        arrays[f"{key}_cols"] = _pad_to(coo[key]["cols"], nnz_pads[key]).astype(np.int32)
+        arrays[f"{key}_vals"] = _pad_to(
+            [v.astype(np.float32) for v in coo[key]["vals"]], nnz_pads[key], fill=0.0)
+
+    pads = dict(full=full_pad, init=init_pad, inter=inter_pad, final=final_pad,
+                bnode=bnode_pad, boff=boff_pad, **{f"nnz_{k}": v for k, v in nnz_pads.items()})
+    return CompiledNAP(topo=topo, part=part, rows_pad=rows_pad, pads=pads, arrays=arrays)
+
+
+def pack_vector(v: np.ndarray, part: RowPartition, topo: Topology, rows_pad: int) -> np.ndarray:
+    """Global vector -> [n_nodes, ppn, rows_pad] padded shards."""
+    out = np.zeros((topo.n_procs, rows_pad), dtype=np.float32)
+    for r in range(topo.n_procs):
+        rows = part.rows_of(r)
+        out[r, : rows.size] = v[rows]
+    return out.reshape(topo.n_nodes, topo.ppn, rows_pad)
+
+
+def unpack_vector(w: np.ndarray, part: RowPartition, topo: Topology) -> np.ndarray:
+    """[n_nodes, ppn, rows_pad] -> global vector."""
+    w = np.asarray(w).reshape(topo.n_procs, -1)
+    out = np.zeros(part.n_rows, dtype=w.dtype)
+    for r in range(topo.n_procs):
+        rows = part.rows_of(r)
+        out[rows] = w[r, : rows.size]
+    return out
+
+
+def nap_spmv_shardmap(compiled: CompiledNAP, mesh: Mesh):
+    """Build the jitted shard_map NAPSpMV: f(v_shards, **device_arrays) -> w."""
+    topo = compiled.topo
+    rows_pad = compiled.rows_pad
+
+    def per_device(v_loc, full_send, init_send, final_send, inter_gather,
+                   bnode_gather, boff_gather,
+                   on_proc_rows, on_proc_cols, on_proc_vals,
+                   on_node_rows, on_node_cols, on_node_vals,
+                   off_node_rows, off_node_cols, off_node_vals):
+        squeeze = lambda x: x.reshape(x.shape[2:])
+        v_loc = squeeze(v_loc)
+        (full_send, init_send, final_send, inter_gather, bnode_gather, boff_gather,
+         on_proc_rows, on_proc_cols, on_proc_vals, on_node_rows, on_node_cols,
+         on_node_vals, off_node_rows, off_node_cols, off_node_vals) = map(
+            squeeze, (full_send, init_send, final_send, inter_gather, bnode_gather,
+                      boff_gather, on_proc_rows, on_proc_cols, on_proc_vals,
+                      on_node_rows, on_node_cols, on_node_vals, off_node_rows,
+                      off_node_cols, off_node_vals))
+
+        # Phase A+B (overlap in Alg. 3): intra-node exchanges over "proc".
+        full_out = v_loc[full_send]                       # [ppn, full_pad]
+        full_recv = jax.lax.all_to_all(full_out, "proc", 0, 0, tiled=True)
+        init_out = v_loc[init_send]
+        init_recv = jax.lax.all_to_all(init_out, "proc", 0, 0, tiled=True)
+
+        # Phase C: ONE aggregated inter-node all-to-all over "node".
+        staged = jnp.concatenate([v_loc, init_recv.reshape(-1)])
+        inter_out = staged[inter_gather]                  # [n_nodes, inter_pad]
+        inter_recv = jax.lax.all_to_all(inter_out, "node", 0, 0, tiled=True)
+
+        # local_spmv(A_on_process, v) — no communication needed (Alg. 3).
+        w = segment_sum(on_proc_vals * v_loc[on_proc_cols], on_proc_rows,
+                        num_segments=rows_pad)
+        # local_spmv(A_on_node, b_l->l)
+        bnode = full_recv.reshape(-1)[bnode_gather]
+        w = w + segment_sum(on_node_vals * bnode[on_node_cols], on_node_rows,
+                            num_segments=rows_pad)
+
+        # Phase D: intra-node scatter of received off-node data.
+        inter_flat = inter_recv.reshape(-1)
+        final_out = inter_flat[final_send]
+        final_recv = jax.lax.all_to_all(final_out, "proc", 0, 0, tiled=True)
+        boff = jnp.concatenate([inter_flat, final_recv.reshape(-1)])[boff_gather]
+        # local_spmv(A_off_node, b_nl->l)
+        w = w + segment_sum(off_node_vals * boff[off_node_cols], off_node_rows,
+                            num_segments=rows_pad)
+        return w.reshape(1, 1, rows_pad)
+
+    dev = compiled.device_arrays()
+    names = ["full_send", "init_send", "final_send", "inter_gather", "bnode_gather",
+             "boff_gather", "on_proc_rows", "on_proc_cols", "on_proc_vals",
+             "on_node_rows", "on_node_cols", "on_node_vals",
+             "off_node_rows", "off_node_cols", "off_node_vals"]
+    spec = P("node", "proc")
+    smapped = shard_map(per_device, mesh=mesh,
+                        in_specs=(spec,) * (1 + len(names)), out_specs=spec)
+
+    @jax.jit
+    def run(v_shards):
+        return smapped(v_shards, *[dev[k] for k in names])
+
+    return run
+
+
+def standard_spmv_shardmap(a: CSR, part: RowPartition, topo: Topology, mesh: Mesh,
+                           plan: Optional[StandardPlan] = None):
+    """Algorithm 1 as a flat padded all-to-all over ("node","proc")."""
+    if plan is None:
+        plan = build_standard_plan(a.indptr, a.indices, part, topo)
+    n_procs = topo.n_procs
+    blocks = split_all_blocks(a, part, topo)
+    local_index = part.local_index()
+    rows_pad = max(1, int(part.counts().max()))
+    pair_pad = max(1, max((m.size for msgs in plan.sends for m in msgs), default=1))
+
+    send_idx = np.zeros((n_procs, n_procs, pair_pad), dtype=np.int32)
+    for r in range(n_procs):
+        for m in plan.sends[r]:
+            send_idx[r, m.dst, : m.size] = local_index[m.idx]
+
+    # off-process buffer = on_node ∪ off_node columns (standard has one buffer)
+    buf_pad = max(1, max(b.on_node_cols.size + b.off_node_cols.size for b in blocks))
+    buf_gather = np.zeros((n_procs, buf_pad), dtype=np.int32)
+    nnz_pad = max(1, max(b.on_node.nnz + b.off_node.nnz + b.on_proc.nnz for b in blocks))
+    rows_s, cols_s, vals_s = [], [], []
+    for r in range(n_procs):
+        blk = blocks[r]
+        recv_by_src = _msg_by_src(plan.recvs[r])
+        cols_all = np.concatenate([blk.on_node_cols, blk.off_node_cols])
+        for slot, j in enumerate(cols_all):
+            src = int(part.owner[j])
+            buf_gather[r, slot] = src * pair_pad + _pos_in(recv_by_src[src].idx, int(j))
+        rr0, cc0, vv0 = blk.on_proc.to_coo()
+        rr1, cc1, vv1 = blk.on_node.to_coo()
+        rr2, cc2, vv2 = blk.off_node.to_coo()
+        # shift buffer columns: on_proc -> [0, rows_pad), buffer -> offset rows_pad
+        rows_s.append(np.concatenate([rr0, rr1, rr2]).astype(np.int32))
+        cols_s.append(np.concatenate([cc0, rows_pad + cc1,
+                                      rows_pad + blk.on_node_cols.size + cc2]).astype(np.int32))
+        vals_s.append(np.concatenate([vv0, vv1, vv2]).astype(np.float32))
+
+    A_rows = _pad_to(rows_s, nnz_pad).astype(np.int32)
+    A_cols = _pad_to(cols_s, nnz_pad).astype(np.int32)
+    A_vals = _pad_to(vals_s, nnz_pad, fill=0.0)
+    nn, ppn = topo.n_nodes, topo.ppn
+    reshape = lambda x: x.reshape((nn, ppn) + x.shape[1:])
+    dev = dict(send_idx=reshape(send_idx), buf_gather=reshape(buf_gather),
+               A_rows=reshape(A_rows), A_cols=reshape(A_cols), A_vals=reshape(A_vals))
+
+    def per_device(v_loc, send_idx, buf_gather, A_rows, A_cols, A_vals):
+        squeeze = lambda x: x.reshape(x.shape[2:])
+        v_loc, send_idx, buf_gather, A_rows, A_cols, A_vals = map(
+            squeeze, (v_loc, send_idx, buf_gather, A_rows, A_cols, A_vals))
+        out = v_loc[send_idx]                               # [n_procs, pair_pad]
+        recv = jax.lax.all_to_all(out, ("node", "proc"), 0, 0, tiled=True)
+        buf = jnp.concatenate([v_loc, recv.reshape(-1)[buf_gather]])
+        w = segment_sum(A_vals * buf[A_cols], A_rows, num_segments=rows_pad)
+        return w.reshape(1, 1, rows_pad)
+
+    spec = P("node", "proc")
+    smapped = shard_map(per_device, mesh=mesh, in_specs=(spec,) * 6, out_specs=spec)
+
+    @jax.jit
+    def run(v_shards):
+        return smapped(v_shards, dev["send_idx"], dev["buf_gather"],
+                       dev["A_rows"], dev["A_cols"], dev["A_vals"])
+
+    return run, rows_pad
+
+
+def padded_traffic(compiled: CompiledNAP) -> Dict[str, int]:
+    """Padded (SPMD-actual) vs effective bytes per phase, float32 payloads."""
+    topo, pads = compiled.topo, compiled.pads
+    eff = {
+        "inter": sum(m.size for r in range(topo.n_procs) for m in []),
+    }
+    n = topo.n_procs
+    return {
+        "inter_padded": n * topo.n_nodes * pads["inter"] * 4,
+        "full_padded": n * topo.ppn * pads["full"] * 4,
+        "init_padded": n * topo.ppn * pads["init"] * 4,
+        "final_padded": n * topo.ppn * pads["final"] * 4,
+    }

@@ -1,0 +1,70 @@
+"""Process/node topology: the paper's rank <-> (p, n) machinery (Sec. 2).
+
+A rank r in [0, n_p) is identified with the tuple (p, n) where
+``p = r % ppn`` is the local process id and ``n = r // ppn`` the node id
+(SMP-style ordering, as assumed in the paper).  On TPU the same object
+describes a (pod, chip) hierarchy: ``node`` = pod, ``ppn`` = chips per pod.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator, Tuple
+
+import numpy as np
+
+Rank = int
+ProcNode = Tuple[int, int]  # (p, n)
+
+
+@dataclasses.dataclass(frozen=True)
+class Topology:
+    """An SMP-ordered machine of ``n_nodes`` nodes with ``ppn`` processes each."""
+
+    n_nodes: int
+    ppn: int
+
+    def __post_init__(self) -> None:
+        if self.n_nodes < 1 or self.ppn < 1:
+            raise ValueError(f"bad topology ({self.n_nodes} nodes x {self.ppn} ppn)")
+
+    @property
+    def n_procs(self) -> int:
+        return self.n_nodes * self.ppn
+
+    # -- rank <-> (p, n), Sec. 2: r ~ (r mod ppn, floor(r / ppn)) ------------
+    def proc_node(self, rank: Rank) -> ProcNode:
+        if not 0 <= rank < self.n_procs:
+            raise ValueError(f"rank {rank} out of range [0, {self.n_procs})")
+        return rank % self.ppn, rank // self.ppn
+
+    def rank(self, p: int, n: int) -> Rank:
+        if not (0 <= p < self.ppn and 0 <= n < self.n_nodes):
+            raise ValueError(f"({p},{n}) outside ({self.ppn} ppn, {self.n_nodes} nodes)")
+        return n * self.ppn + p
+
+    def node_of(self, rank: Rank) -> int:
+        return rank // self.ppn
+
+    def local_of(self, rank: Rank) -> int:
+        return rank % self.ppn
+
+    def ranks_on_node(self, n: int) -> range:
+        return range(n * self.ppn, (n + 1) * self.ppn)
+
+    def same_node(self, r: Rank, t: Rank) -> bool:
+        return self.node_of(r) == self.node_of(t)
+
+    def iter_ranks(self) -> Iterator[Rank]:
+        return iter(range(self.n_procs))
+
+    # -- vectorised helpers used by comm_graph ------------------------------
+    def node_of_array(self, ranks: np.ndarray) -> np.ndarray:
+        return np.asarray(ranks) // self.ppn
+
+    def local_of_array(self, ranks: np.ndarray) -> np.ndarray:
+        return np.asarray(ranks) % self.ppn
+
+
+def paper_example_topology() -> Topology:
+    """Example 2.1: six processes across three nodes (ppn = 2)."""
+    return Topology(n_nodes=3, ppn=2)

@@ -1,0 +1,4 @@
+from repro.kernels.bsr_spmv.ops import bsr_spmv, bsr_spmm
+from repro.kernels.bsr_spmv.ref import bsr_spmv_ref
+
+__all__ = ["bsr_spmv", "bsr_spmm", "bsr_spmv_ref"]

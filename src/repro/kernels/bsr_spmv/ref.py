@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for the BSR SpMV/SpMM kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def bsr_spmm_padded_ref(cols: jnp.ndarray, blocks: jnp.ndarray,
+                        x: jnp.ndarray) -> jnp.ndarray:
+    """Same contract as kernel.bsr_spmm_padded, via gather + einsum."""
+    gathered = x[jnp.maximum(cols, 0)]                    # [nbr, kmax, bn, nv]
+    valid = (cols >= 0)[..., None, None]
+    prod = jnp.einsum("rkmn,rknv->rkmv", blocks,
+                      jnp.where(valid, gathered, 0.0))
+    return prod.sum(axis=1).astype(jnp.float32)
+
+
+def bsr_spmv_ref(bsr, v):
+    """Oracle on a sparse.BSR container + element vector (numpy/jnp)."""
+    cols, blocks, _ = bsr.padded_uniform()
+    bn = bsr.block_shape[1]
+    x = jnp.asarray(v).reshape(-1, bn)[..., None]
+    out = bsr_spmm_padded_ref(jnp.asarray(cols), jnp.asarray(blocks), x)
+    return out.reshape(-1)

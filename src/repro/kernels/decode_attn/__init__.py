@@ -1,0 +1,4 @@
+from repro.kernels.decode_attn.ops import decode_attention
+from repro.kernels.decode_attn.ref import decode_attention_ref
+
+__all__ = ["decode_attention", "decode_attention_ref"]

@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for decode attention."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def decode_attention_ref(q, k, v, lengths, *, scale, softcap: float = 0.0):
+    """q [B, Hkv, g, D]; k, v [B, Hkv, S, D]; lengths [B] -> [B, Hkv, g, D]."""
+    scores = jnp.einsum("bhgd,bhsd->bhgs", q, k).astype(jnp.float32) * scale
+    if softcap > 0.0:
+        scores = softcap * jnp.tanh(scores / softcap)
+    S = k.shape[2]
+    mask = jnp.arange(S)[None, :] < lengths[:, None]       # [B, S]
+    scores = jnp.where(mask[:, None, None, :], scores, -jnp.inf)
+    p = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    p = p / p.sum(axis=-1, keepdims=True)
+    return jnp.einsum("bhgs,bhsd->bhgd", p, v).astype(jnp.float32)

@@ -1,0 +1,23 @@
+"""Production meshes.  A FUNCTION, not a module constant — importing this
+module never touches jax device state (required so smoke tests keep their
+single CPU device)."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def mesh_axes(multi_pod: bool):
+    return ("pod", "data", "model") if multi_pod else ("data", "model")
+
+
+def dp_size(mesh) -> int:
+    size = mesh.shape.get("data", 1)
+    size *= mesh.shape.get("pod", 1)
+    return size

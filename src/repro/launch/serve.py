@@ -1,0 +1,70 @@
+"""Serving driver: batched prefill + decode loop against the KV cache.
+
+Runs reduced configs for real on this host; the decode_32k / long_500k
+dry-run cells lower exactly the ``decode_step`` used here.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.serve --arch gemma2-2b \
+      --batch 4 --prompt-len 32 --gen 16
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, get_reduced
+from repro.models import build_model
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--max-seq", type=int, default=128)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--greedy", action="store_true", default=True)
+    args = ap.parse_args()
+
+    cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(args.seed))
+    rng = np.random.default_rng(args.seed)
+    B, S = args.batch, args.prompt_len
+    prompts = jnp.asarray(rng.integers(0, cfg.vocab, (B, S)), jnp.int32)
+
+    decode = jax.jit(model.decode_step)
+    # prefill by teacher-forcing through decode_step (cache shape fixed up
+    # front); model.prefill is the fused-path alternative exercised by the
+    # prefill_32k dry-run cells.
+    cache = model.init_cache(B, args.max_seq)
+    t0 = time.time()
+    logits = None
+    for t in range(S):
+        logits, cache = decode(params, cache, prompts[:, t:t + 1])
+    t_prefill = time.time() - t0
+
+    out_tokens = []
+    tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+    t0 = time.time()
+    for _ in range(args.gen):
+        out_tokens.append(np.asarray(tok)[:, 0])
+        logits, cache = decode(params, cache, tok)
+        tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+    t_gen = time.time() - t0
+    gen = np.stack(out_tokens, axis=1)
+    print(f"prefill {S} toks x {B} seqs: {t_prefill:.2f}s; "
+          f"decode {args.gen} steps: {t_gen:.2f}s "
+          f"({B*args.gen/max(t_gen,1e-9):.1f} tok/s)")
+    print("generated ids [batch 0]:", gen[0].tolist())
+    assert np.isfinite(np.asarray(logits)).all()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,210 @@
+"""Attention modules: GQA (+ sliding window / softcap / qk-norm) and MLA.
+
+Each module provides ``init``, ``apply`` (train/prefill over a full sequence)
+and ``decode`` (single token against a cache).  Caches are plain dicts of
+arrays so they shard/checkpoint like any other pytree.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import (apply_rope, blocked_attention,
+                                 cache_decode_attention, dense_init, l2_norm,
+                                 rms_norm)
+
+
+# ---------------------------------------------------------------------------
+# GQA
+# ---------------------------------------------------------------------------
+
+def gqa_init(key, cfg, dtype) -> Dict:
+    d, dh = cfg.d_model, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], d, cfg.n_heads * dh, dtype),
+        "wk": dense_init(ks[1], d, cfg.n_kv_heads * dh, dtype),
+        "wv": dense_init(ks[2], d, cfg.n_kv_heads * dh, dtype),
+        "wo": dense_init(ks[3], cfg.n_heads * dh, d, dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((dh,), dtype)
+        p["k_norm"] = jnp.ones((dh,), dtype)
+    return p
+
+
+def _project_qkv(p, cfg, x, positions):
+    B, S, _ = x.shape
+    dh, Hkv = cfg.head_dim, cfg.n_kv_heads
+    G = cfg.n_heads // Hkv
+    q = (x @ p["wq"]).reshape(B, S, Hkv, G, dh)
+    k = (x @ p["wk"]).reshape(B, S, Hkv, dh)
+    v = (x @ p["wv"]).reshape(B, S, Hkv, dh)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"])
+        k = rms_norm(k, p["k_norm"])
+    q = apply_rope(q.reshape(B, S, Hkv * G, dh), positions,
+                   cfg.rope_theta).reshape(B, S, Hkv, G, dh)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def gqa_apply(p, cfg, x: jax.Array, *, window: Optional[jax.Array] = None,
+              causal: bool = True, cs_qkv=None) -> jax.Array:
+    """Full-sequence attention (training / prefill)."""
+    B, S, _ = x.shape
+    positions = jnp.arange(S)[None, :]
+    q, k, v = _project_qkv(p, cfg, x, positions)
+    if cs_qkv is not None:
+        q, k, v = cs_qkv(q, k, v)
+    out = blocked_attention(q, k, v, causal=causal, window=window,
+                            softcap=cfg.attn_softcap,
+                            block_q=cfg.attn_block_q,
+                            block_kv=cfg.attn_block_kv)
+    return out.reshape(B, S, -1) @ p["wo"]
+
+
+def gqa_init_cache(cfg, batch: int, max_seq: int, dtype) -> Dict:
+    dh, Hkv = cfg.head_dim, cfg.n_kv_heads
+    return {
+        "k": jnp.zeros((batch, max_seq, Hkv, dh), dtype),
+        "v": jnp.zeros((batch, max_seq, Hkv, dh), dtype),
+    }
+
+
+def gqa_decode(p, cfg, x: jax.Array, cache: Dict, length: jax.Array,
+               *, window: Optional[jax.Array] = None) -> Tuple[jax.Array, Dict]:
+    """x: [B, 1, d]; cache k/v [B, S, Hkv, dh]; length [B] tokens already
+    stored (the new token lands at index ``length``)."""
+    B = x.shape[0]
+    positions = length[:, None]
+    q, k, v = _project_qkv(p, cfg, x, positions)
+    # in-place-style single-slot update: decode steps are aligned across the
+    # batch (length[0] == length[b]), so one dynamic_update_slice suffices —
+    # the onehot-where alternative rewrites (and double-buffers) the whole
+    # cache every step.  Ragged serving would scatter per sequence instead.
+    pos = length[0]
+    k_cache = jax.lax.dynamic_update_slice_in_dim(
+        cache["k"], k.astype(cache["k"].dtype), pos, axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(
+        cache["v"], v.astype(cache["v"].dtype), pos, axis=1)
+    out = cache_decode_attention(q, k_cache, v_cache, length + 1,
+                                 softcap=cfg.attn_softcap, window=window)
+    return out.reshape(B, 1, -1) @ p["wo"], {"k": k_cache, "v": v_cache}
+
+
+# ---------------------------------------------------------------------------
+# MLA (deepseek-v2): low-rank compressed KV with decoupled RoPE
+# ---------------------------------------------------------------------------
+
+def mla_init(key, cfg, dtype) -> Dict:
+    d = cfg.d_model
+    H = cfg.n_heads
+    r_kv, r_q = cfg.mla_kv_lora, cfg.mla_q_lora
+    nope, rope, dv = cfg.mla_qk_nope, cfg.mla_rope_dim, cfg.mla_v_head
+    ks = jax.random.split(key, 8)
+    p = {
+        # queries (optionally low-rank)
+        "wq_a": dense_init(ks[0], d, r_q, dtype) if r_q else None,
+        "q_norm": jnp.ones((r_q,), dtype) if r_q else None,
+        "wq_b": dense_init(ks[1], r_q or d, H * (nope + rope), dtype),
+        # compressed kv + decoupled rope key
+        "wkv_a": dense_init(ks[2], d, r_kv + rope, dtype),
+        "kv_norm": jnp.ones((r_kv,), dtype),
+        "wkv_b": dense_init(ks[3], r_kv, H * (nope + dv), dtype),
+        "wo": dense_init(ks[4], H * dv, d, dtype),
+    }
+    return {k: v for k, v in p.items() if v is not None}
+
+
+def _mla_qkv(p, cfg, x, positions):
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    nope, rope, dv = cfg.mla_qk_nope, cfg.mla_rope_dim, cfg.mla_v_head
+    if cfg.mla_q_lora:
+        q_in = rms_norm(x @ p["wq_a"], p["q_norm"])
+    else:
+        q_in = x
+    q = (q_in @ p["wq_b"]).reshape(B, S, H, nope + rope)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    kv = x @ p["wkv_a"]                          # [B, S, r_kv + rope]
+    c_kv = rms_norm(kv[..., : cfg.mla_kv_lora], p["kv_norm"])
+    k_rope = apply_rope(kv[..., cfg.mla_kv_lora:][:, :, None, :],
+                        positions, cfg.rope_theta)[:, :, 0]
+    return q_nope, q_rope, c_kv, k_rope
+
+
+def _mla_expand(p, cfg, c_kv):
+    """Decompress cached latent into per-head K_nope, V."""
+    B, S, _ = c_kv.shape
+    H, nope, dv = cfg.n_heads, cfg.mla_qk_nope, cfg.mla_v_head
+    kv = (c_kv @ p["wkv_b"]).reshape(B, S, H, nope + dv)
+    return kv[..., :nope], kv[..., nope:]
+
+
+def mla_apply(p, cfg, x: jax.Array, cs_qkv=None) -> jax.Array:
+    B, S, _ = x.shape
+    H, nope, rope, dv = (cfg.n_heads, cfg.mla_qk_nope, cfg.mla_rope_dim,
+                         cfg.mla_v_head)
+    positions = jnp.arange(S)[None, :]
+    q_nope, q_rope, c_kv, k_rope = _mla_qkv(p, cfg, x, positions)
+    k_nope, v = _mla_expand(p, cfg, c_kv)
+    # assemble full q/k with the shared rope part; one kv "head group" per head
+    q = jnp.concatenate([q_nope, q_rope], -1)[:, :, :, None, :]  # [B,S,H,1,dh]
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope[:, :, None],
+                                                  (B, S, H, rope))], -1)
+    if cs_qkv is not None:
+        q, k, v = cs_qkv(q, k, v)
+    # grouped layout: Hkv = H, G = 1
+    out = blocked_attention(q, k, v, causal=True, softcap=0.0,
+                            block_q=cfg.attn_block_q,
+                            block_kv=cfg.attn_block_kv)
+    return out.reshape(B, S, H * dv) @ p["wo"]
+
+
+def mla_init_cache(cfg, batch: int, max_seq: int, dtype) -> Dict:
+    """MLA caches the COMPRESSED latent + rope key: (r_kv + rope) per token
+    instead of 2*H*dh — the 93% KV-cache shrink of the paper."""
+    return {
+        "c_kv": jnp.zeros((batch, max_seq, cfg.mla_kv_lora), dtype),
+        "k_rope": jnp.zeros((batch, max_seq, cfg.mla_rope_dim), dtype),
+    }
+
+
+def mla_decode(p, cfg, x: jax.Array, cache: Dict, length: jax.Array
+               ) -> Tuple[jax.Array, Dict]:
+    B = x.shape[0]
+    H, nope, rope, dv = (cfg.n_heads, cfg.mla_qk_nope, cfg.mla_rope_dim,
+                         cfg.mla_v_head)
+    positions = length[:, None]
+    q_nope, q_rope, c_kv_new, k_rope_new = _mla_qkv(p, cfg, x, positions)
+    S = cache["c_kv"].shape[1]
+    pos = length[0]   # aligned decode steps (see gqa_decode)
+    c_kv = jax.lax.dynamic_update_slice_in_dim(
+        cache["c_kv"], c_kv_new.astype(cache["c_kv"].dtype), pos, axis=1)
+    k_rope = jax.lax.dynamic_update_slice_in_dim(
+        cache["k_rope"], k_rope_new.astype(cache["k_rope"].dtype), pos, axis=1)
+    # ABSORBED attention (never decompresses the cache): fold W_b into the
+    # query and the output so scores/values live in the r_kv-dim latent space.
+    #   score(s) = (W_bk^T q_nope) . c_kv[s]  +  q_rope . k_rope[s]
+    #   out      = W_bv^T ( sum_s p_s c_kv[s] )
+    w_b = p["wkv_b"].reshape(cfg.mla_kv_lora, H, nope + dv)
+    w_bk, w_bv = w_b[..., :nope], w_b[..., nope:]
+    q_eff = jnp.einsum("bhn,rhn->bhr", q_nope[:, 0].astype(jnp.float32),
+                       w_bk.astype(jnp.float32))            # [B, H, r_kv]
+    scale = 1.0 / jnp.sqrt(jnp.float32(nope + rope))
+    s_lat = jnp.einsum("bhr,bsr->bhs", q_eff, c_kv.astype(jnp.float32))
+    s_rope = jnp.einsum("bhp,bsp->bhs", q_rope[:, 0].astype(jnp.float32),
+                        k_rope.astype(jnp.float32))
+    scores = (s_lat + s_rope) * scale
+    mask = jnp.arange(S)[None] < (length + 1)[:, None]
+    scores = jnp.where(mask[:, None], scores, -1e30)
+    prob = jax.nn.softmax(scores, axis=-1)
+    lat = jnp.einsum("bhs,bsr->bhr", prob, c_kv.astype(jnp.float32))
+    out = jnp.einsum("bhr,rhv->bhv", lat, w_bv.astype(jnp.float32))
+    out = out.reshape(B, 1, H * dv).astype(x.dtype) @ p["wo"]
+    return out, {"c_kv": c_kv, "k_rope": k_rope}

@@ -1,0 +1,232 @@
+"""Shared building blocks: norms, RoPE, blocked attention, chunked loss.
+
+Everything is a pure function over explicit param pytrees (no framework).
+Initializers return nested dicts of jnp arrays; each ``init_*`` has a
+matching ``spec_*`` in models/partitioning.py mapping the same tree to
+PartitionSpecs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+DTYPES = {"bfloat16": jnp.bfloat16, "float32": jnp.float32}
+
+
+def dtype_of(cfg) -> jnp.dtype:
+    return DTYPES[cfg.dtype]
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, d_in: int, d_out: int, dtype) -> jax.Array:
+    scale = 1.0 / np.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype) -> jax.Array:
+    return (jax.random.normal(key, (vocab, d), jnp.float32)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jax.Array, w: jax.Array, eps: float = 1e-6,
+             plus_one: bool = False) -> jax.Array:
+    """RMSNorm in f32 accumulation; gemma2 stores (w - 1) => scale (1 + w)."""
+    xf = x.astype(jnp.float32)
+    inv = jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    scale = (1.0 + w.astype(jnp.float32)) if plus_one else w.astype(jnp.float32)
+    return (xf * inv * scale).astype(x.dtype)
+
+
+def l2_norm(x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    """Parameter-free L2 normalization (chameleon qk-norm style, f32)."""
+    xf = x.astype(jnp.float32)
+    return (xf * jax.lax.rsqrt(jnp.mean(xf * xf, -1, keepdims=True) + eps)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(dim: int, theta: float) -> np.ndarray:
+    return 1.0 / (theta ** (np.arange(0, dim, 2, dtype=np.float64) / dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [..., seq, heads, dim]; positions: [..., seq] (broadcastable)."""
+    dim = x.shape[-1]
+    freqs = jnp.asarray(rope_frequencies(dim, theta), jnp.float32)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [..., seq, dim/2]
+    cos = jnp.cos(angles)[..., None, :]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# blocked (flash-style) attention — pure jnp, remat & SPMD friendly
+# ---------------------------------------------------------------------------
+
+NEG = -1e30
+
+
+def blocked_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                      *, causal: bool = True, window: Optional[jax.Array] = None,
+                      softcap: float = 0.0, block_q: int = 1024,
+                      block_kv: int = 1024, q_offset: int = 0) -> jax.Array:
+    """Online-softmax attention over KV blocks: O(S) memory instead of O(S^2).
+
+    q: [B, Sq, Hkv, G, Dk]  (grouped query heads)
+    k: [B, Skv, Hkv, Dk];  v: [B, Skv, Hkv, Dv]  (Dv may differ — MLA)
+    window: scalar int32 (traced ok) — sliding window size; None/0 = full.
+    q_offset: absolute position of q[0] (for decode/prefill continuation).
+    Returns [B, Sq, Hkv, G, Dv].
+    """
+    B, Sq, Hkv, G, Dk = q.shape
+    Dv = v.shape[-1]
+    Skv = k.shape[1]
+    scale = 1.0 / np.sqrt(Dk)
+    bq = min(block_q, Sq)
+    bkv = min(block_kv, Skv)
+    nq, nkv = -(-Sq // bq), -(-Skv // bkv)
+    pad_q, pad_kv = nq * bq - Sq, nkv * bkv - Skv
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0), (0, 0)))
+    if pad_kv:
+        k = jnp.pad(k, ((0, 0), (0, pad_kv), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_kv), (0, 0), (0, 0)))
+
+    qb = q.reshape(B, nq, bq, Hkv, G, Dk).astype(jnp.float32) * scale
+    kb = k.reshape(B, nkv, bkv, Hkv, Dk)
+    vb = v.reshape(B, nkv, bkv, Hkv, Dv)
+
+    def q_block(iq, qi):
+        q_pos = q_offset + iq * bq + jnp.arange(bq)
+
+        def kv_block(carry, ikv):
+            m_prev, l_prev, acc = carry
+            kv_pos = ikv * bkv + jnp.arange(bkv)
+            kk = jax.lax.dynamic_index_in_dim(kb, ikv, 1, keepdims=False)
+            vv = jax.lax.dynamic_index_in_dim(vb, ikv, 1, keepdims=False)
+            s = jnp.einsum("bqhgd,bkhd->bhgqk", qi, kk.astype(jnp.float32))
+            if softcap > 0.0:
+                s = softcap * jnp.tanh(s / softcap)
+            mask = kv_pos[None, :] <= q_pos[:, None] if causal else \
+                jnp.ones((bq, bkv), bool)
+            mask = mask & (kv_pos[None, :] < Skv) & (q_pos[:, None] < q_offset + Sq)
+            if window is not None:
+                mask = mask & (kv_pos[None, :] > q_pos[:, None] - window)
+            s = jnp.where(mask[None, None, None], s, NEG)
+            m_new = jnp.maximum(m_prev, s.max(-1))
+            p = jnp.exp(s - m_new[..., None])
+            p = jnp.where(mask[None, None, None], p, 0.0)
+            alpha = jnp.exp(m_prev - m_new)
+            l_new = l_prev * alpha + p.sum(-1)
+            acc = acc * alpha[..., None] + jnp.einsum(
+                "bhgqk,bkhd->bhgqd", p, vv.astype(jnp.float32))
+            return (m_new, l_new, acc), None
+
+        init = (jnp.full((B, Hkv, G, bq), NEG, jnp.float32),
+                jnp.zeros((B, Hkv, G, bq), jnp.float32),
+                jnp.zeros((B, Hkv, G, bq, Dv), jnp.float32))
+        # causal: kv blocks after this q block contribute nothing; keeping the
+        # scan bound static is required for SPMD, masking handles the rest.
+        # checkpoint the block body: without it scan-backward STACKS the
+        # [bq, bkv] score blocks across iterations (observed ~2.5 TB of HBM
+        # traffic per step) — recompute-in-backward keeps flash-attention's
+        # O(S) memory in the backward pass too.
+        (m, l, acc), _ = jax.lax.scan(jax.checkpoint(kv_block), init,
+                                      jnp.arange(nkv))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return jnp.einsum("bhgqd->bqhgd", out)
+
+    outs = jax.lax.map(lambda i: q_block(i, jax.lax.dynamic_index_in_dim(qb, i, 1, False)),
+                       jnp.arange(nq))
+    out = jnp.moveaxis(outs, 0, 1).reshape(B, nq * bq, Hkv, G, Dv)
+    return out[:, :Sq].astype(q.dtype)
+
+
+def cache_decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                           length: jax.Array, *, softcap: float = 0.0,
+                           window: Optional[jax.Array] = None) -> jax.Array:
+    """One-token decode attention over a padded cache (jnp path).
+
+    q: [B, 1, Hkv, G, Dh]; caches [B, S, Hkv, Dh]; length [B] current count
+    (the new token is at index length-1).  The Pallas flash-decode kernel in
+    kernels/decode_attn implements the same contract for the TPU target.
+    """
+    B, _, Hkv, G, Dh = q.shape
+    S = k_cache.shape[1]
+    scale = 1.0 / np.sqrt(Dh)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", q.astype(jnp.float32) * scale,
+                   k_cache.astype(jnp.float32))
+    if softcap > 0.0:
+        s = softcap * jnp.tanh(s / softcap)
+    pos = jnp.arange(S)[None]
+    mask = pos < length[:, None]
+    if window is not None:
+        mask = mask & (pos > length[:, None] - 1 - window)
+    s = jnp.where(mask[:, None, None, None], s, NEG)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", p, v_cache.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# chunked cross-entropy (never materialises [B, S, V] at once)
+# ---------------------------------------------------------------------------
+
+def chunked_xent(x: jax.Array, head: jax.Array, labels: jax.Array,
+                 *, chunk: int = 2048, softcap: float = 0.0,
+                 cs_logits=None) -> jax.Array:
+    """x: [B, S, D]; head: [D, V]; labels: [B, S] -> mean token NLL (f32)."""
+    B, S, D = x.shape
+    n = -(-S // chunk)
+    pad = n * chunk - S
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)), constant_values=-1)
+    xc = x.reshape(B, n, chunk, D)
+    lc = labels.reshape(B, n, chunk)
+
+    def per_chunk(carry, inp):
+        xi, li = inp
+        logits = (xi @ head).astype(jnp.float32)
+        if cs_logits is not None:
+            logits = cs_logits(logits)
+        if softcap > 0.0:
+            logits = softcap * jnp.tanh(logits / softcap)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        # label gather as reduce-after-multiply: with a vocab-sharded V this
+        # lowers to a tiny [B, chunk] psum instead of all-reducing the full
+        # logits block (observed 200+ GB/device of all-reduce otherwise).
+        V = logits.shape[-1]
+        onehot = (jnp.arange(V)[None, None, :] == li[..., None])
+        ll = jnp.where(onehot, logits, 0.0).sum(-1)
+        valid = li >= 0
+        nll = jnp.where(valid, lse - ll, 0.0)
+        return carry + jnp.stack([nll.sum(), valid.sum().astype(jnp.float32)]), None
+
+    # checkpoint the chunk body: scan-backward otherwise STACKS every chunk's
+    # [B, chunk, V] logits as residuals (observed 40+ GB/device at V=152k),
+    # defeating the chunking; recompute-in-backward keeps one chunk live.
+    acc, _ = jax.lax.scan(jax.checkpoint(per_chunk), jnp.zeros(2, jnp.float32),
+                          (jnp.moveaxis(xc, 1, 0), jnp.moveaxis(lc, 1, 0)))
+    return acc[0] / jnp.maximum(acc[1], 1.0)
+
+
+def head_logits(x: jax.Array, head: jax.Array, softcap: float = 0.0) -> jax.Array:
+    logits = (x @ head).astype(jnp.float32)
+    if softcap > 0.0:
+        logits = softcap * jnp.tanh(logits / softcap)
+    return logits

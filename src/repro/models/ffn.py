@@ -1,0 +1,20 @@
+"""Dense gated FFN (SwiGLU / GeGLU)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init
+
+
+def ffn_init(key, d: int, ff: int, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"w_gate": dense_init(k1, d, ff, dtype),
+            "w_up": dense_init(k2, d, ff, dtype),
+            "w_down": dense_init(k3, ff, d, dtype)}
+
+
+def ffn_apply(p, x: jax.Array, act: str = "silu") -> jax.Array:
+    gate = x @ p["w_gate"]
+    gate = jax.nn.gelu(gate) if act == "gelu" else jax.nn.silu(gate)
+    return (gate * (x @ p["w_up"])) @ p["w_down"]

@@ -1,0 +1,203 @@
+"""Sharding rules: param/cache/batch PartitionSpecs for every architecture.
+
+Mesh axes: ``("data", "model")`` single-pod, ``("pod", "data", "model")``
+multi-pod.  Design (DESIGN.md §4):
+
+* batch / activations over DP = ("pod", "data")
+* tensor parallel over "model" (flattened head/ff dims, so unequal head
+  counts never block divisibility)
+* FSDP of params over "data" ONLY — params stay replicated across pods so
+  every per-layer all-gather is intra-pod ICI; this is the paper's
+  "aggregate before you inject" applied to parameter traffic.
+* optimizer state over ("pod", "data") (+ model) — ZeRO-3 over the full
+  fleet; one cross-pod gather per step (update), not per layer.
+* experts over ("pod", "model") — expert parallelism crosses pods, which is
+  exactly where the NAP dispatch (models/moe.py) pays off.
+* decode KV caches over ("model" on the SEQUENCE dim) — sequence-parallel
+  decode; works for any kv-head count, and XLA turns the softmax reductions
+  into small cross-chip psums.
+
+Rules are ordered regexes over "/"-joined param paths; first match wins.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, List, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+Rules = List[Tuple[str, P]]
+
+
+def _axes(multi_pod: bool):
+    dp = ("pod", "data") if multi_pod else ("data",)
+    fsdp = "data"
+    tp = "model"
+    ep = ("pod", "model") if multi_pod else ("model",)
+    return dp, fsdp, tp, ep
+
+
+def param_rules(cfg, multi_pod: bool, *, zero3: bool = False) -> Rules:
+    """zero3=True returns the optimizer-state variant (fsdp over all DP)."""
+    dp, fsdp, tp, ep = _axes(multi_pod)
+    # experts already consume the pod axis (EP spans pods); their FSDP dim
+    # can only take "data" — a mesh axis may appear once per spec.
+    efsdp = "data"
+    if zero3:
+        fsdp = dp  # shard optimizer state over every data-parallel chip
+    L = None  # leading stacked-layer dim is never sharded
+    rules: Rules = [
+        # --- embeddings / head: vocab-sharded over model -----------------
+        (r"embed$", P(tp, None)),
+        (r"head$", P(None, tp)),
+        # --- MoE: experts over EP axes, FSDP over data on the d_model dim
+        # (qwen3's 222B of expert weights would otherwise sit replicated
+        # across the data axis: 27 GB/chip)
+        (r"moe/router$", P(L, None, None)),
+        (r"moe/w_(gate|up)$", P(L, ep, efsdp, None)),
+        (r"moe/w_down$", P(L, ep, None, efsdp)),
+        (r"moe/shared/w_(gate|up)$", P(L, fsdp, tp)),
+        (r"moe/shared/w_down$", P(L, tp, fsdp)),
+        # --- MLA ------------------------------------------------------------
+        (r"attn/wq_a$", P(L, fsdp, None)),
+        (r"attn/wq_b$", P(L, fsdp, tp)),
+        (r"attn/wkv_a$", P(L, fsdp, None)),
+        (r"attn/wkv_b$", P(L, None, tp)),
+        (r"attn/(q_norm|k_norm|kv_norm)$", P(L, None)),
+        # --- GQA attention ----------------------------------------------------
+        (r"attn/w(q|k|v)$", P(L, fsdp, tp)),
+        (r"attn/wo$", P(L, tp, fsdp)),
+        (r"xattn/w(q|k|v)$", P(L, fsdp, tp)),
+        (r"xattn/wo$", P(L, tp, fsdp)),
+        # --- dense FFN -----------------------------------------------------------
+        (r"ffn/w_(gate|up)$", P(L, fsdp, tp)),
+        (r"ffn/w_down$", P(L, tp, fsdp)),
+        # --- mamba2 -----------------------------------------------------------------
+        (r"mamba/in_proj$", P(L, fsdp, tp)),
+        (r"mamba/bc_proj$", P(L, fsdp, None)),
+        (r"mamba/dt_proj$", P(L, fsdp, None)),
+        (r"mamba/conv_w$", P(L, None, tp)),
+        (r"mamba/out_proj$", P(L, tp, fsdp)),
+        (r"mamba/(dt_bias|a_log|d_skip)$", P(L, None)),
+        # --- rwkv6 ---------------------------------------------------------------------
+        (r"block/w(r|k|v|g)$", P(L, fsdp, tp)),
+        (r"block/wo$", P(L, tp, fsdp)),
+        (r"block/w_lora_a$", P(L, fsdp, None)),
+        (r"block/w_lora_b$", P(L, None, tp)),
+        (r"block/c(k|r)$", P(L, fsdp, tp)),
+        (r"block/cv$", P(L, tp, fsdp)),
+        (r"block/(mix_.|cmix_.|w0|u|ln_x)$", P(L, None)),
+        # --- norms & leftovers: replicated -------------------------------------------
+        (r".*", P()),
+    ]
+    return rules
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def _match(rules: Rules, path: str, shape, axis_sizes) -> P:
+    for pat, spec in rules:
+        if re.search(pat, path):
+            return _guard(_fit(spec, path, len(shape)), shape, axis_sizes)
+    return P()
+
+
+def _guard(spec: P, shape, axis_sizes) -> P:
+    """pjit ARGUMENT shardings must divide evenly: drop the sharding of any
+    dim whose size is not a multiple of its mesh-axes product (whisper's
+    51865 vocab, batch-1 long_500k caches, ...)."""
+    if axis_sizes is None:
+        return spec
+    out = []
+    for i, entry in enumerate(spec):
+        if entry is None or i >= len(shape):
+            out.append(entry)
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        size = 1
+        for a in axes:
+            size *= axis_sizes.get(a, 1)
+        out.append(entry if shape[i] % size == 0 else None)
+    return P(*out)
+
+
+def _fit(spec: P, path: str, ndim: int) -> P:
+    """Adjust a rule spec to the actual rank: rules are written for the
+    STACKED layout (leading layer dim).  Unstacked params (zamba shared
+    block, whisper tails, single layers) drop the leading None; shorter
+    params (norm vectors) are replicated."""
+    entries = list(spec)
+    if len(entries) == ndim:
+        return P(*entries)
+    if len(entries) - 1 == ndim and (entries[0] is None):
+        return P(*entries[1:])
+    if len(entries) + 1 == ndim:
+        return P(None, *entries)
+    if ndim <= 1:
+        return P()
+    # fall back: replicate
+    return P()
+
+
+def tree_specs(tree, rules: Rules, axis_sizes=None):
+    """Map a pytree of arrays/ShapeDtypeStructs to a spec tree."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: _match(rules, _path_str(path), leaf.shape,
+                                  axis_sizes),
+        tree)
+
+
+def param_specs(cfg, params_shape, multi_pod: bool, zero3: bool = False,
+                axis_sizes=None):
+    return tree_specs(params_shape, param_rules(cfg, multi_pod, zero3=zero3),
+                      axis_sizes)
+
+
+# ---------------------------------------------------------------------------
+# batch + cache specs
+# ---------------------------------------------------------------------------
+
+def batch_spec(multi_pod: bool) -> P:
+    dp, _, _, _ = _axes(multi_pod)
+    return P(dp, None)
+
+
+def frames_spec(multi_pod: bool) -> P:
+    dp, _, _, _ = _axes(multi_pod)
+    return P(dp, None, None)
+
+
+def cache_rules(cfg, multi_pod: bool) -> Rules:
+    dp, _, tp, _ = _axes(multi_pod)
+    return [
+        # KV caches [L, B, S, Hkv, dh]: batch over DP, SEQUENCE over model
+        (r"layers/(k|v)$", P(None, dp, tp, None, None)),
+        (r"shared/(k|v)$", P(None, dp, tp, None, None)),
+        (r"x(k|v)$", P(None, dp, tp, None, None)),
+        # MLA latent cache [L, B, S, r]
+        (r"layers/(c_kv|k_rope)$", P(None, dp, tp, None)),
+        (r"dense_layers/(k|v)$", P(None, dp, tp, None, None)),
+        (r"dense_layers/(c_kv|k_rope)$", P(None, dp, tp, None)),
+        # SSM states: batch over DP, heads over model
+        (r"mamba/h$", P(None, dp, tp, None, None)),
+        (r"mamba/conv$", P(None, dp, None, tp)),
+        (r"state/S$", P(None, dp, tp, None, None)),
+        (r"state/last_x(_c)?$", P(None, dp, tp)),
+        (r"length$", P(dp)),
+        (r".*", P()),
+    ]
+
+
+def cache_specs(cfg, cache_shape, multi_pod: bool, axis_sizes=None):
+    return tree_specs(cache_shape, cache_rules(cfg, multi_pod), axis_sizes)

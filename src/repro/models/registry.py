@@ -1,0 +1,47 @@
+"""Model registry: config -> model object (family dispatch) + exact counts."""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+from repro.models.config import ModelConfig
+from repro.models.moe import EPInfo
+from repro.models.transformer import LM
+from repro.models.whisper import WhisperModel
+from repro.models.zamba import ZambaModel
+
+
+def build_model(cfg: ModelConfig, mesh=None, multi_pod: bool = False):
+    """mesh=None -> local mode (single device, MoE oracle path)."""
+    ep = None
+    if mesh is not None and cfg.is_moe:
+        ep = EPInfo(inner_axis="model", pod_axis="pod" if multi_pod else None)
+    if cfg.is_encoder_decoder:
+        return WhisperModel(cfg, mesh=mesh, ep=ep, multi_pod=multi_pod)
+    if cfg.family == "hybrid":
+        return ZambaModel(cfg, mesh=mesh, ep=ep, multi_pod=multi_pod)
+    return LM(cfg, mesh=mesh, ep=ep, multi_pod=multi_pod)
+
+
+def param_shapes(model) -> Any:
+    """Abstract parameter tree (no allocation)."""
+    return jax.eval_shape(lambda k: model.init(k), jax.random.key(0))
+
+
+def count_params(model) -> int:
+    tree = param_shapes(model)
+    return int(sum(np.prod(l.shape) for l in jax.tree.leaves(tree)))
+
+
+def count_active_params(model) -> int:
+    """Active params/token: MoE counts top_k (+shared) experts, not all."""
+    cfg = model.cfg
+    total = count_params(model)
+    if not cfg.is_moe:
+        return total
+    expert_size = 3 * cfg.d_model * cfg.moe_dff
+    n_moe_layers = cfg.n_layers - cfg.first_dense_layers
+    inactive = n_moe_layers * (cfg.n_experts - cfg.top_k) * expert_size
+    return total - inactive

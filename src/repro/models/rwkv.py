@@ -1,0 +1,192 @@
+"""RWKV6 (Finch) block: attention-free time mixing with data-dependent decay.
+
+Per head of size N (=64): state S in R^{N x N} evolves as
+    y_t = r_t . (diag(u) k_t v_t^T + S_{t-1})
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T
+with the *data-dependent* per-channel decay  w_t = exp(-exp(w0 + LoRA(x_t)))
+— the headline RWKV6 feature.  Token shift uses the learned-mix (v5-style)
+form; the decay LoRA keeps the data dependence (simplification recorded in
+DESIGN.md §Arch-applicability).
+
+Training runs a ``lax.scan`` over time (the chunked GLA form is the recorded
+perf iteration); decode is the O(1) recurrent step — which is why rwkv6 is
+one of the two architectures that run the ``long_500k`` cell.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init, rms_norm
+
+LORA_R = 32
+
+
+def rwkv6_init(key, cfg, dtype) -> Dict:
+    d = cfg.d_model
+    ks = jax.random.split(key, 12)
+    H = d // cfg.rwkv_head_size
+    return {
+        # time mix
+        "mix_r": jnp.full((d,), 0.5, dtype), "mix_k": jnp.full((d,), 0.5, dtype),
+        "mix_v": jnp.full((d,), 0.5, dtype), "mix_w": jnp.full((d,), 0.5, dtype),
+        "mix_g": jnp.full((d,), 0.5, dtype),
+        "wr": dense_init(ks[0], d, d, dtype), "wk": dense_init(ks[1], d, d, dtype),
+        "wv": dense_init(ks[2], d, d, dtype), "wg": dense_init(ks[3], d, d, dtype),
+        "wo": dense_init(ks[4], d, d, dtype),
+        "w0": jnp.full((d,), -2.0, jnp.float32),         # base decay
+        "w_lora_a": dense_init(ks[5], d, LORA_R, dtype),
+        "w_lora_b": (jax.random.normal(ks[6], (LORA_R, d), jnp.float32)
+                     * 0.01).astype(dtype),
+        "u": (jax.random.normal(ks[7], (d,), jnp.float32) * 0.1).astype(jnp.float32),
+        "ln_x": jnp.ones((d,), dtype),
+        # channel mix
+        "cmix_k": jnp.full((d,), 0.5, dtype), "cmix_r": jnp.full((d,), 0.5, dtype),
+        "ck": dense_init(ks[8], d, cfg.d_ff, dtype),
+        "cv": dense_init(ks[9], cfg.d_ff, d, dtype),
+        "cr": dense_init(ks[10], d, d, dtype),
+    }
+
+
+def _shift(x: jax.Array, last: jax.Array) -> jax.Array:
+    """x_{t-1} with ``last`` as the t=-1 element.  x: [B, S, d], last [B, d]."""
+    return jnp.concatenate([last[:, None], x[:, :-1]], axis=1)
+
+
+def _time_mix_inputs(p, cfg, x, last_x):
+    xs = _shift(x, last_x)
+    mix = lambda m: x * m + xs * (1.0 - m)
+    r = mix(p["mix_r"]) @ p["wr"]
+    k = mix(p["mix_k"]) @ p["wk"]
+    v = mix(p["mix_v"]) @ p["wv"]
+    g = jax.nn.silu(mix(p["mix_g"]) @ p["wg"])
+    xw = mix(p["mix_w"])
+    w = jnp.exp(-jnp.exp(p["w0"] + (jnp.tanh(xw @ p["w_lora_a"]) @ p["w_lora_b"]
+                                    ).astype(jnp.float32)))   # [B,S,d] in (0,1)
+    return r, k, v, g, w
+
+
+def _wkv(r, k, v, w, u, state, head_size):
+    """One step.  r,k,v,w: [B, d]; state: [B, H, N, N] -> (y [B, d], state)."""
+    B, d = r.shape
+    H, N = d // head_size, head_size
+    rh = r.reshape(B, H, N).astype(jnp.float32)
+    kh = k.reshape(B, H, N).astype(jnp.float32)
+    vh = v.reshape(B, H, N).astype(jnp.float32)
+    wh = w.reshape(B, H, N)
+    uh = u.reshape(H, N)
+    kv = jnp.einsum("bhk,bhv->bhkv", kh, vh)
+    y = jnp.einsum("bhk,bhkv->bhv", rh, uh[None, :, :, None] * kv + state)
+    state = wh[..., None] * state + kv
+    return y.reshape(B, d), state
+
+
+def rwkv6_time_mix(p, cfg, x: jax.Array, state: Dict) -> Tuple[jax.Array, Dict]:
+    """Full-sequence time mixing via scan over time.  x: [B, S, d]."""
+    B, S, d = x.shape
+    r, k, v, g, w = _time_mix_inputs(p, cfg, x, state["last_x"])
+
+    def step(s, inp):
+        rt, kt, vt, wt = inp
+        y, s = _wkv(rt, kt, vt, wt, p["u"], s, cfg.rwkv_head_size)
+        return s, y
+
+    s_new, ys = jax.lax.scan(step, state["S"],
+                             (jnp.moveaxis(r, 1, 0), jnp.moveaxis(k, 1, 0),
+                              jnp.moveaxis(v, 1, 0), jnp.moveaxis(w, 1, 0)))
+    y = jnp.moveaxis(ys, 0, 1).astype(x.dtype)
+    y = rms_norm(y, p["ln_x"]) * g
+    out = y @ p["wo"]
+    return out, {"S": s_new, "last_x": x[:, -1]}
+
+
+def rwkv6_time_mix_chunked(p, cfg, x: jax.Array, state: Dict,
+                           chunk: int = 16) -> Tuple[jax.Array, Dict]:
+    """Chunked (GLA-style) time mixing — the TPU perf iteration.
+
+    The stepwise scan issues O(S) tiny VPU ops and per-step HBM round-trips
+    (the rwkv6 train_4k cell's 2666 s memory term).  Within a chunk of L
+    steps the recurrence is a decay-masked (L x L) matmul; only the
+    chunk-to-chunk state is carried (S/L scan steps).  All decay ratios are
+    exp(lw_a - lw_b) with a >= b, so every factor is <= 1 — no overflow.
+    Exactly equal to rwkv6_time_mix up to float round-off.
+    """
+    B, S, d = x.shape
+    H = d // cfg.rwkv_head_size
+    N = cfg.rwkv_head_size
+    L = min(chunk, S)
+    assert S % L == 0, (S, L)
+    nc = S // L
+    r, k, v, g, w = _time_mix_inputs(p, cfg, x, state["last_x"])
+    rh = r.reshape(B, nc, L, H, N).astype(jnp.float32)
+    kh = k.reshape(B, nc, L, H, N).astype(jnp.float32)
+    vh = v.reshape(B, nc, L, H, N).astype(jnp.float32)
+    lw = jnp.log(w.reshape(B, nc, L, H, N))          # negative
+    lcum = jnp.cumsum(lw, axis=2)                    # [B,nc,L,H,N]
+    lprev = jnp.concatenate([jnp.zeros_like(lcum[:, :, :1]),
+                             lcum[:, :, :-1]], axis=2)   # lw cum through t-1
+    uh = p["u"].reshape(H, N)
+
+    # intra-chunk: a[t, j] = sum_n r_t exp(lprev_t - lcum_j) k_j   (j < t)
+    ratio = jnp.exp(lprev[:, :, :, None] - lcum[:, :, None])  # [B,nc,L,L,H,N]
+    a = jnp.einsum("bcthn,bcjhn,bctjhn->bchtj", rh, kh, ratio)
+    tri = jnp.tril(jnp.ones((L, L), bool), k=-1)
+    a = jnp.where(tri[None, None, None], a, 0.0)
+    y = jnp.einsum("bchtj,bcjhn->bcthn", a, vh)
+    # diagonal bonus term: r_t . (u o k_t) v_t
+    diag = jnp.einsum("bcthn,bcthn->bcth", rh, uh[None, None, None] * kh)
+    y = y + diag[..., None] * vh
+
+    # inter-chunk: y_t += (r_t o exp(lprev_t)) S_prev ; scan over chunks
+    k_tail = kh * jnp.exp(lcum[:, :, -1:] - lcum)    # decay k_j to chunk end
+
+    def step(S0, inp):
+        r_dec, kt, vt, dec_all = inp                 # per-chunk tensors
+        y_in = jnp.einsum("bthn,bhnv->bthv", r_dec, S0)
+        S1 = S0 * dec_all[..., None] + jnp.einsum("bthn,bthv->bhnv", kt, vt)
+        return S1, y_in
+
+    r_dec = (rh * jnp.exp(lprev)).transpose(1, 0, 2, 3, 4)   # [nc,B,L,H,N]
+    k_t = k_tail.transpose(1, 0, 2, 3, 4)
+    v_t = vh.transpose(1, 0, 2, 3, 4)
+    dec_all = jnp.exp(lcum[:, :, -1]).transpose(1, 0, 2, 3)  # [nc,B,H,N]
+    S_new, y_inter = jax.lax.scan(step, state["S"], (r_dec, k_t, v_t, dec_all))
+    y = y + y_inter.transpose(1, 0, 2, 3, 4)
+    y = y.reshape(B, S, d).astype(x.dtype)
+    y = rms_norm(y, p["ln_x"]) * g
+    return y @ p["wo"], {"S": S_new, "last_x": x[:, -1]}
+
+
+def rwkv6_channel_mix(p, cfg, x: jax.Array, state: Dict) -> Tuple[jax.Array, Dict]:
+    xs = _shift(x, state["last_x_c"])
+    xk = x * p["cmix_k"] + xs * (1.0 - p["cmix_k"])
+    xr = x * p["cmix_r"] + xs * (1.0 - p["cmix_r"])
+    k = jnp.square(jax.nn.relu(xk @ p["ck"]))
+    return jax.nn.sigmoid(xr @ p["cr"]) * (k @ p["cv"]), {"last_x_c": x[:, -1]}
+
+
+def rwkv6_init_state(cfg, batch: int, dtype) -> Dict:
+    d = cfg.d_model
+    H = d // cfg.rwkv_head_size
+    N = cfg.rwkv_head_size
+    return {"S": jnp.zeros((batch, H, N, N), jnp.float32),
+            "last_x": jnp.zeros((batch, d), dtype),
+            "last_x_c": jnp.zeros((batch, d), dtype)}
+
+
+def rwkv6_block_apply(p, cfg, x, state, norm1, norm2):
+    """Pre-norm residual block: time mix then channel mix."""
+    chunked = getattr(cfg, "rwkv_chunk", 0)
+    tm_state = {k: state[k] for k in ("S", "last_x")}
+    if chunked and x.shape[1] % chunked == 0 and x.shape[1] > 1:
+        y, st_t = rwkv6_time_mix_chunked(p, cfg, rms_norm(x, norm1), tm_state,
+                                         chunk=chunked)
+    else:
+        y, st_t = rwkv6_time_mix(p, cfg, rms_norm(x, norm1), tm_state)
+    x = x + y
+    y, st_c = rwkv6_channel_mix(p, cfg, rms_norm(x, norm2),
+                                {"last_x_c": state["last_x_c"]})
+    x = x + y
+    return x, {**st_t, **st_c}

@@ -1,0 +1,164 @@
+"""Mamba2 (SSD) block — chunked matmul form for the TPU MXU.
+
+The CUDA Mamba2 kernel is a fused scan; the TPU adaptation (DESIGN.md §2)
+uses the SSD *block decomposition*: within a chunk of length L the recurrence
+is materialised as an (L x L) decay-masked attention-like matmul (MXU work),
+and only the chunk-to-chunk state is carried through a short ``lax.scan``
+(S / L steps instead of S).  ``mamba2_scan_ref`` is the sequential oracle.
+
+Recurrence (scalar-identity A per head, as in Mamba2):
+    h_t = exp(dt_t * A_h) * h_{t-1} + dt_t * x_t B_t^T        h: [P, N]
+    y_t = h_t C_t + D_h x_t
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init
+
+
+def mamba2_init(key, cfg, dtype) -> Dict:
+    d = cfg.d_model
+    d_in = cfg.ssm_expand * d
+    H = d_in // cfg.ssm_head_dim
+    N = cfg.ssm_state
+    ks = jax.random.split(key, 6)
+    return {
+        "in_proj": dense_init(ks[0], d, 2 * d_in, dtype),     # x, z (gate)
+        "bc_proj": dense_init(ks[1], d, 2 * N, dtype),        # B, C (1 group)
+        "dt_proj": dense_init(ks[2], d, H, dtype),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "a_log": jnp.zeros((H,), jnp.float32),                # A = -exp(a_log)
+        "d_skip": jnp.ones((H,), jnp.float32),
+        "conv_w": (jax.random.normal(ks[3], (cfg.ssm_conv, d_in), jnp.float32)
+                   * 0.1).astype(dtype),
+        "out_proj": dense_init(ks[4], d_in, d, dtype),
+    }
+
+
+def _project(p, cfg, x, conv_state=None):
+    """Shared projections.  x: [B, S, d].  Returns (u, z, B, C, dt, new_conv).
+
+    conv_state: [B, conv-1, d_in] tail of the previous tokens (decode)."""
+    B, S, d = x.shape
+    d_in = cfg.ssm_expand * d
+    H = d_in // cfg.ssm_head_dim
+    xz = x @ p["in_proj"]
+    xs, z = xz[..., :d_in], xz[..., d_in:]
+    # causal depthwise conv over the sequence
+    K = cfg.ssm_conv
+    if conv_state is None:
+        pad = jnp.zeros((B, K - 1, d_in), xs.dtype)
+    else:
+        pad = conv_state.astype(xs.dtype)
+    xpad = jnp.concatenate([pad, xs], axis=1)
+    new_conv = xpad[:, -(K - 1):] if K > 1 else jnp.zeros((B, 0, d_in), xs.dtype)
+    conv = sum(xpad[:, i:i + S] * p["conv_w"][i][None, None] for i in range(K))
+    u = jax.nn.silu(conv)
+    bc = x @ p["bc_proj"]
+    N = cfg.ssm_state
+    B_mat, C_mat = bc[..., :N], bc[..., N:]
+    dt = jax.nn.softplus((x @ p["dt_proj"]).astype(jnp.float32)
+                         + p["dt_bias"])                      # [B, S, H]
+    return u, z, B_mat, C_mat, dt, new_conv
+
+
+def mamba2_apply(p, cfg, x: jax.Array) -> jax.Array:
+    """Chunked SSD over a full sequence.  x: [B, S, d] -> [B, S, d]."""
+    B, S, d = x.shape
+    P = cfg.ssm_head_dim
+    N = cfg.ssm_state
+    L = min(cfg.ssm_chunk, S)
+    assert S % L == 0, (S, L)
+    nc = S // L
+    u, z, Bm, Cm, dt, _ = _project(p, cfg, x)
+    d_in = u.shape[-1]
+    H = d_in // P
+    uh = u.reshape(B, nc, L, H, P)
+    dtc = dt.reshape(B, nc, L, H)
+    Bc = Bm.reshape(B, nc, L, N).astype(jnp.float32)
+    Cc = Cm.reshape(B, nc, L, N).astype(jnp.float32)
+    A = -jnp.exp(p["a_log"])                                  # [H]
+    la = dtc * A[None, None, None]                            # log decay/step
+    lcum = jnp.cumsum(la, axis=2)                             # [B,nc,L,H]
+
+    # ---- intra-chunk: decay-masked (L x L) matmul ---------------------------
+    # M[i, j] = (C_i . B_j) * exp(lcum_i - lcum_j) * dt_j   for j <= i
+    cb = jnp.einsum("bcin,bcjn->bcij", Cc, Bc)                # [B,nc,L,L]
+    ratio = jnp.exp(lcum[:, :, :, None] - lcum[:, :, None])   # [B,nc,L,L,H]
+    tri = jnp.tril(jnp.ones((L, L), bool))
+    m = jnp.where(tri[None, None, :, :, None], cb[..., None] * ratio, 0.0)
+    m = m * dtc[:, :, None, :, :]                             # dt_j on source
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", m.astype(uh.dtype), uh)
+
+    # ---- chunk states + inter-chunk scan ------------------------------------
+    # state contribution of chunk c: sum_j exp(lcum_L - lcum_j) dt_j u_j B_j^T
+    tail = jnp.exp(lcum[:, :, -1:, :] - lcum)                 # [B,nc,L,H]
+    su = (uh * (tail * dtc)[..., None]).astype(jnp.float32)
+    s_chunk = jnp.einsum("bclhp,bcln->bchpn", su, Bc)         # [B,nc,H,P,N]
+    decay_chunk = jnp.exp(lcum[:, :, -1])                     # [B,nc,H]
+
+    def step(h, inp):
+        s_c, dec = inp                                        # [B,H,P,N],[B,H]
+        h_new = h * dec[..., None, None] + s_c
+        return h_new, h                                       # emit PREVIOUS
+
+    h0 = jnp.zeros((B, H, P, N), jnp.float32)
+    _, h_prevs = jax.lax.scan(step, h0,
+                              (jnp.moveaxis(s_chunk, 1, 0),
+                               jnp.moveaxis(decay_chunk, 1, 0)))
+    h_prevs = jnp.moveaxis(h_prevs, 0, 1)                     # [B,nc,H,P,N]
+
+    # y_inter_i = C_i . (exp(lcum_i) * h_prev)
+    dec_i = jnp.exp(lcum)                                     # [B,nc,L,H]
+    y_inter = jnp.einsum("bcin,bchpn->bcihp", Cc, h_prevs) * dec_i[..., None]
+    y = (y_intra.astype(jnp.float32) + y_inter)               # [B,nc,L,H,P]
+    y = y + uh.astype(jnp.float32) * p["d_skip"][None, None, None, :, None]
+    y = y.reshape(B, S, d_in).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    return y @ p["out_proj"]
+
+
+def mamba2_init_state(cfg, batch: int, dtype) -> Dict:
+    d_in = cfg.ssm_expand * cfg.d_model
+    H = d_in // cfg.ssm_head_dim
+    return {
+        "h": jnp.zeros((batch, H, cfg.ssm_head_dim, cfg.ssm_state), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, d_in), dtype),
+    }
+
+
+def mamba2_decode(p, cfg, x: jax.Array, state: Dict) -> Tuple[jax.Array, Dict]:
+    """One-token step.  x: [B, 1, d]."""
+    B = x.shape[0]
+    P, N = cfg.ssm_head_dim, cfg.ssm_state
+    u, z, Bm, Cm, dt, new_conv = _project(p, cfg, x, state["conv"])
+    d_in = u.shape[-1]
+    H = d_in // P
+    uh = u.reshape(B, H, P).astype(jnp.float32)
+    A = -jnp.exp(p["a_log"])
+    dec = jnp.exp(dt[:, 0] * A[None])                         # [B, H]
+    h = state["h"] * dec[..., None, None] + jnp.einsum(
+        "bhp,bn->bhpn", uh * dt[:, 0][..., None], Bm[:, 0].astype(jnp.float32))
+    y = jnp.einsum("bhpn,bn->bhp", h, Cm[:, 0].astype(jnp.float32))
+    y = y + uh * p["d_skip"][None, :, None]
+    y = y.reshape(B, 1, d_in).astype(x.dtype) * jax.nn.silu(z)
+    return y @ p["out_proj"], {"h": h, "conv": new_conv}
+
+
+# ---------------------------------------------------------------------------
+# sequential oracle
+# ---------------------------------------------------------------------------
+
+def mamba2_scan_ref(p, cfg, x: jax.Array) -> jax.Array:
+    """Step-by-step recurrence (slow, exact) — the test oracle."""
+    B, S, d = x.shape
+    state = mamba2_init_state(cfg, B, x.dtype)
+    outs = []
+    for t in range(S):
+        y, state = mamba2_decode(p, cfg, x[:, t:t + 1], state)
+        outs.append(y)
+    return jnp.concatenate(outs, axis=1)

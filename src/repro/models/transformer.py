@@ -1,0 +1,395 @@
+"""Decoder-only LM assembly (dense, MoE, VLM, SSM, hybrid families).
+
+Layers are stacked on a leading axis and driven by ``lax.scan`` (compile time
+stays flat in depth); the layer body is wrapped in ``jax.checkpoint`` when
+``cfg.remat``.  The same stacked layout is what the FSDP sharding rules and
+the checkpoint format address.
+
+The public surface is the :class:`LM` protocol used by launch/ and tests:
+    init(key) -> params
+    loss(params, batch) -> scalar
+    prefill(params, tokens) -> (last logits, cache)
+    decode_step(params, cache, tokens, lengths) -> (logits, cache)
+    init_cache(batch, max_seq) -> cache pytree
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models.actsharding import ActShard
+from repro.models import moe as moe_mod
+from repro.models import rwkv as rwkv_mod
+from repro.models import ssm as ssm_mod
+from repro.models.common import (chunked_xent, dense_init, dtype_of,
+                                 embed_init, head_logits, rms_norm)
+from repro.models.config import ModelConfig
+from repro.models.ffn import ffn_apply, ffn_init
+
+
+# ---------------------------------------------------------------------------
+# single transformer block (dense or moe)
+# ---------------------------------------------------------------------------
+
+def block_init(key, cfg: ModelConfig, dtype, *, moe: bool, d_ff: int) -> Dict:
+    k1, k2 = jax.random.split(key)
+    p = {"norm1": jnp.zeros((cfg.d_model,), dtype) if cfg.post_norms
+         else jnp.ones((cfg.d_model,), dtype),
+         "norm2": jnp.zeros((cfg.d_model,), dtype) if cfg.post_norms
+         else jnp.ones((cfg.d_model,), dtype)}
+    if cfg.post_norms:  # gemma2 sandwich norms (stored as w-1 -> zeros)
+        p["norm1_post"] = jnp.zeros((cfg.d_model,), dtype)
+        p["norm2_post"] = jnp.zeros((cfg.d_model,), dtype)
+    if cfg.mla_kv_lora:
+        p["attn"] = attn.mla_init(k1, cfg, dtype)
+    else:
+        p["attn"] = attn.gqa_init(k1, cfg, dtype)
+    if moe:
+        p["moe"] = moe_mod.moe_init(k2, cfg, dtype)
+    else:
+        p["ffn"] = ffn_init(k2, cfg.d_model, d_ff, dtype)
+    return p
+
+
+def _norm(cfg, x, w):
+    return rms_norm(x, w, plus_one=cfg.post_norms)
+
+
+def block_apply(p, cfg: ModelConfig, x: jax.Array, *,
+                window: Optional[jax.Array], mesh=None,
+                ep: Optional[moe_mod.EPInfo] = None, cs_qkv=None) -> jax.Array:
+    h = _norm(cfg, x, p["norm1"])
+    if cfg.mla_kv_lora:
+        h = attn.mla_apply(p["attn"], cfg, h, cs_qkv=cs_qkv)
+    else:
+        h = attn.gqa_apply(p["attn"], cfg, h, window=window, cs_qkv=cs_qkv)
+    if cfg.post_norms:
+        h = _norm(cfg, h, p["norm1_post"])
+    x = x + h
+    h = _norm(cfg, x, p["norm2"])
+    if "moe" in p:
+        if mesh is not None:
+            h = moe_mod.moe_apply_sharded(p["moe"], cfg, h, ep, mesh)
+        else:
+            h = moe_mod.moe_apply_local(p["moe"], cfg, h)
+    else:
+        act = "gelu" if cfg.family == "audio" else "silu"
+        h = ffn_apply(p["ffn"], h, act=act)
+    if cfg.post_norms:
+        h = _norm(cfg, h, p["norm2_post"])
+    return x + h
+
+
+def block_decode(p, cfg: ModelConfig, x: jax.Array, cache: Dict,
+                 length: jax.Array, *, window: Optional[jax.Array] = None,
+                 mesh=None, ep=None) -> Tuple[jax.Array, Dict]:
+    h = _norm(cfg, x, p["norm1"])
+    if cfg.mla_kv_lora:
+        h, cache = attn.mla_decode(p["attn"], cfg, h, cache, length)
+    else:
+        h, cache = attn.gqa_decode(p["attn"], cfg, h, cache, length,
+                                   window=window)
+    if cfg.post_norms:
+        h = _norm(cfg, h, p["norm1_post"])
+    x = x + h
+    h = _norm(cfg, x, p["norm2"])
+    if "moe" in p:
+        if mesh is not None:
+            h = moe_mod.moe_apply_sharded(p["moe"], cfg, h, ep, mesh)
+        else:
+            h = moe_mod.moe_apply_local(p["moe"], cfg, h)
+    else:
+        act = "gelu" if cfg.family == "audio" else "silu"
+        h = ffn_apply(p["ffn"], h, act=act)
+    if cfg.post_norms:
+        h = _norm(cfg, h, p["norm2_post"])
+    return x + h, cache
+
+
+def _layer_windows(cfg: ModelConfig, n_layers: int, max_seq: int) -> jnp.ndarray:
+    """Per-layer attention window (gemma2: even layers local)."""
+    if cfg.alt_local_global and cfg.sliding_window:
+        w = [cfg.sliding_window if i % 2 == 0 else max_seq
+             for i in range(n_layers)]
+    else:
+        w = [max_seq] * n_layers
+    return jnp.asarray(w, jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# LM model object
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class LM(ActShard):
+    cfg: ModelConfig
+    mesh: Any = None                      # None -> local (smoke/test) mode
+    ep: Optional[moe_mod.EPInfo] = None
+    multi_pod: bool = False
+
+    # ---- params -------------------------------------------------------------
+    def init(self, key) -> Dict:
+        cfg = self.cfg
+        dtype = dtype_of(cfg)
+        keys = jax.random.split(key, 4)
+        p: Dict[str, Any] = {
+            "embed": embed_init(keys[0], cfg.vocab, cfg.d_model, dtype),
+            "final_norm": (jnp.zeros if cfg.post_norms else jnp.ones)(
+                (cfg.d_model,), dtype),
+        }
+        if not cfg.tie_embeddings:
+            p["head"] = dense_init(keys[1], cfg.d_model, cfg.vocab, dtype)
+        if cfg.family == "ssm":
+            layer_keys = jax.random.split(keys[2], cfg.n_layers)
+            p["layers"] = jax.vmap(
+                lambda k: {"block": rwkv_mod.rwkv6_init(k, cfg, dtype),
+                           "norm1": jnp.ones((cfg.d_model,), dtype),
+                           "norm2": jnp.ones((cfg.d_model,), dtype)})(layer_keys)
+            return p
+        n_dense = cfg.first_dense_layers if cfg.is_moe else 0
+        n_stack = cfg.n_layers - n_dense
+        if n_dense:
+            dk = jax.random.split(keys[1], n_dense)
+            p["dense_layers"] = jax.vmap(
+                lambda k: block_init(k, cfg, dtype, moe=False, d_ff=cfg.d_ff)
+            )(dk)
+        layer_keys = jax.random.split(keys[2], n_stack)
+        p["layers"] = jax.vmap(
+            lambda k: block_init(k, cfg, dtype, moe=cfg.is_moe,
+                                 d_ff=cfg.d_ff))(layer_keys)
+        return p
+
+    def head_matrix(self, params):
+        if self.cfg.tie_embeddings:
+            return params["embed"].T
+        return params["head"]
+
+    # ---- forward ------------------------------------------------------------
+    def hidden(self, params, tokens: jax.Array) -> jax.Array:
+        """tokens [B, S] -> hidden [B, S, d]."""
+        cfg = self.cfg
+        x = params["embed"][tokens]
+        if cfg.embed_scale:
+            x = x * jnp.sqrt(jnp.float32(cfg.d_model)).astype(x.dtype)
+        x = self.cs_hidden(x)
+        if cfg.family == "ssm":
+            return self._rwkv_hidden(params, x)
+        S = tokens.shape[1]
+        n_dense = cfg.first_dense_layers if cfg.is_moe else 0
+        if n_dense:
+            for i in range(n_dense):
+                lp = jax.tree.map(lambda a: a[i], params["dense_layers"])
+                x = block_apply(lp, cfg, x, window=None, mesh=self.mesh,
+                                ep=self.ep, cs_qkv=self.cs_qkv)
+        windows = _layer_windows(cfg, cfg.n_layers - n_dense, S)
+        has_window = bool(cfg.alt_local_global and cfg.sliding_window)
+
+        def body(x, inp):
+            lp, w = inp
+            lp = self.cs_params(lp)      # pins per-layer weight-grad sharding
+            x = self.cs_full_hidden(x)   # SP "g": gather seq before matmuls
+            y = block_apply(lp, cfg, x, window=w if has_window else None,
+                            mesh=self.mesh, ep=self.ep, cs_qkv=self.cs_qkv)
+            return self.cs_hidden(y), None
+
+        body_fn = jax.checkpoint(body) if cfg.remat else body
+        x, _ = jax.lax.scan(body_fn, x, (params["layers"], windows))
+        return _norm(cfg, x, params["final_norm"])
+
+    def _rwkv_hidden(self, params, x):
+        cfg = self.cfg
+        B = x.shape[0]
+        state0 = rwkv_mod.rwkv6_init_state(cfg, B, x.dtype)
+
+        def body(x, lp):
+            lp = self.cs_params(lp)
+            x = self.cs_full_hidden(x)
+            y, _ = rwkv_mod.rwkv6_block_apply(lp["block"], cfg, x, state0,
+                                              lp["norm1"], lp["norm2"])
+            return self.cs_hidden(y), None
+
+        body_fn = jax.checkpoint(body) if cfg.remat else body
+        x, _ = jax.lax.scan(body_fn, x, params["layers"])
+        return _norm(cfg, x, params["final_norm"])
+
+    def loss(self, params, batch: Dict) -> jax.Array:
+        h = self.hidden(params, batch["tokens"])
+        return chunked_xent(h, self.head_matrix(params), batch["labels"],
+                            chunk=self.cfg.xent_chunk,
+                            softcap=self.cfg.final_softcap,
+                            cs_logits=self.cs_logits)
+
+    # ---- serving ------------------------------------------------------------
+    def init_cache(self, batch: int, max_seq: int) -> Dict:
+        cfg = self.cfg
+        dtype = dtype_of(cfg)
+        if cfg.family == "ssm":
+            state = rwkv_mod.rwkv6_init_state(cfg, batch, dtype)
+            return {"state": jax.tree.map(
+                lambda a: jnp.broadcast_to(a, (cfg.n_layers,) + a.shape),
+                state), "length": jnp.zeros((batch,), jnp.int32)}
+        n_dense = cfg.first_dense_layers if cfg.is_moe else 0
+        mk = (attn.mla_init_cache if cfg.mla_kv_lora else attn.gqa_init_cache)
+        one = mk(cfg, batch, max_seq, dtype)
+        cache = {"layers": jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (cfg.n_layers - n_dense,) + a.shape),
+            one), "length": jnp.zeros((batch,), jnp.int32)}
+        if n_dense:
+            cache["dense_layers"] = jax.tree.map(
+                lambda a: jnp.broadcast_to(a, (n_dense,) + a.shape), one)
+        return cache
+
+    def decode_step(self, params, cache: Dict, tokens: jax.Array
+                    ) -> Tuple[jax.Array, Dict]:
+        """tokens [B, 1] -> (logits [B, 1, V], cache)."""
+        cfg = self.cfg
+        length = cache["length"]
+        x = params["embed"][tokens]
+        if cfg.embed_scale:
+            x = x * jnp.sqrt(jnp.float32(cfg.d_model)).astype(x.dtype)
+        if cfg.family == "ssm":
+            x, new_states = self._rwkv_decode(params, x, cache)
+            out_cache = {"state": new_states, "length": length + 1}
+        else:
+            n_dense = cfg.first_dense_layers if cfg.is_moe else 0
+            out_cache = {"length": length + 1}
+            if n_dense:
+                new = []
+                for i in range(n_dense):
+                    lp = jax.tree.map(lambda a: a[i], params["dense_layers"])
+                    cl = jax.tree.map(lambda a: a[i], cache["dense_layers"])
+                    x, cl = block_decode(lp, cfg, x, cl, length,
+                                         window=None, mesh=self.mesh,
+                                         ep=self.ep)
+                    new.append(cl)
+                out_cache["dense_layers"] = jax.tree.map(
+                    lambda *a: jnp.stack(a), *new)
+            max_seq = jax.tree.leaves(cache["layers"])[0].shape[2]
+            windows = _layer_windows(cfg, cfg.n_layers - n_dense, max_seq)
+            has_window = bool(cfg.alt_local_global and cfg.sliding_window)
+
+            def body(x, inp):
+                lp, cl, w = inp
+                y, cl = block_decode(lp, cfg, x, cl, length,
+                                     window=w if has_window else None,
+                                     mesh=self.mesh, ep=self.ep)
+                return self.cs_hidden(y), cl
+
+            x, new_cache = jax.lax.scan(body, x,
+                                        (params["layers"], cache["layers"],
+                                         windows))
+            out_cache["layers"] = new_cache
+        x = _norm(cfg, x, params["final_norm"])
+        logits = head_logits(x, self.head_matrix(params), cfg.final_softcap)
+        return logits, out_cache
+
+    def _rwkv_decode(self, params, x, cache):
+        cfg = self.cfg
+
+        def body(x, inp):
+            lp, st = inp
+            y, st = rwkv_mod.rwkv6_block_apply(lp["block"], cfg, x, st,
+                                               lp["norm1"], lp["norm2"])
+            return y, st
+
+        x, states = jax.lax.scan(body, x, (params["layers"], cache["state"]))
+        return x, states
+
+    def prefill(self, params, tokens: jax.Array) -> Tuple[jax.Array, Dict]:
+        """Compute hidden over the prompt and build the cache in one pass.
+
+        Returns (logits for the last position [B, V], cache filled to S).
+        For attention families the per-layer K/V come out of the scan; for
+        SSM the final state does.
+        """
+        cfg = self.cfg
+        B, S = tokens.shape
+        x = params["embed"][tokens]
+        if cfg.embed_scale:
+            x = x * jnp.sqrt(jnp.float32(cfg.d_model)).astype(x.dtype)
+        length = jnp.full((B,), S, jnp.int32)
+        if cfg.family == "ssm":
+            state0 = rwkv_mod.rwkv6_init_state(cfg, B, x.dtype)
+
+            def body(x, lp):
+                y, st = rwkv_mod.rwkv6_block_apply(lp["block"], cfg, x, state0,
+                                                   lp["norm1"], lp["norm2"])
+                return y, st
+
+            body_fn = jax.checkpoint(body) if cfg.remat else body
+            x, states = jax.lax.scan(body_fn, x, params["layers"])
+            cache = {"state": states, "length": length}
+        else:
+            n_dense = cfg.first_dense_layers if cfg.is_moe else 0
+            cache = {"length": length}
+            dtype = dtype_of(cfg)
+            if n_dense:
+                new = []
+                for i in range(n_dense):
+                    lp = jax.tree.map(lambda a: a[i], params["dense_layers"])
+                    x, c = self._prefill_block(lp, x)
+                    new.append(c)
+                cache["dense_layers"] = jax.tree.map(
+                    lambda *a: jnp.stack(a), *new)
+            windows = _layer_windows(cfg, cfg.n_layers - n_dense, S)
+            has_window = bool(cfg.alt_local_global and cfg.sliding_window)
+
+            def body(x, inp):
+                lp, w = inp
+                x = self.cs_full_hidden(x)
+                x, c = self._prefill_block(lp, x,
+                                           window=w if has_window else None)
+                return self.cs_hidden(x), jax.tree.map(self.cs_kv, c)
+
+            body_fn = jax.checkpoint(body) if cfg.remat else body
+            x, caches = jax.lax.scan(body_fn, x, (params["layers"], windows))
+            cache["layers"] = caches
+        x = _norm(cfg, x, params["final_norm"])
+        logits = head_logits(x[:, -1], self.head_matrix(params),
+                             cfg.final_softcap)
+        return logits, cache
+
+    def _prefill_block(self, lp, x, window=None):
+        """Like block_apply but also returns the layer cache."""
+        cfg = self.cfg
+        h = _norm(cfg, x, lp["norm1"])
+        if cfg.mla_kv_lora:
+            B, S, _ = h.shape
+            positions = jnp.arange(S)[None, :]
+            q_nope, q_rope, c_kv, k_rope = attn._mla_qkv(lp["attn"], cfg, h,
+                                                         positions)
+            cache = {"c_kv": c_kv, "k_rope": k_rope}
+            y = attn.mla_apply(lp["attn"], cfg, h, cs_qkv=self.cs_qkv)
+        else:
+            B, S, _ = h.shape
+            positions = jnp.arange(S)[None, :]
+            q, k, v = attn._project_qkv(lp["attn"], cfg, h, positions)
+            q, k, v = self.cs_qkv(q, k, v) if self.mesh is not None else (q, k, v)
+            cache = {"k": k, "v": v}
+            from repro.models.common import blocked_attention
+            y = blocked_attention(q, k, v, causal=True, window=window,
+                                  softcap=cfg.attn_softcap,
+                                  block_q=cfg.attn_block_q,
+                                  block_kv=cfg.attn_block_kv)
+            y = y.reshape(B, S, -1) @ lp["attn"]["wo"]
+        if cfg.post_norms:
+            y = _norm(cfg, y, lp["norm1_post"])
+        x = x + y
+        h = _norm(cfg, x, lp["norm2"])
+        if "moe" in lp:
+            if self.mesh is not None:
+                h = moe_mod.moe_apply_sharded(lp["moe"], cfg, h, self.ep,
+                                              self.mesh)
+            else:
+                h = moe_mod.moe_apply_local(lp["moe"], cfg, h)
+        else:
+            act = "gelu" if cfg.family == "audio" else "silu"
+            h = ffn_apply(lp["ffn"], h, act=act)
+        if cfg.post_norms:
+            h = _norm(cfg, h, lp["norm2_post"])
+        return x + h, cache

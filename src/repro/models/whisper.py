@@ -1,0 +1,240 @@
+"""Whisper-style encoder-decoder backbone (audio family).
+
+The conv audio frontend is a STUB per the assignment: ``input_specs`` feeds
+precomputed frame embeddings [B, encoder_seq, d] (what the two conv layers
+would produce).  Positions are sinusoidal for both stacks (whisper uses
+sinusoidal encoder positions; we use them for the decoder too instead of a
+learned table so ``decode_32k`` scales past the original 448 — recorded in
+DESIGN.md).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import attention as attn
+from repro.models.actsharding import ActShard
+from repro.models.common import (blocked_attention, cache_decode_attention,
+                                 chunked_xent, dense_init, dtype_of,
+                                 embed_init, head_logits, rms_norm)
+from repro.models.config import ModelConfig
+from repro.models.ffn import ffn_apply, ffn_init
+
+
+def sinusoidal(positions: jax.Array, d: int) -> jax.Array:
+    """positions [...]-shaped int -> [..., d] float32 sinusoids."""
+    half = d // 2
+    freqs = jnp.exp(-np.log(10000.0) * jnp.arange(half) / max(half - 1, 1))
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def _xattn_init(key, cfg, dtype) -> Dict:
+    d, dh = cfg.d_model, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    return {"wq": dense_init(ks[0], d, cfg.n_heads * dh, dtype),
+            "wk": dense_init(ks[1], d, cfg.n_kv_heads * dh, dtype),
+            "wv": dense_init(ks[2], d, cfg.n_kv_heads * dh, dtype),
+            "wo": dense_init(ks[3], cfg.n_heads * dh, d, dtype)}
+
+
+def _xattn_kv(p, cfg, enc: jax.Array):
+    B, T, _ = enc.shape
+    dh, Hkv = cfg.head_dim, cfg.n_kv_heads
+    k = (enc @ p["wk"]).reshape(B, T, Hkv, dh)
+    v = (enc @ p["wv"]).reshape(B, T, Hkv, dh)
+    return k, v
+
+
+def _xattn_apply(p, cfg, x: jax.Array, k: jax.Array, v: jax.Array) -> jax.Array:
+    B, S, _ = x.shape
+    dh, Hkv = cfg.head_dim, cfg.n_kv_heads
+    G = cfg.n_heads // Hkv
+    q = (x @ p["wq"]).reshape(B, S, Hkv, G, dh)
+    out = blocked_attention(q, k, v, causal=False,
+                            block_q=cfg.attn_block_q,
+                            block_kv=cfg.attn_block_kv)
+    return out.reshape(B, S, -1) @ p["wo"]
+
+
+@dataclasses.dataclass
+class WhisperModel(ActShard):
+    cfg: ModelConfig
+    mesh: Any = None
+    ep: Any = None
+    multi_pod: bool = False
+
+    # ---- params ---------------------------------------------------------------
+    def init(self, key) -> Dict:
+        cfg = self.cfg
+        dtype = dtype_of(cfg)
+        ks = jax.random.split(key, 6)
+
+        def enc_layer(k):
+            k1, k2 = jax.random.split(k)
+            return {"norm1": jnp.ones((cfg.d_model,), dtype),
+                    "attn": attn.gqa_init(k1, cfg, dtype),
+                    "norm2": jnp.ones((cfg.d_model,), dtype),
+                    "ffn": ffn_init(k2, cfg.d_model, cfg.d_ff, dtype)}
+
+        def dec_layer(k):
+            k1, k2, k3 = jax.random.split(k, 3)
+            return {"norm1": jnp.ones((cfg.d_model,), dtype),
+                    "attn": attn.gqa_init(k1, cfg, dtype),
+                    "norm_x": jnp.ones((cfg.d_model,), dtype),
+                    "xattn": _xattn_init(k2, cfg, dtype),
+                    "norm2": jnp.ones((cfg.d_model,), dtype),
+                    "ffn": ffn_init(k3, cfg.d_model, cfg.d_ff, dtype)}
+
+        return {
+            "embed": embed_init(ks[0], cfg.vocab, cfg.d_model, dtype),
+            "enc_layers": jax.vmap(enc_layer)(
+                jax.random.split(ks[1], cfg.encoder_layers)),
+            "enc_norm": jnp.ones((cfg.d_model,), dtype),
+            "dec_layers": jax.vmap(dec_layer)(
+                jax.random.split(ks[2], cfg.n_layers)),
+            "final_norm": jnp.ones((cfg.d_model,), dtype),
+        }
+
+    def head_matrix(self, params):
+        return params["embed"].T
+
+    # ---- encoder ---------------------------------------------------------------
+    def encode(self, params, frames: jax.Array) -> jax.Array:
+        """frames [B, T, d] (stubbed conv output) -> encoder hidden."""
+        cfg = self.cfg
+        x = frames.astype(dtype_of(cfg))
+        x = x + sinusoidal(jnp.arange(x.shape[1]), cfg.d_model
+                           ).astype(x.dtype)[None]
+
+        def body(x, lp):
+            lp = self.cs_params(lp)
+            x = self.cs_full_hidden(x)
+            h = rms_norm(x, lp["norm1"])
+            h = attn.gqa_apply(lp["attn"], cfg, h, causal=False,
+                               cs_qkv=self.cs_qkv)
+            x = x + h
+            h = rms_norm(x, lp["norm2"])
+            return self.cs_hidden(x + ffn_apply(lp["ffn"], h, act="gelu")), None
+
+        body_fn = jax.checkpoint(body) if cfg.remat else body
+        x, _ = jax.lax.scan(body_fn, x, params["enc_layers"])
+        return rms_norm(x, params["enc_norm"])
+
+    # ---- decoder (training) -----------------------------------------------------
+    def hidden(self, params, tokens: jax.Array, enc: jax.Array) -> jax.Array:
+        cfg = self.cfg
+        x = params["embed"][tokens]
+        x = x + sinusoidal(jnp.arange(x.shape[1]), cfg.d_model
+                           ).astype(x.dtype)[None]
+
+        def body(x, lp):
+            lp = self.cs_params(lp)
+            x = self.cs_full_hidden(x)
+            h = rms_norm(x, lp["norm1"])
+            h = attn.gqa_apply(lp["attn"], cfg, h, causal=True,
+                               cs_qkv=self.cs_qkv)
+            x = x + h
+            h = rms_norm(x, lp["norm_x"])
+            k, v = _xattn_kv(lp["xattn"], cfg, enc)
+            x = x + _xattn_apply(lp["xattn"], cfg, h, k, v)
+            h = rms_norm(x, lp["norm2"])
+            return self.cs_hidden(x + ffn_apply(lp["ffn"], h, act="gelu")), None
+
+        body_fn = jax.checkpoint(body) if cfg.remat else body
+        x, _ = jax.lax.scan(body_fn, x, params["dec_layers"])
+        return rms_norm(x, params["final_norm"])
+
+    def loss(self, params, batch: Dict) -> jax.Array:
+        enc = self.encode(params, batch["frames"])
+        h = self.hidden(params, batch["tokens"], enc)
+        return chunked_xent(h, self.head_matrix(params), batch["labels"],
+                            chunk=self.cfg.xent_chunk,
+                            cs_logits=self.cs_logits)
+
+    # ---- serving ------------------------------------------------------------------
+    def init_cache(self, batch: int, max_seq: int) -> Dict:
+        cfg = self.cfg
+        dtype = dtype_of(cfg)
+        dh, Hkv, L = cfg.head_dim, cfg.n_kv_heads, cfg.n_layers
+        return {
+            "layers": {
+                "k": jnp.zeros((L, batch, max_seq, Hkv, dh), dtype),
+                "v": jnp.zeros((L, batch, max_seq, Hkv, dh), dtype),
+            },
+            # cross-attention K/V computed once from the encoder output
+            "xk": jnp.zeros((L, batch, cfg.encoder_seq, Hkv, dh), dtype),
+            "xv": jnp.zeros((L, batch, cfg.encoder_seq, Hkv, dh), dtype),
+            "length": jnp.zeros((batch,), jnp.int32),
+        }
+
+    def prefill(self, params, tokens: jax.Array, frames: jax.Array
+                ) -> Tuple[jax.Array, Dict]:
+        cfg = self.cfg
+        B, S = tokens.shape
+        enc = self.encode(params, frames)
+        x = params["embed"][tokens]
+        x = x + sinusoidal(jnp.arange(S), cfg.d_model).astype(x.dtype)[None]
+
+        def body(x, lp):
+            h = rms_norm(x, lp["norm1"])
+            positions = jnp.arange(S)[None, :]
+            q, k, v = attn._project_qkv(lp["attn"], cfg, h, positions)
+            if self.mesh is not None:
+                q, k, v = self.cs_qkv(q, k, v)
+            y = blocked_attention(q, k, v, causal=True,
+                                  block_q=cfg.attn_block_q,
+                                  block_kv=cfg.attn_block_kv)
+            x = x + y.reshape(B, S, -1) @ lp["attn"]["wo"]
+            h = rms_norm(x, lp["norm_x"])
+            xk, xv = _xattn_kv(lp["xattn"], cfg, enc)
+            x = x + _xattn_apply(lp["xattn"], cfg, h, xk, xv)
+            h = rms_norm(x, lp["norm2"])
+            x = x + ffn_apply(lp["ffn"], h, act="gelu")
+            cache = jax.tree.map(self.cs_kv, {"k": k, "v": v,
+                                              "xk": xk, "xv": xv})
+            return self.cs_hidden(x), cache
+
+        body_fn = jax.checkpoint(body) if cfg.remat else body
+        x, caches = jax.lax.scan(body_fn, x, params["dec_layers"])
+        x = rms_norm(x, params["final_norm"])
+        logits = head_logits(x[:, -1], self.head_matrix(params))
+        cache = {"layers": {"k": caches["k"], "v": caches["v"]},
+                 "xk": caches["xk"], "xv": caches["xv"],
+                 "length": jnp.full((B,), S, jnp.int32)}
+        return logits, cache
+
+    def decode_step(self, params, cache: Dict, tokens: jax.Array
+                    ) -> Tuple[jax.Array, Dict]:
+        cfg = self.cfg
+        B = tokens.shape[0]
+        length = cache["length"]
+        x = params["embed"][tokens]
+        x = x + sinusoidal(length[:, None], cfg.d_model).astype(x.dtype)
+
+        def body(x, inp):
+            lp, cl, xk, xv = inp
+            h = rms_norm(x, lp["norm1"])
+            y, cl = attn.gqa_decode(lp["attn"], cfg, h, cl, length)
+            x = x + y
+            h = rms_norm(x, lp["norm_x"])
+            dh, Hkv = cfg.head_dim, cfg.n_kv_heads
+            G = cfg.n_heads // Hkv
+            q = (h @ lp["xattn"]["wq"]).reshape(B, 1, Hkv, G, dh)
+            enc_len = jnp.full((B,), cfg.encoder_seq, jnp.int32)
+            y = cache_decode_attention(q, xk, xv, enc_len)
+            x = x + y.reshape(B, 1, -1) @ lp["xattn"]["wo"]
+            h = rms_norm(x, lp["norm2"])
+            x = x + ffn_apply(lp["ffn"], h, act="gelu")
+            return x, cl
+
+        x, new_cache = jax.lax.scan(
+            body, x, (params["dec_layers"], cache["layers"],
+                      cache["xk"], cache["xv"]))
+        x = rms_norm(x, params["final_norm"])
+        logits = head_logits(x, self.head_matrix(params))
+        return logits, {**cache, "layers": new_cache, "length": length + 1}

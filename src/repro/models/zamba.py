@@ -1,0 +1,204 @@
+"""Zamba2-style hybrid: Mamba2 backbone + a SHARED attention block.
+
+54 Mamba2 blocks; one parameter-shared (attention + MLP) block is applied
+every ``shared_attn_every`` layers (9 applications for 54/6).  Zamba2's
+per-invocation LoRA adapters and embedding-concat input are simplified to a
+plain residual application of the shared block (recorded in DESIGN.md
+§Arch-applicability).
+
+Because the sequence mixer is a state-space scan, the ``long_500k`` decode
+cell runs here: the Mamba2 state is O(1) in context, and the shared block's
+KV cache (one per application) is the only context-length memory.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models.actsharding import ActShard
+from repro.models import ssm as ssm_mod
+from repro.models.common import (chunked_xent, dtype_of, embed_init,
+                                 head_logits, rms_norm)
+from repro.models.config import ModelConfig
+from repro.models.ffn import ffn_apply, ffn_init
+
+
+@dataclasses.dataclass
+class ZambaModel(ActShard):
+    cfg: ModelConfig
+    mesh: Any = None
+    ep: Any = None
+    multi_pod: bool = False
+
+    @property
+    def n_apps(self) -> int:
+        return self.cfg.n_layers // self.cfg.shared_attn_every
+
+    def init(self, key) -> Dict:
+        cfg = self.cfg
+        dtype = dtype_of(cfg)
+        ks = jax.random.split(key, 5)
+
+        def mamba_layer(k):
+            return {"norm": jnp.ones((cfg.d_model,), dtype),
+                    "mamba": ssm_mod.mamba2_init(k, cfg, dtype)}
+
+        k1, k2 = jax.random.split(ks[2])
+        return {
+            "embed": embed_init(ks[0], cfg.vocab, cfg.d_model, dtype),
+            "mamba_layers": jax.vmap(mamba_layer)(
+                jax.random.split(ks[1], cfg.n_layers)),
+            "shared": {"norm1": jnp.ones((cfg.d_model,), dtype),
+                       "attn": attn.gqa_init(k1, cfg, dtype),
+                       "norm2": jnp.ones((cfg.d_model,), dtype),
+                       "ffn": ffn_init(k2, cfg.d_model, cfg.d_ff, dtype)},
+            "final_norm": jnp.ones((cfg.d_model,), dtype),
+        }
+
+    def head_matrix(self, params):
+        return params["embed"].T
+
+    # ---- training -------------------------------------------------------------
+    def hidden(self, params, tokens: jax.Array) -> jax.Array:
+        cfg = self.cfg
+        x = params["embed"][tokens]
+        per = cfg.shared_attn_every
+
+        def mamba_body(x, lp):
+            lp = self.cs_params(lp)
+            x = self.cs_full_hidden(x)
+            h = rms_norm(x, lp["norm"])
+            return self.cs_hidden(x + ssm_mod.mamba2_apply(lp["mamba"], cfg, h)), None
+
+        body_fn = jax.checkpoint(mamba_body) if cfg.remat else mamba_body
+
+        def shared_apply(x):
+            sp = params["shared"]
+            h = rms_norm(x, sp["norm1"])
+            x = x + attn.gqa_apply(sp["attn"], cfg, h, cs_qkv=self.cs_qkv)
+            h = rms_norm(x, sp["norm2"])
+            return x + ffn_apply(sp["ffn"], h)
+
+        shared_fn = jax.checkpoint(shared_apply) if cfg.remat else shared_apply
+        for seg in range(self.n_apps):
+            seg_params = jax.tree.map(
+                lambda a: jax.lax.dynamic_slice_in_dim(a, seg * per, per, 0),
+                params["mamba_layers"])
+            x, _ = jax.lax.scan(body_fn, x, seg_params)
+            x = shared_fn(x)
+        return rms_norm(x, params["final_norm"])
+
+    def loss(self, params, batch: Dict) -> jax.Array:
+        h = self.hidden(params, batch["tokens"])
+        return chunked_xent(h, self.head_matrix(params), batch["labels"],
+                            chunk=self.cfg.xent_chunk,
+                            cs_logits=self.cs_logits)
+
+    # ---- serving ----------------------------------------------------------------
+    def init_cache(self, batch: int, max_seq: int) -> Dict:
+        cfg = self.cfg
+        dtype = dtype_of(cfg)
+        state = ssm_mod.mamba2_init_state(cfg, batch, dtype)
+        return {
+            "mamba": jax.tree.map(
+                lambda a: jnp.broadcast_to(a, (cfg.n_layers,) + a.shape), state),
+            "shared": {
+                "k": jnp.zeros((self.n_apps, batch, max_seq, cfg.n_kv_heads,
+                                cfg.head_dim), dtype),
+                "v": jnp.zeros((self.n_apps, batch, max_seq, cfg.n_kv_heads,
+                                cfg.head_dim), dtype),
+            },
+            "length": jnp.zeros((batch,), jnp.int32),
+        }
+
+    def decode_step(self, params, cache: Dict, tokens: jax.Array
+                    ) -> Tuple[jax.Array, Dict]:
+        cfg = self.cfg
+        length = cache["length"]
+        x = params["embed"][tokens]
+        per = cfg.shared_attn_every
+
+        def mamba_body(x, inp):
+            lp, st = inp
+            h = rms_norm(x, lp["norm"])
+            y, st = ssm_mod.mamba2_decode(lp["mamba"], cfg, h, st)
+            return x + y, st
+
+        new_states = []
+        new_k, new_v = [], []
+        for seg in range(self.n_apps):
+            seg_params = jax.tree.map(
+                lambda a: jax.lax.dynamic_slice_in_dim(a, seg * per, per, 0),
+                params["mamba_layers"])
+            seg_state = jax.tree.map(
+                lambda a: jax.lax.dynamic_slice_in_dim(a, seg * per, per, 0),
+                cache["mamba"])
+            x, st = jax.lax.scan(mamba_body, x, (seg_params, seg_state))
+            new_states.append(st)
+            sp = params["shared"]
+            h = rms_norm(x, sp["norm1"])
+            cl = {"k": cache["shared"]["k"][seg], "v": cache["shared"]["v"][seg]}
+            y, cl = attn.gqa_decode(sp["attn"], cfg, h, cl, length)
+            x = x + y
+            h = rms_norm(x, sp["norm2"])
+            x = x + ffn_apply(sp["ffn"], h)
+            new_k.append(cl["k"])
+            new_v.append(cl["v"])
+        x = rms_norm(x, params["final_norm"])
+        logits = head_logits(x, self.head_matrix(params))
+        new_cache = {
+            "mamba": jax.tree.map(lambda *a: jnp.concatenate(a, 0), *new_states),
+            "shared": {"k": jnp.stack(new_k), "v": jnp.stack(new_v)},
+            "length": length + 1,
+        }
+        return logits, new_cache
+
+    def prefill(self, params, tokens: jax.Array) -> Tuple[jax.Array, Dict]:
+        cfg = self.cfg
+        B, S = tokens.shape
+        x = params["embed"][tokens]
+        per = cfg.shared_attn_every
+        states, ks, vs = [], [], []
+
+        def mamba_prefill(x, lp):
+            h = rms_norm(x, lp["norm"])
+            y = ssm_mod.mamba2_apply(lp["mamba"], cfg, h)
+            # final state for decode continuation — recompute via chunked form
+            # is cheap relative to the scan; use the sequential state builder.
+            return x + y, None
+
+        body_fn = jax.checkpoint(mamba_prefill) if cfg.remat else mamba_prefill
+        for seg in range(self.n_apps):
+            seg_params = jax.tree.map(
+                lambda a: jax.lax.dynamic_slice_in_dim(a, seg * per, per, 0),
+                params["mamba_layers"])
+            x, _ = jax.lax.scan(body_fn, x, seg_params)
+            sp = params["shared"]
+            h = rms_norm(x, sp["norm1"])
+            positions = jnp.arange(S)[None, :]
+            q, k, v = attn._project_qkv(sp["attn"], cfg, h, positions)
+            if self.mesh is not None:
+                q, k, v = self.cs_qkv(q, k, v)
+            from repro.models.common import blocked_attention
+            y = blocked_attention(q, k, v, causal=True,
+                                  block_q=cfg.attn_block_q,
+                                  block_kv=cfg.attn_block_kv)
+            x = x + y.reshape(B, S, -1) @ sp["attn"]["wo"]
+            h = rms_norm(x, sp["norm2"])
+            x = x + ffn_apply(sp["ffn"], h)
+            ks.append(k)
+            vs.append(v)
+        x = rms_norm(x, params["final_norm"])
+        logits = head_logits(x[:, -1], self.head_matrix(params))
+        # mamba decode states are not rebuilt here (prefill->decode handoff
+        # re-runs the tail chunk); serving keeps caches from decode_step.
+        cache = {"shared": {"k": jnp.stack(ks), "v": jnp.stack(vs)},
+                 "mamba": jax.tree.map(
+                     lambda a: jnp.broadcast_to(a, (cfg.n_layers,) + a.shape),
+                     ssm_mod.mamba2_init_state(cfg, B, dtype_of(cfg))),
+                 "length": jnp.full((B,), S, jnp.int32)}
+        return logits, cache

@@ -1,0 +1,231 @@
+"""AdamW with cosine schedule, global-norm clipping, and optional 8-bit
+moment states (block-quantized, error-free dequant-update-requant).
+
+The 8-bit states cut optimizer memory from 8 to 2 bytes/param (+ one f32
+scale per 256-block) — this is what lets llama3-405b train on a SINGLE
+256-chip pod (see EXPERIMENTS.md §Dry-run memory table); fp32 states need
+the 2-pod mesh.  Master weights stay fp32 whenever the model dtype is lower.
+
+Pure functions over pytrees; shard-agnostic (specs are applied by launch/).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+BLOCK = 256
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+    state_dtype: str = "float32"     # "float32" | "int8"
+    master_fp32: bool = True         # keep fp32 master copies of bf16 params
+
+
+def cosine_schedule(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    t = jnp.clip((step - cfg.warmup_steps)
+                 / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return cfg.lr * warm * cos
+
+
+def global_norm(tree: Pytree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in jax.tree.leaves(tree)))
+
+
+# ---------------------------------------------------------------------------
+# 8-bit block quantization for moment states
+#
+# Blocks run along the LAST axis only and the array shape is preserved:
+# flattening a sharded [L, d, ff] tensor to 1-D forces GSPMD to all-gather
+# the whole thing (observed as full fp32 copies of llama's 405B stacked
+# weights — 4.8 TiB of temps per device).  Shape-preserving last-axis blocks
+# keep every reshape sharding-compatible; scales get the same leading-dim
+# sharding as the state itself.
+# ---------------------------------------------------------------------------
+
+SHARD_HINT = 16   # mesh axes are 16-wide; blocks should tile 1/16 shards
+
+
+def _block_of(n: int) -> int:
+    """Largest block <= 4096 dividing n whose block COUNT is a multiple of
+    SHARD_HINT — then the blocked reshape tiles each 1/16 shard exactly and
+    stays sharding-compatible (e.g. llama head 128256 -> b=501, nb=256)."""
+    best = 0
+    for b in range(1, min(n, 4096) + 1):
+        if n % b == 0 and (n // b) % SHARD_HINT == 0:
+            best = b
+    if best:
+        return best
+    for b in (256, 128, 64, 32, 16, 8, 4, 2, 1):
+        if n % b == 0:
+            return b
+    return 1
+
+
+def _scale_shape(shape) -> tuple:
+    if not shape:
+        return (1,)
+    b = _block_of(shape[-1])
+    return tuple(shape[:-1]) + (shape[-1] // b,)
+
+
+def _q8_zeros(shape) -> Dict:
+    return {"q": jnp.zeros(shape, jnp.int8),
+            "s": jnp.zeros(_scale_shape(shape), jnp.float32)}
+
+
+def _q8_dequant(st: Dict) -> jnp.ndarray:
+    shape = st["q"].shape
+    if not shape:
+        return st["q"].astype(jnp.float32) * st["s"][0]
+    nb = st["s"].shape[-1]
+    b = shape[-1] // nb
+    blocks = st["q"].astype(jnp.float32).reshape(*shape[:-1], nb, b)
+    return (blocks * st["s"][..., None]).reshape(shape)
+
+
+def _q8_quant(x: jnp.ndarray) -> Dict:
+    shape = x.shape
+    xf = x.astype(jnp.float32)
+    if not shape:
+        s = jnp.maximum(jnp.abs(xf), 1e-30) / 127.0
+        return {"q": jnp.round(xf / s).astype(jnp.int8), "s": s[None]}
+    b = _block_of(shape[-1])
+    nb = shape[-1] // b
+    blocks = xf.reshape(*shape[:-1], nb, b)
+    scale = jnp.maximum(jnp.abs(blocks).max(axis=-1), 1e-30) / 127.0
+    q = jnp.clip(jnp.round(blocks / scale[..., None]), -127, 127)
+    return {"q": q.reshape(shape).astype(jnp.int8), "s": scale}
+
+
+# v (second moment) needs ~10 orders of dynamic range: linear absmax
+# quantization collapses small entries to 0 and m/(sqrt(0)+eps) explodes.
+# Quantize v in the LOG domain (per-block min/step), the int8-Adam trick.
+_LOG_FLOOR = -46.0   # log(1e-20)
+
+
+def _q8l_zeros(shape) -> Dict:
+    ss = _scale_shape(shape)
+    return {"q": jnp.full(shape, -127, jnp.int8),
+            "lo": jnp.full(ss, _LOG_FLOOR, jnp.float32),
+            "st": jnp.zeros(ss, jnp.float32)}
+
+
+def _q8l_dequant(st: Dict) -> jnp.ndarray:
+    shape = st["q"].shape
+    if not shape:
+        lv = st["lo"][0] + (st["q"].astype(jnp.float32) + 127.0) * st["st"][0]
+        v = jnp.exp(lv)
+        return jnp.where(v <= jnp.exp(_LOG_FLOOR) * 1.5, 0.0, v)
+    nb = st["lo"].shape[-1]
+    b = shape[-1] // nb
+    qf = st["q"].astype(jnp.float32).reshape(*shape[:-1], nb, b) + 127.0
+    lv = st["lo"][..., None] + qf * st["st"][..., None]
+    v = jnp.exp(lv).reshape(shape)
+    return jnp.where(v <= jnp.exp(_LOG_FLOOR) * 1.5, 0.0, v)
+
+
+def _q8l_quant(x: jnp.ndarray) -> Dict:
+    shape = x.shape
+    xl = jnp.log(jnp.maximum(x.astype(jnp.float32), jnp.exp(_LOG_FLOOR)))
+    if not shape:
+        return {"q": jnp.zeros((), jnp.int8) - 127, "lo": xl[None],
+                "st": jnp.zeros((1,), jnp.float32)}
+    b = _block_of(shape[-1])
+    nb = shape[-1] // b
+    blocks = xl.reshape(*shape[:-1], nb, b)
+    lo = blocks.min(axis=-1)
+    stp = jnp.maximum((blocks.max(axis=-1) - lo) / 254.0, 1e-12)
+    q = jnp.clip(jnp.round((blocks - lo[..., None]) / stp[..., None]) - 127,
+                 -127, 127)
+    return {"q": q.reshape(shape).astype(jnp.int8), "lo": lo, "st": stp}
+
+
+# ---------------------------------------------------------------------------
+# init / update
+# ---------------------------------------------------------------------------
+
+def adamw_init(params: Pytree, cfg: AdamWConfig) -> Dict:
+    if cfg.state_dtype == "int8":
+        m_zeros = lambda p: _q8_zeros(p.shape)
+        v_zeros = lambda p: _q8l_zeros(p.shape)
+    else:
+        m_zeros = v_zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    state = {
+        "step": jnp.zeros((), jnp.int32),
+        "m": jax.tree.map(m_zeros, params),
+        "v": jax.tree.map(v_zeros, params),
+    }
+    # master copies only help when params are lower precision; for fp32
+    # params `astype` would ALIAS the same buffers (and donating params +
+    # opt_state together then double-donates).
+    if cfg.master_fp32 and any(l.dtype != jnp.float32
+                               for l in jax.tree.leaves(params)):
+        state["master"] = jax.tree.map(
+            lambda p: jnp.asarray(p, jnp.float32) + 0.0
+            if p.dtype == jnp.float32 else p.astype(jnp.float32), params)
+    return state
+
+
+def adamw_update(grads: Pytree, params: Pytree, state: Dict,
+                 cfg: AdamWConfig) -> Tuple[Pytree, Dict]:
+    step = state["step"] + 1
+    lr = cosine_schedule(cfg, step)
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+    q8 = cfg.state_dtype == "int8"
+
+    def leaf_update(g, p, m, v, master):
+        g = g.astype(jnp.float32) * scale
+        m_f = _q8_dequant(m) if q8 else m
+        v_f = _q8l_dequant(v) if q8 else v
+        m_f = cfg.b1 * m_f + (1 - cfg.b1) * g
+        v_f = cfg.b2 * v_f + (1 - cfg.b2) * g * g
+        mhat = m_f / (1 - cfg.b1 ** step.astype(jnp.float32))
+        vhat = v_f / (1 - cfg.b2 ** step.astype(jnp.float32))
+        base = master if master is not None else p.astype(jnp.float32)
+        new = base - lr * (mhat / (jnp.sqrt(vhat) + cfg.eps)
+                           + cfg.weight_decay * base)
+        m_out = _q8_quant(m_f) if q8 else m_f
+        v_out = _q8l_quant(v_f) if q8 else v_f
+        return new.astype(p.dtype), m_out, v_out, (new if master is not None
+                                                   else None)
+
+    masters = state.get("master")
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_p = jax.tree.leaves(params)
+    is_q8_leaf = (lambda x: isinstance(x, dict) and set(x) == {"q", "s"}) \
+        if q8 else None
+    flat_m = treedef.flatten_up_to(state["m"]) if q8 else jax.tree.leaves(state["m"])
+    flat_v = treedef.flatten_up_to(state["v"]) if q8 else jax.tree.leaves(state["v"])
+    flat_master = (jax.tree.leaves(masters) if masters is not None
+                   else [None] * len(flat_g))
+
+    outs = [leaf_update(g, p, m, v, mm) for g, p, m, v, mm in
+            zip(flat_g, flat_p, flat_m, flat_v, flat_master)]
+    new_params = jax.tree.unflatten(treedef, [o[0] for o in outs])
+    new_state = {
+        "step": step,
+        "m": jax.tree.unflatten(treedef, [o[1] for o in outs]),
+        "v": jax.tree.unflatten(treedef, [o[2] for o in outs]),
+    }
+    if masters is not None:
+        new_state["master"] = jax.tree.unflatten(treedef, [o[3] for o in outs])
+    return new_params, new_state

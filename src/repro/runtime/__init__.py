@@ -1,0 +1,4 @@
+from repro.runtime.fault import (ElasticPolicy, HeartbeatMonitor,
+                                 StragglerDetector)
+
+__all__ = ["ElasticPolicy", "HeartbeatMonitor", "StragglerDetector"]

@@ -1,0 +1,7 @@
+from repro.sparse.csr import CSR
+from repro.sparse.bsr import BSR
+from repro.sparse.generators import (linear_elasticity_2d, poisson_2d,
+                                     random_fixed_nnz, rotated_anisotropic_2d)
+
+__all__ = ["CSR", "BSR", "linear_elasticity_2d", "poisson_2d",
+           "random_fixed_nnz", "rotated_anisotropic_2d"]

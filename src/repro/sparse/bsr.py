@@ -1,0 +1,108 @@
+"""Block-sparse-row (BSR) container — the MXU-friendly local SpMV format.
+
+The paper's ``local_spmv`` uses MKL/Eigen scalar CSR kernels; scalar row
+kernels are hostile to the TPU's 128x128 MXU and (8, 128) VREG tiling
+(DESIGN.md §2).  The TPU adaptation stores dense (bm x bn) blocks so each
+block multiply is one MXU-shaped matmul; the Pallas kernel in
+``kernels/bsr_spmv`` consumes exactly this layout.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import numpy as np
+
+from repro.sparse.csr import CSR
+
+
+@dataclasses.dataclass
+class BSR:
+    """Blocks of shape (bm, bn); block row i holds blocks
+    ``data[indptr[i]:indptr[i+1]]`` at block columns ``indices[...]``."""
+
+    indptr: np.ndarray    # int32 [n_brows + 1]
+    indices: np.ndarray   # int32 [n_blocks]
+    data: np.ndarray      # float32 [n_blocks, bm, bn]
+    shape: Tuple[int, int]  # logical (padded) element shape
+
+    @property
+    def block_shape(self) -> Tuple[int, int]:
+        return self.data.shape[1], self.data.shape[2]
+
+    @property
+    def n_brows(self) -> int:
+        return len(self.indptr) - 1
+
+    @property
+    def n_blocks(self) -> int:
+        return int(self.indices.size)
+
+    @property
+    def density(self) -> float:
+        bm, bn = self.block_shape
+        total = (self.shape[0] // bm) * (self.shape[1] // bn)
+        return self.n_blocks / max(total, 1)
+
+    def matvec(self, v: np.ndarray) -> np.ndarray:
+        """Dense-block oracle (numpy)."""
+        bm, bn = self.block_shape
+        out = np.zeros(self.shape[0], dtype=np.result_type(self.data, v))
+        vb = v.reshape(-1, bn)
+        for i in range(self.n_brows):
+            acc = np.zeros(bm, dtype=out.dtype)
+            for k in range(self.indptr[i], self.indptr[i + 1]):
+                acc += self.data[k] @ vb[self.indices[k]]
+            out[i * bm:(i + 1) * bm] = acc
+        return out
+
+    def to_dense(self) -> np.ndarray:
+        bm, bn = self.block_shape
+        out = np.zeros(self.shape, dtype=self.data.dtype)
+        for i in range(self.n_brows):
+            for k in range(self.indptr[i], self.indptr[i + 1]):
+                j = self.indices[k]
+                out[i * bm:(i + 1) * bm, j * bn:(j + 1) * bn] = self.data[k]
+        return out
+
+    @staticmethod
+    def from_csr(a: CSR, bm: int = 128, bn: int = 128,
+                 dtype=np.float32) -> "BSR":
+        """Convert CSR -> BSR, zero-padding the element shape up to the block
+        grid.  Only blocks containing at least one nonzero are stored."""
+        n_rows, n_cols = a.shape
+        nbr = -(-n_rows // bm)
+        nbc = -(-n_cols // bn)
+        rows, cols, vals = a.to_coo()
+        br, bc = rows // bm, cols // bn
+        key = br * nbc + bc
+        order = np.argsort(key, kind="stable")
+        rows, cols, vals, key = rows[order], cols[order], vals[order], key[order]
+        ukey, start = np.unique(key, return_index=True)
+        start = np.append(start, rows.size)
+        data = np.zeros((ukey.size, bm, bn), dtype=dtype)
+        for b in range(ukey.size):
+            sl = slice(start[b], start[b + 1])
+            data[b, rows[sl] % bm, cols[sl] % bn] = vals[sl]
+        ubr = (ukey // nbc).astype(np.int32)
+        ubc = (ukey % nbc).astype(np.int32)
+        indptr = np.zeros(nbr + 1, dtype=np.int32)
+        np.add.at(indptr, ubr + 1, 1)
+        indptr = np.cumsum(indptr).astype(np.int32)
+        return BSR(indptr=indptr, indices=ubc, data=data,
+                   shape=(nbr * bm, nbc * bn))
+
+    def padded_uniform(self) -> Tuple[np.ndarray, np.ndarray, int]:
+        """Pad every block row to the max blocks/row: returns
+        (block_cols [n_brows, kmax] int32 with -1 pad,
+         blocks [n_brows, kmax, bm, bn], kmax).  This is the static layout
+        the Pallas kernel consumes (grid = (n_brows, kmax))."""
+        kmax = max(1, int(np.diff(self.indptr).max()))
+        bm, bn = self.block_shape
+        cols = np.full((self.n_brows, kmax), -1, dtype=np.int32)
+        blocks = np.zeros((self.n_brows, kmax, bm, bn), dtype=self.data.dtype)
+        for i in range(self.n_brows):
+            k0, k1 = self.indptr[i], self.indptr[i + 1]
+            cols[i, : k1 - k0] = self.indices[k0:k1]
+            blocks[i, : k1 - k0] = self.data[k0:k1]
+        return cols, blocks, kmax

@@ -1,0 +1,39 @@
+"""hier_collectives correctness on an 8-device host mesh.
+
+Multi-device programs run in a subprocess so the main pytest session keeps a
+single CPU device (XLA locks the device count at first init; see launch/dryrun
+for the same pattern at 512 devices).
+"""
+import os
+import pathlib
+import subprocess
+import sys
+
+import pytest
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+
+def run_prog(name: str) -> str:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(ROOT / "src")
+    env.pop("XLA_FLAGS", None)  # the program sets its own device count
+    proc = subprocess.run(
+        [sys.executable, str(ROOT / "tests" / "multidev" / name)],
+        capture_output=True, text=True, env=env, timeout=600,
+    )
+    assert proc.returncode == 0, f"stdout:\n{proc.stdout}\nstderr:\n{proc.stderr}"
+    return proc.stdout
+
+
+@pytest.mark.multidev
+def test_collectives_8dev():
+    out = run_prog("collectives_prog.py")
+    assert "ALL OK" in out
+
+
+@pytest.mark.multidev
+def test_moe_dispatch_8dev():
+    """flat + nap sharded MoE dispatch vs dense oracle, incl. gradients."""
+    out = run_prog("moe_dispatch_prog.py")
+    assert "ALL OK" in out

@@ -1,0 +1,163 @@
+"""Example 2.1 of the paper, tested against its worked tables.
+
+The 6x6 matrix of Fig. 4 is reconstructed from the paper's Tables 5, 6, 9,
+13 and 15 (the figure itself is an image):
+
+    row 0: {0, 1, 3, 4, 5}
+    row 1: {1}
+    row 2: {2, 3}
+    row 3: {0, 3}
+    row 4: {1, 2, 4}
+    row 5: {0, 1, 5}
+
+(A[5,1] is implied by the dedup motivation of Sec. 4.1: v1 reaches node 2
+once under NAP — Table 9 routes E(0,2) = {0,1} to (1,2), and Table 13 has
+(1,2) forward only {1} to (0,2), so (1,2) itself consumes v0 and v1.)
+
+Six processes across three nodes (ppn = 2); rank r owns row r (Fig. 3).
+
+Exact-match tests cover the unambiguous tables (1, 2, 5, 6, 14, 15).  The
+T/U process assignment of Tables 7-13 depends on an ordering rule that the
+paper's own worked example does not apply consistently (see comm_graph.py
+docstring), so those are verified through *invariants*: one aggregated
+message per communicating node pair, network-injection only in the inter
+phase, and exact delivery of every needed value.
+"""
+import numpy as np
+import pytest
+
+from repro.core.comm_graph import build_nap_plan, build_standard_plan, nap_stats, standard_stats
+from repro.core.partition import contiguous_partition
+from repro.core.spmv import DistSpMV, simulate_nap_spmv, simulate_standard_spmv
+from repro.core.topology import Topology, paper_example_topology
+from repro.sparse.csr import CSR
+
+
+def example_matrix() -> CSR:
+    rows_cols = {0: [0, 1, 3, 4, 5], 1: [1], 2: [2, 3], 3: [0, 3], 4: [1, 2, 4], 5: [0, 1, 5]}
+    rows, cols = [], []
+    for i, js in rows_cols.items():
+        for j in js:
+            rows.append(i)
+            cols.append(j)
+    vals = 1.0 + np.arange(len(rows)) * 0.25  # distinct values catch routing bugs
+    return CSR.from_coo(np.array(rows), np.array(cols), vals, (6, 6))
+
+
+@pytest.fixture
+def setup():
+    a = example_matrix()
+    topo = paper_example_topology()
+    part = contiguous_partition(6, topo.n_procs)  # rank r owns row r
+    return a, topo, part
+
+
+def test_topology_tuples():
+    topo = paper_example_topology()
+    assert topo.n_procs == 6
+    assert [topo.proc_node(r) for r in range(6)] == [
+        (0, 0), (1, 0), (0, 1), (1, 1), (0, 2), (1, 2)]
+    assert topo.rank(1, 2) == 5
+
+
+def test_standard_plan_P_and_D(setup):
+    """Tables 1-2 ground truth (derived from the reconstructed Fig. 4)."""
+    a, topo, part = setup
+    plan = build_standard_plan(a.indptr, a.indices, part, topo)
+    assert plan.P(0) == [3, 5]
+    assert plan.P(1) == [0, 4, 5]
+    assert plan.D(1, 5).tolist() == [1]
+    assert plan.P(2) == [4]
+    assert plan.P(3) == [0, 2]
+    assert plan.P(4) == [0]
+    assert plan.P(5) == [0]
+    assert plan.D(0, 3).tolist() == [0]
+    assert plan.D(0, 5).tolist() == [0]
+    assert plan.D(1, 0).tolist() == [1]
+    assert plan.D(1, 4).tolist() == [1]
+    assert plan.D(3, 0).tolist() == [3]
+    assert plan.D(3, 2).tolist() == [3]
+    assert plan.D(4, 0).tolist() == [4]
+    assert plan.D(5, 0).tolist() == [5]
+    assert plan.D(2, 4).tolist() == [2]
+    assert plan.D(0, 1).size == 0  # no such message
+
+
+def test_node_sets_table5_table6(setup):
+    """Exact match with paper Tables 5 and 6."""
+    a, topo, part = setup
+    plan = build_nap_plan(a.indptr, a.indices, part, topo)
+    assert plan.N(0) == [1, 2]
+    assert plan.N(1) == [0, 2]
+    assert plan.N(2) == [0]
+    assert plan.E(0, 1).tolist() == [0]
+    assert plan.E(0, 2).tolist() == [0, 1]
+    assert plan.E(1, 0).tolist() == [3]
+    assert plan.E(1, 2).tolist() == [2]
+    assert plan.E(2, 0).tolist() == [4, 5]
+    assert plan.E(2, 1).size == 0
+
+
+def test_fully_local_table15(setup):
+    """Table 15: (1,0) sends {1} to (0,0); (1,1) sends {3} to (0,1)."""
+    a, topo, part = setup
+    plan = build_nap_plan(a.indptr, a.indices, part, topo)
+    sends = {(m.src, m.dst): m.idx.tolist()
+             for msgs in plan.local_full_sends for m in msgs}
+    assert sends == {(1, 0): [1], (3, 2): [3]}
+
+
+@pytest.mark.parametrize("pairing", ["balanced", "aligned"])
+def test_inter_node_invariants(setup, pairing):
+    a, topo, part = setup
+    plan = build_nap_plan(a.indptr, a.indices, part, topo, pairing=pairing)
+    # 1. every inter-node message really crosses nodes, locals stay local
+    for msgs in plan.inter_sends:
+        for m in msgs:
+            assert topo.node_of(m.src) != topo.node_of(m.dst)
+    for phase in (plan.local_init_sends, plan.local_final_sends, plan.local_full_sends):
+        for msgs in phase:
+            for m in msgs:
+                assert topo.node_of(m.src) == topo.node_of(m.dst)
+    # 2. the union of inter-node payloads for a node pair equals E(n, m):
+    per_pair = {}
+    for msgs in plan.inter_sends:
+        for m in msgs:
+            key = (topo.node_of(m.src), topo.node_of(m.dst))
+            per_pair.setdefault(key, []).append(m.idx)
+    for (n, mm), chunks in per_pair.items():
+        got = np.sort(np.concatenate(chunks))
+        assert got.tolist() == plan.E(n, mm).tolist()
+        # 3. deduplicated: no index crosses the network twice for one pair
+        assert len(np.unique(got)) == len(got)
+    assert set(per_pair) == set(plan.node_idx)
+    # 4. if aligned: sender local id == receiver local id (TPU all-to-all form)
+    if pairing == "aligned":
+        for msgs in plan.inter_sends:
+            for m in msgs:
+                assert topo.local_of(m.src) == topo.local_of(m.dst)
+
+
+def test_paper_example_message_reduction(setup):
+    """The headline claim, on the worked example: NAP injects fewer (and no
+    duplicated) values into the network than the standard SpMV."""
+    a, topo, part = setup
+    std = build_standard_plan(a.indptr, a.indices, part, topo)
+    nap = build_nap_plan(a.indptr, a.indices, part, topo)
+    s = standard_stats(std)
+    n = nap_stats(nap)
+    assert n["inter"].total_bytes <= s["inter"].total_bytes
+    assert n["inter"].total_msgs <= s["inter"].total_msgs
+    # the example has a duplicated value (v0 -> node 2 twice in standard):
+    assert n["inter"].total_bytes < s["inter"].total_bytes
+
+
+@pytest.mark.parametrize("algorithm", ["standard", "nap"])
+@pytest.mark.parametrize("pairing", ["balanced", "aligned"])
+def test_spmv_exactness(setup, algorithm, pairing):
+    a, topo, part = setup
+    dist = DistSpMV.build(a, part, topo, pairing=pairing)
+    rng = np.random.default_rng(0)
+    v = rng.standard_normal(6)
+    w = dist.run(v, algorithm)
+    np.testing.assert_allclose(w, a.matvec(v), rtol=1e-13)

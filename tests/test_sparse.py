@@ -1,0 +1,78 @@
+"""Generators + BSR container invariants."""
+import numpy as np
+import pytest
+
+from repro.sparse import (BSR, CSR, linear_elasticity_2d, poisson_2d,
+                          random_fixed_nnz, rotated_anisotropic_2d)
+from repro.sparse import suitesparse_like
+
+
+def test_poisson_2d_is_laplacian():
+    a = poisson_2d(8)
+    d = a.to_dense()
+    np.testing.assert_allclose(d, d.T)
+    # interior row sums are zero (constant in the null space of the stencil)
+    interior = np.arange(8 * 8).reshape(8, 8)[2:-2, 2:-2].reshape(-1)
+    np.testing.assert_allclose(d[interior].sum(axis=1), 0.0, atol=1e-12)
+    assert (np.diag(d) > 0).all()
+
+
+def test_rotated_anisotropic_symmetric_spd_ish():
+    a = rotated_anisotropic_2d(10, eps=0.01, theta=np.pi / 3)
+    d = a.to_dense()
+    np.testing.assert_allclose(d, d.T, atol=1e-12)
+    w = np.linalg.eigvalsh(d)
+    assert w.min() > -1e-8  # PSD up to roundoff (pure Neumann -> singular ok)
+
+
+def test_linear_elasticity_spd():
+    a = linear_elasticity_2d(6)
+    d = a.to_dense()
+    np.testing.assert_allclose(d, d.T, atol=1e-8 * np.abs(d).max())
+    w = np.linalg.eigvalsh(d)
+    assert w.min() > 0, "Dirichlet-pinned elasticity must be SPD"
+
+
+def test_random_fixed_nnz_row_counts():
+    a = random_fixed_nnz(100, 7, seed=1)
+    counts = np.diff(a.indptr)
+    assert counts.max() <= 7
+    assert counts.min() >= 1
+    assert a.shape == (100, 100)
+
+
+@pytest.mark.parametrize("name", ["nlpkkt240", "audikw_1", "StocF-1465"])
+def test_suitesparse_like_builds(name):
+    a = suitesparse_like.build(name, scale=8192)
+    assert a.shape[0] >= 256
+    assert a.nnz > a.shape[0]
+    d = a.to_dense()
+    np.testing.assert_allclose(d, d.T, atol=1e-12)  # surrogates are symmetric
+
+
+@pytest.mark.parametrize("bm,bn", [(2, 2), (4, 8), (8, 4)])
+def test_bsr_roundtrip_matvec(bm, bn):
+    rng = np.random.default_rng(0)
+    dense = rng.standard_normal((32, 24)) * (rng.random((32, 24)) < 0.15)
+    a = CSR.from_dense(dense)
+    b = BSR.from_csr(a, bm=bm, bn=bn)
+    pad = b.to_dense()
+    np.testing.assert_allclose(pad[:32, :24], dense, rtol=1e-6)
+    v = rng.standard_normal(b.shape[1])
+    want = pad @ v
+    np.testing.assert_allclose(b.matvec(v), want, rtol=1e-5)
+
+
+def test_bsr_padded_uniform_consistent():
+    rng = np.random.default_rng(1)
+    dense = rng.standard_normal((16, 16)) * (rng.random((16, 16)) < 0.3)
+    b = BSR.from_csr(CSR.from_dense(dense), bm=4, bn=4)
+    cols, blocks, kmax = b.padded_uniform()
+    assert cols.shape == (4, kmax) and blocks.shape == (4, kmax, 4, 4)
+    # rebuild dense from the padded layout
+    out = np.zeros(b.shape)
+    for i in range(4):
+        for k in range(kmax):
+            if cols[i, k] >= 0:
+                out[i * 4:(i + 1) * 4, cols[i, k] * 4:(cols[i, k] + 1) * 4] = blocks[i, k]
+    np.testing.assert_allclose(out, b.to_dense(), rtol=0)

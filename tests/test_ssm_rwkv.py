@@ -1,0 +1,103 @@
+"""Mamba2 chunked-SSD vs sequential recurrence; RWKV6 scan vs decode."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_reduced
+from repro.models import rwkv as rwkv_mod
+from repro.models import ssm as ssm_mod
+
+
+@pytest.fixture(scope="module")
+def zcfg():
+    return get_reduced("zamba2-2.7b")
+
+
+def test_mamba2_chunked_matches_sequential(zcfg):
+    cfg = zcfg
+    rng = np.random.default_rng(0)
+    p = ssm_mod.mamba2_init(jax.random.key(0), cfg, jnp.float32)
+    B, S = 2, cfg.ssm_chunk * 3
+    x = jnp.asarray(rng.standard_normal((B, S, cfg.d_model)) * 0.3, jnp.float32)
+    got = ssm_mod.mamba2_apply(p, cfg, x)
+    want = ssm_mod.mamba2_scan_ref(p, cfg, x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_mamba2_decode_continues_state(zcfg):
+    """decode after a prefix == the tail of a longer sequence."""
+    cfg = zcfg
+    rng = np.random.default_rng(1)
+    p = ssm_mod.mamba2_init(jax.random.key(1), cfg, jnp.float32)
+    B, S = 1, cfg.ssm_chunk
+    x = jnp.asarray(rng.standard_normal((B, S + 4, cfg.d_model)) * 0.3,
+                    jnp.float32)
+    full = ssm_mod.mamba2_scan_ref(p, cfg, x)
+    state = ssm_mod.mamba2_init_state(cfg, B, jnp.float32)
+    for t in range(S):
+        _, state = ssm_mod.mamba2_decode(p, cfg, x[:, t:t + 1], state)
+    outs = []
+    for t in range(S, S + 4):
+        y, state = ssm_mod.mamba2_decode(p, cfg, x[:, t:t + 1], state)
+        outs.append(np.asarray(y))
+    np.testing.assert_allclose(np.concatenate(outs, 1),
+                               np.asarray(full[:, S:]), rtol=1e-4, atol=1e-5)
+
+
+def test_rwkv6_scan_matches_stepwise():
+    cfg = get_reduced("rwkv6-3b")
+    rng = np.random.default_rng(2)
+    p = rwkv_mod.rwkv6_init(jax.random.key(2), cfg, jnp.float32)
+    B, S = 2, 12
+    x = jnp.asarray(rng.standard_normal((B, S, cfg.d_model)) * 0.3, jnp.float32)
+    st0 = rwkv_mod.rwkv6_init_state(cfg, B, jnp.float32)
+    full, st_full = rwkv_mod.rwkv6_time_mix(p, cfg, x, st0)
+    # stepwise
+    st = st0
+    outs = []
+    for t in range(S):
+        y, st = rwkv_mod.rwkv6_time_mix(p, cfg, x[:, t:t + 1], st)
+        outs.append(np.asarray(y))
+    np.testing.assert_allclose(np.concatenate(outs, 1), np.asarray(full),
+                               rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(st["S"]), np.asarray(st_full["S"]),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_rwkv6_decay_is_data_dependent():
+    """The Finch feature: decay w must vary with the input."""
+    cfg = get_reduced("rwkv6-3b")
+    p = rwkv_mod.rwkv6_init(jax.random.key(3), cfg, jnp.float32)
+    rng = np.random.default_rng(3)
+    B, S = 1, 4
+    x1 = jnp.asarray(rng.standard_normal((B, S, cfg.d_model)), jnp.float32)
+    x2 = x1 * 2.0
+    last = jnp.zeros((B, cfg.d_model), jnp.float32)
+    *_, w1 = rwkv_mod._time_mix_inputs(p, cfg, x1, last)
+    *_, w2 = rwkv_mod._time_mix_inputs(p, cfg, x2, last)
+    assert not np.allclose(np.asarray(w1), np.asarray(w2))
+    assert (np.asarray(w1) > 0).all() and (np.asarray(w1) < 1).all()
+
+
+def test_rwkv6_chunked_matches_scan():
+    """The GLA-style chunked form must equal the stepwise recurrence."""
+    cfg = get_reduced("rwkv6-3b")
+    rng = np.random.default_rng(5)
+    p = rwkv_mod.rwkv6_init(jax.random.key(5), cfg, jnp.float32)
+    B, S = 2, 32
+    x = jnp.asarray(rng.standard_normal((B, S, cfg.d_model)) * 0.3, jnp.float32)
+    st0 = rwkv_mod.rwkv6_init_state(cfg, B, jnp.float32)
+    want, st_w = rwkv_mod.rwkv6_time_mix(p, cfg, x, st0)
+    got, st_g = rwkv_mod.rwkv6_time_mix_chunked(p, cfg, x, st0, chunk=8)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(st_g["S"]), np.asarray(st_w["S"]),
+                               rtol=1e-4, atol=1e-5)
+    # non-zero initial state path too
+    want2, _ = rwkv_mod.rwkv6_time_mix(p, cfg, x, st_w)
+    got2, _ = rwkv_mod.rwkv6_time_mix_chunked(p, cfg, x, st_g, chunk=8)
+    np.testing.assert_allclose(np.asarray(got2), np.asarray(want2),
+                               rtol=1e-4, atol=1e-5)
