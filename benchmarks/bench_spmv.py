@@ -1,0 +1,179 @@
+"""BENCH_spmv.json: machine-readable perf trajectory of the distributed SpMV.
+
+Measures, on a forced 8-device host platform (2 nodes x 4 ppn):
+
+* ``plan_compile`` — wall time of plan compilation (split_all_blocks +
+  compile_nap) on a 20k-row random matrix: the seed dict/per-element
+  implementation (``benchmarks/_legacy_plan.py``, kept verbatim) vs the
+  vectorised one, plus the cached-recompile time.  The acceptance bar is
+  speedup >= 5x.
+* ``spmv_wall`` — steady-state wall time per SpMV application for the
+  standard (Alg. 1) executor and the NAP executor with COO (segment_sum)
+  and fused Pallas BSR local compute, at nv in {1, 8}.  Pallas runs in
+  interpret mode on CPU, so absolute numbers are NOT hardware numbers —
+  they track relative regressions across PRs.
+* ``modeled_bytes`` — padded vs effective bytes per phase (the quantity the
+  paper's T/U balancing minimises) and plan-level message stats.
+
+    PYTHONPATH=src python -m benchmarks.bench_spmv [--quick] [--out PATH]
+
+Must run as its own process: it forces the device count before jax loads.
+"""
+from __future__ import annotations
+
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+
+def _best_of(fn, repeats: int) -> float:
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def bench_plan_compile(n_rows: int, nnz_per_row: int) -> dict:
+    from benchmarks._legacy_plan import legacy_compile_nap
+    from repro.core.comm_graph import build_nap_plan
+    from repro.core.partition import contiguous_partition
+    from repro.core.spmv_jax import clear_compile_cache, compile_nap
+    from repro.core.topology import Topology
+    from repro.sparse import random_fixed_nnz
+
+    topo = Topology(n_nodes=2, ppn=4)
+    a = random_fixed_nnz(n_rows, nnz_per_row, seed=0)
+    part = contiguous_partition(n_rows, topo.n_procs)
+    # share one plan build: the comm-graph build was always vectorised, the
+    # measured quantity is the *compile* step (split + gather maps + arrays)
+    plan = build_nap_plan(a.indptr, a.indices, part, topo, pairing="aligned")
+
+    t_legacy = _best_of(lambda: legacy_compile_nap(a, part, topo, plan=plan), 2)
+    t_new = _best_of(lambda: compile_nap(a, part, topo, plan=plan), 3)
+    clear_compile_cache()
+    compile_nap(a, part, topo)                      # populate cache
+    t_cached = _best_of(lambda: compile_nap(a, part, topo), 3)
+    clear_compile_cache()
+    return {
+        "n_rows": n_rows, "nnz": a.nnz, "n_procs": topo.n_procs,
+        "legacy_s": round(t_legacy, 4),
+        "vectorized_s": round(t_new, 4),
+        "cached_s": round(t_cached, 6),
+        "speedup": round(t_legacy / t_new, 2),
+    }
+
+
+def bench_fused_emit(n_rows: int, nnz_per_row: int) -> dict:
+    """One-off cost of materialising the fused Pallas BSR arrays (lazy;
+    amortised by the compile cache across repeated SpMVs)."""
+    from repro.core.partition import contiguous_partition
+    from repro.core.spmv_jax import compile_nap
+    from repro.core.topology import Topology
+    from repro.sparse import random_fixed_nnz
+
+    topo = Topology(n_nodes=2, ppn=4)
+    a = random_fixed_nnz(n_rows, nnz_per_row, seed=0)
+    part = contiguous_partition(n_rows, topo.n_procs)
+    compiled = compile_nap(a, part, topo, cache=False)
+    t0 = time.perf_counter()
+    compiled.ensure_fused()
+    t_emit = time.perf_counter() - t0
+    return {"n_rows": n_rows, "nnz": a.nnz,
+            "block_shape": list(compiled.block_shape),
+            "emit_s": round(t_emit, 4),
+            "blocks_mb": round(compiled.arrays["fused_blocks"].nbytes / 2**20, 1)}
+
+
+def bench_spmv_wall(n_rows: int, nnz_per_row: int, quick: bool) -> dict:
+    import jax
+    from repro.compat import make_mesh
+    from repro.core.comm_graph import build_standard_plan, nap_stats, standard_stats, build_nap_plan
+    from repro.core.partition import contiguous_partition
+    from repro.core.spmv_jax import (compile_nap, nap_spmv_shardmap,
+                                     pack_vector, padded_traffic,
+                                     standard_spmv_shardmap)
+    from repro.core.topology import Topology
+    from repro.sparse import random_fixed_nnz
+
+    topo = Topology(n_nodes=2, ppn=4)
+    mesh = make_mesh((topo.n_nodes, topo.ppn), ("node", "proc"))
+    a = random_fixed_nnz(n_rows, nnz_per_row, seed=0)
+    part = contiguous_partition(n_rows, topo.n_procs)
+    compiled = compile_nap(a, part, topo, cache=False)
+    rng = np.random.default_rng(0)
+
+    iters = 3 if quick else 10
+    walls = {}
+    for nv in ((8,) if quick else (1, 8)):
+        v = rng.standard_normal((n_rows, nv))
+        shards = pack_vector(v, part, topo, compiled.rows_pad)
+        paths = {
+            "standard_bsr": standard_spmv_shardmap(a, part, topo, mesh,
+                                                   local_compute="bsr")[0],
+            "nap_coo": nap_spmv_shardmap(compiled, mesh, local_compute="coo"),
+            "nap_fused_bsr": nap_spmv_shardmap(compiled, mesh,
+                                               local_compute="bsr"),
+        }
+        for name, run in paths.items():
+            out = run(shards)
+            jax.block_until_ready(out)              # compile + warmup
+            t0 = time.perf_counter()
+            for _ in range(iters):
+                out = run(shards)
+            jax.block_until_ready(out)
+            walls[f"{name}_nv{nv}_s"] = round(
+                (time.perf_counter() - t0) / iters, 5)
+
+    std_plan = build_standard_plan(a.indptr, a.indices, part, topo)
+    nap_plan = compiled.plan or build_nap_plan(
+        a.indptr, a.indices, part, topo, pairing="aligned")
+    s, n = standard_stats(std_plan, 4), nap_stats(nap_plan, 4)
+    modeled = {
+        "standard_inter_bytes": s["inter"].total_bytes,
+        "standard_intra_bytes": s["intra"].total_bytes,
+        "nap_inter_bytes": n["inter"].total_bytes,
+        "nap_intra_bytes": n["intra"].total_bytes,
+        **padded_traffic(compiled),
+    }
+    return {"n_rows": n_rows, "nnz": a.nnz, "topo": [topo.n_nodes, topo.ppn],
+            "interpret_mode": True, "iters": iters,
+            "wall": walls, "modeled_bytes": modeled}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--out", default="BENCH_spmv.json")
+    args = ap.parse_args()
+
+    t0 = time.time()
+    result = {
+        "bench": "spmv",
+        "plan_compile": bench_plan_compile(
+            4000 if args.quick else 20000, 12),
+        "fused_emit": bench_fused_emit(1024 if args.quick else 2048, 8),
+        "spmv_wall": bench_spmv_wall(1024 if args.quick else 2048, 8,
+                                     args.quick),
+    }
+    result["total_s"] = round(time.time() - t0, 1)
+    with open(args.out, "w") as f:
+        json.dump(result, f, indent=2)
+    pc = result["plan_compile"]
+    print(f"plan compile ({pc['n_rows']} rows, {pc['n_procs']} ranks): "
+          f"legacy {pc['legacy_s']}s -> vectorized {pc['vectorized_s']}s "
+          f"({pc['speedup']}x, cached {pc['cached_s']}s)")
+    for k, v in result["spmv_wall"]["wall"].items():
+        print(f"  {k}: {v}")
+    print(f"wrote {args.out} in {result['total_s']}s")
+
+
+if __name__ == "__main__":
+    main()

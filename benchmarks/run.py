@@ -5,6 +5,9 @@
 from __future__ import annotations
 
 import argparse
+import os
+import subprocess
+import sys
 import time
 
 
@@ -47,6 +50,19 @@ def main() -> None:
         print(fig13_15_suitesparse.run_fig15().render())
         print()
     print(roofline_cells.run().render())
+
+    # machine-readable SpMV perf trajectory (own process: it forces the
+    # host device count before jax initialises)
+    cmd = [sys.executable, "-m", "benchmarks.bench_spmv",
+           "--out", "BENCH_spmv.json"] + (["--quick"] if args.quick else [])
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run(cmd, env=env, capture_output=True, text=True)
+    print(proc.stdout, end="")
+    if proc.returncode != 0:
+        print(f"bench_spmv FAILED:\n{proc.stderr}", flush=True)
+        raise SystemExit(proc.returncode)
+
     print(f"\nall benchmarks done in {time.time() - t_start:.1f}s")
 
 

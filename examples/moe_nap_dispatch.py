@@ -18,6 +18,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.compat import make_mesh, set_mesh
 from repro.configs import get_reduced
 from repro.core.hlo_analysis import analyze_hlo
 from repro.models.moe import EPInfo, moe_apply_local, moe_apply_sharded, moe_init
@@ -26,8 +27,7 @@ from repro.models.moe import EPInfo, moe_apply_local, moe_apply_sharded, moe_ini
 def main() -> None:
     cfg = get_reduced("qwen3-moe-235b-a22b").replace(
         n_experts=8, top_k=4, moe_dff=64, d_model=64, capacity_factor=8.0)
-    mesh = jax.make_mesh((2, 4), ("pod", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((2, 4), ("pod", "model"))
     params = moe_init(jax.random.key(0), cfg, jnp.float32)
     rng = np.random.default_rng(0)
     x = jnp.asarray(rng.standard_normal((4, 16, cfg.d_model)) * 0.3,
@@ -40,7 +40,7 @@ def main() -> None:
         mcfg = cfg.replace(moe_dispatch=mode)
         ep = EPInfo(inner_axis="model", pod_axis="pod")
         fn = jax.jit(lambda p, xx: moe_apply_sharded(p, mcfg, xx, ep, mesh))
-        with jax.set_mesh(mesh):
+        with set_mesh(mesh):
             lowered = fn.lower(params, x)
             compiled = lowered.compile()
             got = np.asarray(fn(params, x))

@@ -14,6 +14,7 @@ os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=16")
 import numpy as np
 import jax
 
+from repro.compat import make_mesh
 from repro.core.comm_graph import build_nap_plan, build_standard_plan, nap_stats, standard_stats
 from repro.core.cost_model import BLUE_WATERS, nap_cost, standard_cost
 from repro.core.partition import contiguous_partition
@@ -66,8 +67,7 @@ def main() -> None:
 
     # -- the same plan compiled to shard_map SPMD ------------------------------
     if jax.device_count() >= topo.n_procs:
-        mesh = jax.make_mesh((topo.n_nodes, topo.ppn), ("node", "proc"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh = make_mesh((topo.n_nodes, topo.ppn), ("node", "proc"))
         compiled = compile_nap(a, part, topo)
         run = nap_spmv_shardmap(compiled, mesh)
         shards = pack_vector(v, part, topo, compiled.rows_pad)

@@ -52,6 +52,42 @@ class Message:
         return int(self.idx.size)
 
 
+def flat_slot_map(msgs: Sequence[Message], slots: Sequence[int],
+                  pad: int) -> Tuple[np.ndarray, np.ndarray]:
+    """Sorted lookup table from global index -> flat padded-buffer position.
+
+    ``msgs[i]`` lands in buffer slot ``slots[i]``; element k of a message
+    sits at flat position ``slots[i] * pad + k``.  Returns parallel arrays
+    ``(idx, pos)`` with ``idx`` ascending, so consumers resolve whole index
+    arrays with one ``np.searchsorted`` instead of per-element probing.
+    Indices must be disjoint across the phase's messages (asserted).
+    """
+    if not msgs:
+        z = np.empty(0, dtype=np.int64)
+        return z, z.copy()
+    idx = np.concatenate([m.idx for m in msgs])
+    pos = np.concatenate([s * pad + np.arange(m.size, dtype=np.int64)
+                          for s, m in zip(slots, msgs)])
+    order = np.argsort(idx, kind="stable")
+    idx, pos = idx[order], pos[order]
+    assert idx.size < 2 or (np.diff(idx) > 0).all(), \
+        "phase delivers one index through two messages"
+    return idx, pos
+
+
+def lookup_slots(table: Tuple[np.ndarray, np.ndarray],
+                 query: np.ndarray) -> np.ndarray:
+    """Resolve ``query`` indices against a :func:`flat_slot_map` table."""
+    idx, pos = table
+    query = np.asarray(query, dtype=np.int64)
+    p = np.searchsorted(idx, query)
+    ok = (p < idx.size) & (idx[np.minimum(p, max(idx.size - 1, 0))] == query) \
+        if idx.size else np.zeros(query.shape, bool)
+    assert bool(np.all(ok)), \
+        f"indices never delivered to this rank: {query[~ok][:8]}"
+    return pos[p]
+
+
 def _group_sorted(keys: np.ndarray, vals: np.ndarray) -> Dict[int, np.ndarray]:
     """{key: sorted unique vals with that key} for parallel arrays."""
     out: Dict[int, np.ndarray] = {}
@@ -107,6 +143,11 @@ class StandardPlan:
                 return m.idx
         return np.empty(0, dtype=np.int64)
 
+    def recv_slot_map(self, rank: int, pad: int) -> Tuple[np.ndarray, np.ndarray]:
+        """Slot map into rank's flat recv buffer ([n_procs, pad] by src)."""
+        msgs = self.recvs[rank]
+        return flat_slot_map(msgs, [m.src for m in msgs], pad)
+
 
 def build_standard_plan(indptr: np.ndarray, indices: np.ndarray,
                         part: RowPartition, topo: Topology) -> StandardPlan:
@@ -159,6 +200,22 @@ class NAPPlan:
     def I(self, rank: int, dst: int) -> np.ndarray:
         out = [m.idx for m in self.inter_sends[rank] if m.dst == dst]
         return np.unique(np.concatenate(out)) if out else np.empty(0, dtype=np.int64)
+
+    def recv_slot_map(self, rank: int, phase: str,
+                      pad: int) -> Tuple[np.ndarray, np.ndarray]:
+        """Slot map into rank's flat padded recv buffer for one phase.
+
+        The SPMD executor lays out received values as ``[n_slots, pad]`` per
+        phase — slot = sender's local id for the intra-node phases ("full",
+        "init", "final") and sender's *node* id for "inter" (the buffer the
+        aggregated inter-node all-to-all produces).  This is the block-layout
+        contract the fused BSR compile step builds its gather maps against.
+        """
+        topo = self.topology
+        msgs = {"full": self.local_full_recvs, "init": self.local_init_recvs,
+                "final": self.local_final_recvs, "inter": self.inter_recvs}[phase][rank]
+        slot_of = topo.node_of if phase == "inter" else topo.local_of
+        return flat_slot_map(msgs, [slot_of(m.src) for m in msgs], pad)
 
 
 def _distribute_slots(items: Sequence[Tuple[int, int]], ppn: int) -> List[List[Tuple[int, int]]]:

@@ -56,18 +56,20 @@ def split_local_blocks(a: CSR, part: RowPartition, topo: Topology, rank: int) ->
     on_node_m = (col_owner != rank) & (col_node == me_node)
     off_node_m = col_node != me_node
 
-    # on-process: remap columns to local index within R(r)
-    glob_to_loc = {int(g): i for i, g in enumerate(rows)}
-    op_cols = np.array([glob_to_loc[int(c)] for c in g_cols[on_proc_m]], dtype=np.int64)
+    # on-process: remap columns to local index within R(r).  ``rows`` is
+    # ascending, so the remap is one bulk searchsorted.
+    op_cols = np.searchsorted(rows, g_cols[on_proc_m])
+    # masked subsets of a row-major COO stay row-major: skip the re-sort
     on_proc = CSR.from_coo(g_rows[on_proc_m], op_cols, vals[on_proc_m],
-                           (rows.size, rows.size), sum_duplicates=False)
+                           (rows.size, rows.size), sum_duplicates=False,
+                           assume_sorted=True)
 
     def buffer_block(mask: np.ndarray) -> Tuple[CSR, np.ndarray]:
         cols = np.unique(g_cols[mask])
-        slot = {int(c): i for i, c in enumerate(cols)}
-        bc = np.array([slot[int(c)] for c in g_cols[mask]], dtype=np.int64)
+        bc = np.searchsorted(cols, g_cols[mask])  # slot in ascending buffer
         blk = CSR.from_coo(g_rows[mask], bc, vals[mask],
-                           (rows.size, max(int(cols.size), 1)), sum_duplicates=False)
+                           (rows.size, max(int(cols.size), 1)),
+                           sum_duplicates=False, assume_sorted=True)
         return blk, cols
 
     on_node, on_node_cols = buffer_block(on_node_m)
@@ -86,17 +88,28 @@ def split_all_blocks(a: CSR, part: RowPartition, topo: Topology) -> List[LocalBl
 # ---------------------------------------------------------------------------
 
 class _MailBox:
-    """Delivers plan messages; each value fetched from the *sender's* state."""
+    """Delivers plan messages; each value fetched from the *sender's* state.
+
+    Keyed by ``(src, dst)``: every plan phase emits at most one message per
+    ordered rank pair (grouped phases by construction; inter chunks because a
+    chunk index never repeats an (len_senders, len_receivers) residue pair).
+    A duplicate post is a plan bug and fails loudly instead of silently
+    overwriting the first payload.
+    """
 
     def __init__(self) -> None:
-        self.store: Dict[Tuple[int, int, int], np.ndarray] = {}
+        self.store: Dict[Tuple[int, int], np.ndarray] = {}
 
     def post(self, msg: Message, values: np.ndarray) -> None:
         assert values.shape == msg.idx.shape
-        self.store[(msg.src, msg.dst, int(msg.idx[0]) if msg.size else -1)] = values
+        key = (msg.src, msg.dst)
+        assert key not in self.store, \
+            f"duplicate message for rank pair {key}: plan emitted two messages " \
+            f"in one phase for the same (src, dst)"
+        self.store[key] = values
 
     def fetch(self, msg: Message) -> np.ndarray:
-        return self.store[(msg.src, msg.dst, int(msg.idx[0]) if msg.size else -1)]
+        return self.store[(msg.src, msg.dst)]
 
 
 def _gather_from(available: Dict[int, float], idx: np.ndarray) -> np.ndarray:

@@ -14,6 +14,25 @@ XLA programs are static-SPMD, so the comm plans of :mod:`comm_graph` are
 Mesh convention: ``("node", "proc")`` with shape ``(n_nodes, ppn)`` — on a
 real fleet "node" is the pod/DCI axis and "proc" the intra-pod ICI axis.
 
+Local compute (``local_compute=``):
+
+* ``"bsr"`` (default) — the **fused Pallas BSR path**: the three
+  ``local_spmv`` blocks of Algorithm 3 are compiled into one MXU-aligned
+  block-sparse matmul against the concatenated ``[v_loc | b_on_node |
+  b_off_node]`` operand (:mod:`repro.kernels.bsr_spmv.fused`), with
+  multi-RHS (nv-wide SpMM) support.  Slots are ordered on-process →
+  on-node → off-node, so the Pallas pipeline streams the blocks that
+  depend on inter-node data last — the paper's Isend/compute overlap,
+  expressed as pipeline stages.
+* ``"coo"`` — scalar ``segment_sum`` gathers (the pre-fusion reference
+  path, kept as an in-graph oracle and for nv on hardware without Pallas).
+
+Plan compilation is fully vectorised (bulk ``np.searchsorted`` against the
+slot maps :meth:`NAPPlan.recv_slot_map` exposes — no per-element Python
+loops) and cached keyed on (matrix structure+values, partition, topology,
+block shape), so repeated SpMVs (AMG V-cycles, training steps) pay the
+plan-build cost once.
+
 Padding note: all per-rank buffers are padded to the max over ranks; the
 paper's T/U load balancing minimises exactly this padding.  Effective vs
 padded bytes are both reported by :func:`padded_traffic`.
@@ -21,7 +40,7 @@ padded bytes are both reported by :func:`padded_traffic`.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
+import hashlib
 from typing import Dict, List, Optional, Tuple
 
 import numpy as np
@@ -30,12 +49,16 @@ import jax
 import jax.numpy as jnp
 from jax.ops import segment_sum
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
-from jax.experimental.shard_map import shard_map
 
-from repro.core.comm_graph import Message, NAPPlan, StandardPlan, build_nap_plan, build_standard_plan
+from repro.compat import shard_map
+from repro.core.comm_graph import (Message, NAPPlan, StandardPlan,
+                                   build_nap_plan, build_standard_plan,
+                                   lookup_slots)
 from repro.core.partition import RowPartition
 from repro.core.spmv import LocalBlocks, split_all_blocks
 from repro.core.topology import Topology
+from repro.kernels.bsr_spmv.fused import fused_bsr_spmm
+from repro.sparse.bsr import BSR
 from repro.sparse.csr import CSR
 
 
@@ -46,18 +69,8 @@ def _pad_to(arrs: List[np.ndarray], pad: int, fill: float = 0) -> np.ndarray:
     return out
 
 
-def _msg_by_dst(msgs: List[Message]) -> Dict[int, Message]:
-    return {m.dst: m for m in msgs}
-
-
-def _msg_by_src(msgs: List[Message]) -> Dict[int, Message]:
-    return {m.src: m for m in msgs}
-
-
-def _pos_in(idx: np.ndarray, j: int) -> int:
-    p = int(np.searchsorted(idx, j))
-    assert p < idx.size and idx[p] == j
-    return p
+def _ceil_to(x: int, b: int) -> int:
+    return -(-x // b) * b
 
 
 @dataclasses.dataclass
@@ -69,6 +82,33 @@ class CompiledNAP:
     rows_pad: int
     pads: Dict[str, int]          # full/init/inter/final/bnode/boff/nnz pads
     arrays: Dict[str, np.ndarray]  # stacked [n_procs, ...] index/value arrays
+    plan: Optional[NAPPlan] = None          # kept for traffic accounting
+    block_shape: Tuple[int, int] = (8, 128)  # fused BSR (bm, bn)
+    # element column offsets of the concatenated fused x operand, all
+    # multiples of bn: [0, vblk) = v_loc, [vblk, vblk+nblk) = on-node
+    # buffer, [vblk+nblk, vblk+nblk+oblk) = off-node buffer.
+    bsr_layout: Dict[str, int] = dataclasses.field(default_factory=dict)
+    # rank-local blocks retained for lazy fused-BSR emission
+    local_blocks: Optional[List[LocalBlocks]] = None
+
+    def ensure_fused(self) -> None:
+        """Materialise the fused Pallas BSR arrays (lazily, once).
+
+        The fused layout densifies (bm, bn) tiles, which on block-hostile
+        structures costs far more memory/time than the gather maps — so it
+        is built only when a "bsr" executor is requested, and cached on the
+        compiled plan (the compile cache then amortises it across SpMVs).
+        """
+        if "fused_cols" in self.arrays:
+            return
+        assert self.local_blocks is not None, "compiled plan lost its blocks"
+        bm, bn = self.block_shape
+        fc, fb, layout = _fused_bsr_arrays(
+            self.local_blocks, self.rows_pad, self.pads["bnode"],
+            self.pads["boff"], bm, bn)
+        self.arrays["fused_cols"] = fc
+        self.arrays["fused_blocks"] = fb
+        self.bsr_layout.update(layout)
 
     def device_arrays(self) -> Dict[str, np.ndarray]:
         """Reshape the leading rank dim to (n_nodes, ppn) for mesh sharding."""
@@ -76,8 +116,94 @@ class CompiledNAP:
         return {k: v.reshape((nn, ppn) + v.shape[1:]) for k, v in self.arrays.items()}
 
 
+# ---------------------------------------------------------------------------
+# Plan compilation (vectorised + cached)
+# ---------------------------------------------------------------------------
+
+_COMPILE_CACHE: Dict[tuple, CompiledNAP] = {}
+_COMPILE_CACHE_MAX = 16  # LRU bound: entries retain plans + dense fused blocks
+
+
+def clear_compile_cache() -> None:
+    _COMPILE_CACHE.clear()
+
+
+def _cache_put(key: tuple, compiled: CompiledNAP) -> None:
+    while len(_COMPILE_CACHE) >= _COMPILE_CACHE_MAX:
+        _COMPILE_CACHE.pop(next(iter(_COMPILE_CACHE)))
+    _COMPILE_CACHE[key] = compiled
+
+
+def _cache_get(key: tuple) -> Optional[CompiledNAP]:
+    hit = _COMPILE_CACHE.pop(key, None)
+    if hit is not None:
+        _COMPILE_CACHE[key] = hit  # re-insert: dict order is the LRU order
+    return hit
+
+
+def _cache_key(a: CSR, part: RowPartition, topo: Topology,
+               block_shape: Tuple[int, int]) -> tuple:
+    h = hashlib.sha1()
+    for arr in (a.indptr, a.indices, a.data, part.owner):
+        h.update(np.ascontiguousarray(arr).tobytes())
+    return (h.hexdigest(), a.shape, topo.n_nodes, topo.ppn, tuple(block_shape))
+
+
+def _fused_bsr_arrays(blocks: List[LocalBlocks], rows_pad: int,
+                      bnode_pad: int, boff_pad: int,
+                      bm: int, bn: int) -> Tuple[np.ndarray, np.ndarray, Dict[str, int]]:
+    """Fuse each rank's three column blocks into one padded-uniform BSR.
+
+    The element column domain is the concatenated x operand
+    ``[v_loc | b_on_node | b_off_node]`` with every segment padded to a
+    multiple of bn, so segment boundaries land on block boundaries and a
+    block column never straddles two buffers.  Block columns sort ascending
+    within each block row, which orders slots on-process → on-node →
+    off-node — the overlap-friendly streaming order.
+    """
+    vblk = _ceil_to(max(rows_pad, 1), bn)
+    nblk = _ceil_to(max(bnode_pad, 1), bn)
+    oblk = _ceil_to(max(boff_pad, 1), bn)
+    n_cols = vblk + nblk + oblk
+    per_rank: List[BSR] = []
+    for blk in blocks:
+        op_r, op_c, op_v = blk.on_proc.to_coo()
+        on_r, on_c, on_v = blk.on_node.to_coo()
+        off_r, off_c, off_v = blk.off_node.to_coo()
+        rows = np.concatenate([op_r, on_r, off_r])
+        cols = np.concatenate([op_c, vblk + on_c, vblk + nblk + off_c])
+        vals = np.concatenate([op_v, on_v, off_v])
+        per_rank.append(BSR.from_coo(rows, cols, vals, (rows_pad, n_cols),
+                                     bm=bm, bn=bn))
+    cols, data, kmax = _stack_padded_bsr(per_rank)
+    layout = dict(vblk=vblk, nblk=nblk, oblk=oblk,
+                  n_brows=per_rank[0].n_brows, kmax=kmax)
+    return cols, data, layout
+
+
+def _stack_padded_bsr(per_rank: List[BSR]) -> Tuple[np.ndarray, np.ndarray, int]:
+    """Align every rank's padded-uniform layout to one shared kmax and stack
+    into the [n_procs, n_brows, kmax(, bm, bn)] arrays the kernel consumes."""
+    kmax = max(1, max((int(np.diff(b.indptr).max(initial=0)) for b in per_rank),
+                      default=1))
+    cols_s, blocks_s = [], []
+    for b in per_rank:
+        c, d, _ = b.padded_uniform(kmax=kmax)
+        cols_s.append(c)
+        blocks_s.append(d)
+    return np.stack(cols_s), np.stack(blocks_s), kmax
+
+
 def compile_nap(a: CSR, part: RowPartition, topo: Topology,
-                plan: Optional[NAPPlan] = None) -> CompiledNAP:
+                plan: Optional[NAPPlan] = None,
+                block_shape: Tuple[int, int] = (8, 128),
+                cache: bool = True) -> CompiledNAP:
+    key = None
+    if plan is None and cache:
+        key = _cache_key(a, part, topo, block_shape)
+        hit = _cache_get(key)
+        if hit is not None:
+            return hit
     if plan is None:
         plan = build_nap_plan(a.indptr, a.indices, part, topo, pairing="aligned")
     n_procs, ppn, n_nodes = topo.n_procs, topo.ppn, topo.n_nodes
@@ -101,9 +227,6 @@ def compile_nap(a: CSR, part: RowPartition, topo: Topology,
         "off_node": max(1, max(b.off_node.nnz for b in blocks)),
     }
 
-    A: Dict[str, List[np.ndarray]] = {k: [] for k in (
-        "v_loc_init",  # not an index array; filled by caller
-    )}
     arrays: Dict[str, np.ndarray] = {}
 
     def stack_int(name: str, per_rank: List[np.ndarray], shape: Tuple[int, ...]) -> None:
@@ -117,90 +240,65 @@ def compile_nap(a: CSR, part: RowPartition, topo: Topology,
     coo = {k: {"rows": [], "cols": [], "vals": []} for k in nnz_pads}
 
     for r in range(n_procs):
-        p_r, n_r = topo.proc_node(r)
         blk = blocks[r]
 
         # -- full-local sends: [ppn, full_pad] source local-row positions ----
         fs = np.zeros((ppn, full_pad), dtype=np.int32)
         for m in plan.local_full_sends[r]:
-            q = topo.local_of(m.dst)
-            fs[q, : m.size] = local_index[m.idx]
+            fs[topo.local_of(m.dst), : m.size] = local_index[m.idx]
         full_send.append(fs)
 
         # -- init sends -------------------------------------------------------
         isnd = np.zeros((ppn, init_pad), dtype=np.int32)
         for m in plan.local_init_sends[r]:
-            q = topo.local_of(m.dst)
-            isnd[q, : m.size] = local_index[m.idx]
+            isnd[topo.local_of(m.dst), : m.size] = local_index[m.idx]
         init_send.append(isnd)
 
         # -- inter gather: positions into concat(v_loc, init_recv_flat) -------
-        init_recv_by_src = {topo.local_of(m.src): m for m in plan.local_init_recvs[r]}
+        # (bulk searchsorted against the init-phase slot map; no element loops)
+        init_map = plan.recv_slot_map(r, "init", init_pad)
         ig = np.zeros((n_nodes, inter_pad), dtype=np.int32)
         for m in plan.inter_sends[r]:
-            dst_node = topo.node_of(m.dst)
-            for k, j in enumerate(m.idx):
-                if part.owner[j] == r:
-                    ig[dst_node, k] = local_index[j]
-                else:
-                    src_p = topo.local_of(int(part.owner[j]))
-                    msg = init_recv_by_src[src_p]
-                    ig[dst_node, k] = rows_pad + src_p * init_pad + _pos_in(msg.idx, int(j))
+            owners = part.owner[m.idx]
+            own = owners == r
+            pos = np.empty(m.size, dtype=np.int64)
+            pos[own] = local_index[m.idx[own]]
+            if not own.all():
+                pos[~own] = rows_pad + lookup_slots(init_map, m.idx[~own])
+            ig[topo.node_of(m.dst), : m.size] = pos
         inter_gather.append(ig)
 
         # -- final sends: positions into inter_recv_flat ----------------------
-        inter_recv_by_node = {topo.node_of(m.src): m for m in plan.inter_recvs[r]}
+        inter_map = plan.recv_slot_map(r, "inter", inter_pad)
         fsnd = np.zeros((ppn, final_pad), dtype=np.int32)
         for m in plan.local_final_sends[r]:
-            q = topo.local_of(m.dst)
-            for k, j in enumerate(m.idx):
-                src_n = None
-                for nn, rmsg in inter_recv_by_node.items():
-                    hit = np.searchsorted(rmsg.idx, j)
-                    if hit < rmsg.idx.size and rmsg.idx[hit] == j:
-                        src_n = nn
-                        fsnd[q, k] = nn * inter_pad + hit
-                        break
-                assert src_n is not None, "final-send value must have arrived inter-node"
+            fsnd[topo.local_of(m.dst), : m.size] = lookup_slots(inter_map, m.idx)
         final_send.append(fsnd)
 
         # -- on-node buffer gather: positions into full_recv_flat -------------
-        full_recv_by_src = {topo.local_of(m.src): m for m in plan.local_full_recvs[r]}
+        full_map = plan.recv_slot_map(r, "full", full_pad)
         bg = np.zeros((bnode_pad,), dtype=np.int32)
-        for slot, j in enumerate(blk.on_node_cols):
-            src_p = topo.local_of(int(part.owner[j]))
-            msg = full_recv_by_src[src_p]
-            bg[slot] = src_p * full_pad + _pos_in(msg.idx, int(j))
+        bg[: blk.on_node_cols.size] = lookup_slots(full_map, blk.on_node_cols)
         bnode_gather.append(bg)
 
         # -- off-node buffer gather: concat(inter_recv_flat, final_recv_flat) -
-        final_recv_by_src = {topo.local_of(m.src): m for m in plan.local_final_recvs[r]}
+        final_map = plan.recv_slot_map(r, "final", final_pad)
+        comb_idx = np.concatenate([inter_map[0], final_map[0]])
+        comb_pos = np.concatenate([inter_map[1],
+                                   n_nodes * inter_pad + final_map[1]])
+        order = np.argsort(comb_idx, kind="stable")
         og = np.zeros((boff_pad,), dtype=np.int32)
-        for slot, j in enumerate(blk.off_node_cols):
-            placed = False
-            for nn, rmsg in inter_recv_by_node.items():
-                hit = np.searchsorted(rmsg.idx, j)
-                if hit < rmsg.idx.size and rmsg.idx[hit] == j:
-                    og[slot] = nn * inter_pad + hit
-                    placed = True
-                    break
-            if not placed:
-                for src_p, rmsg in final_recv_by_src.items():
-                    hit = np.searchsorted(rmsg.idx, j)
-                    if hit < rmsg.idx.size and rmsg.idx[hit] == j:
-                        og[slot] = n_nodes * inter_pad + src_p * final_pad + hit
-                        placed = True
-                        break
-            assert placed, f"rank {r} off-node col {j} unreachable"
+        og[: blk.off_node_cols.size] = lookup_slots(
+            (comb_idx[order], comb_pos[order]), blk.off_node_cols)
         boff_gather.append(og)
 
         # -- COO blocks --------------------------------------------------------
-        for key, block in (("on_proc", blk.on_proc), ("on_node", blk.on_node),
-                           ("off_node", blk.off_node)):
+        for key_c, block in (("on_proc", blk.on_proc), ("on_node", blk.on_node),
+                             ("off_node", blk.off_node)):
             rows_i, cols_i, vals_i = block.to_coo()
-            coo[key]["rows"].append(rows_i.astype(np.int32))
-            coo[key]["cols"].append(cols_i.astype(np.int32))
-            coo[key]["vals"].append(vals_i)
+            coo[key_c]["rows"].append(rows_i.astype(np.int32))
+            coo[key_c]["cols"].append(cols_i.astype(np.int32))
+            coo[key_c]["vals"].append(vals_i)
 
     stack_int("full_send", full_send, (ppn, full_pad))
     stack_int("init_send", init_send, (ppn, init_pad))
@@ -208,104 +306,170 @@ def compile_nap(a: CSR, part: RowPartition, topo: Topology,
     stack_int("inter_gather", inter_gather, (n_nodes, inter_pad))
     stack_int("bnode_gather", bnode_gather, (bnode_pad,))
     stack_int("boff_gather", boff_gather, (boff_pad,))
-    for key in coo:
-        arrays[f"{key}_rows"] = _pad_to(coo[key]["rows"], nnz_pads[key]).astype(np.int32)
-        arrays[f"{key}_cols"] = _pad_to(coo[key]["cols"], nnz_pads[key]).astype(np.int32)
-        arrays[f"{key}_vals"] = _pad_to(
-            [v.astype(np.float32) for v in coo[key]["vals"]], nnz_pads[key], fill=0.0)
+    for key_c in coo:
+        arrays[f"{key_c}_rows"] = _pad_to(coo[key_c]["rows"], nnz_pads[key_c]).astype(np.int32)
+        arrays[f"{key_c}_cols"] = _pad_to(coo[key_c]["cols"], nnz_pads[key_c]).astype(np.int32)
+        arrays[f"{key_c}_vals"] = _pad_to(
+            [v.astype(np.float32) for v in coo[key_c]["vals"]], nnz_pads[key_c], fill=0.0)
 
     pads = dict(full=full_pad, init=init_pad, inter=inter_pad, final=final_pad,
                 bnode=bnode_pad, boff=boff_pad, **{f"nnz_{k}": v for k, v in nnz_pads.items()})
-    return CompiledNAP(topo=topo, part=part, rows_pad=rows_pad, pads=pads, arrays=arrays)
+    compiled = CompiledNAP(topo=topo, part=part, rows_pad=rows_pad, pads=pads,
+                           arrays=arrays, plan=plan,
+                           block_shape=tuple(block_shape),
+                           local_blocks=blocks)
+    if key is not None:
+        _cache_put(key, compiled)
+    return compiled
 
+
+# ---------------------------------------------------------------------------
+# Vector packing
+# ---------------------------------------------------------------------------
 
 def pack_vector(v: np.ndarray, part: RowPartition, topo: Topology, rows_pad: int) -> np.ndarray:
-    """Global vector -> [n_nodes, ppn, rows_pad] padded shards."""
-    out = np.zeros((topo.n_procs, rows_pad), dtype=np.float32)
+    """Global vector/multivector -> [n_nodes, ppn, rows_pad(, nv)] shards."""
+    v = np.asarray(v)
+    out = np.zeros((topo.n_procs, rows_pad) + v.shape[1:], dtype=np.float32)
     for r in range(topo.n_procs):
         rows = part.rows_of(r)
         out[r, : rows.size] = v[rows]
-    return out.reshape(topo.n_nodes, topo.ppn, rows_pad)
+    return out.reshape((topo.n_nodes, topo.ppn, rows_pad) + v.shape[1:])
 
 
 def unpack_vector(w: np.ndarray, part: RowPartition, topo: Topology) -> np.ndarray:
-    """[n_nodes, ppn, rows_pad] -> global vector."""
-    w = np.asarray(w).reshape(topo.n_procs, -1)
-    out = np.zeros(part.n_rows, dtype=w.dtype)
+    """[n_nodes, ppn, rows_pad(, nv)] -> global vector/multivector."""
+    w = np.asarray(w)
+    w = w.reshape((topo.n_procs, -1) + w.shape[3:] if w.ndim == 4
+                  else (topo.n_procs, -1))
+    out = np.zeros((part.n_rows,) + w.shape[2:], dtype=w.dtype)
     for r in range(topo.n_procs):
         rows = part.rows_of(r)
         out[rows] = w[r, : rows.size]
     return out
 
 
-def nap_spmv_shardmap(compiled: CompiledNAP, mesh: Mesh):
-    """Build the jitted shard_map NAPSpMV: f(v_shards, **device_arrays) -> w."""
+# ---------------------------------------------------------------------------
+# NAP executor
+# ---------------------------------------------------------------------------
+
+def nap_spmv_shardmap(compiled: CompiledNAP, mesh: Mesh,
+                      local_compute: str = "bsr", nv_block: int = 128,
+                      interpret: bool = True):
+    """Build the jitted shard_map NAPSpMV: f(v_shards) -> w_shards.
+
+    ``v_shards`` is [n_nodes, ppn, rows_pad] or [n_nodes, ppn, rows_pad, nv]
+    (multi-RHS SpMM); the output matches.  ``local_compute`` selects the
+    fused Pallas BSR kernel ("bsr", default) or the scalar segment_sum
+    reference ("coo").
+    """
+    if local_compute not in ("bsr", "coo"):
+        raise ValueError(local_compute)
+    if local_compute == "bsr":
+        compiled.ensure_fused()
     topo = compiled.topo
     rows_pad = compiled.rows_pad
+    lay = compiled.bsr_layout
 
     def per_device(v_loc, full_send, init_send, final_send, inter_gather,
-                   bnode_gather, boff_gather,
-                   on_proc_rows, on_proc_cols, on_proc_vals,
-                   on_node_rows, on_node_cols, on_node_vals,
-                   off_node_rows, off_node_cols, off_node_vals):
+                   bnode_gather, boff_gather, *tail):
         squeeze = lambda x: x.reshape(x.shape[2:])
-        v_loc = squeeze(v_loc)
-        (full_send, init_send, final_send, inter_gather, bnode_gather, boff_gather,
-         on_proc_rows, on_proc_cols, on_proc_vals, on_node_rows, on_node_cols,
-         on_node_vals, off_node_rows, off_node_cols, off_node_vals) = map(
-            squeeze, (full_send, init_send, final_send, inter_gather, bnode_gather,
-                      boff_gather, on_proc_rows, on_proc_cols, on_proc_vals,
-                      on_node_rows, on_node_cols, on_node_vals, off_node_rows,
-                      off_node_cols, off_node_vals))
+        v_loc = squeeze(v_loc)                              # [rows_pad, nv]
+        (full_send, init_send, final_send, inter_gather, bnode_gather,
+         boff_gather) = map(squeeze, (full_send, init_send, final_send,
+                                      inter_gather, bnode_gather, boff_gather))
+        tail = tuple(map(squeeze, tail))
+        nv = v_loc.shape[-1]
 
         # Phase A+B (overlap in Alg. 3): intra-node exchanges over "proc".
-        full_out = v_loc[full_send]                       # [ppn, full_pad]
+        full_out = v_loc[full_send]                       # [ppn, full_pad, nv]
         full_recv = jax.lax.all_to_all(full_out, "proc", 0, 0, tiled=True)
         init_out = v_loc[init_send]
         init_recv = jax.lax.all_to_all(init_out, "proc", 0, 0, tiled=True)
 
         # Phase C: ONE aggregated inter-node all-to-all over "node".
-        staged = jnp.concatenate([v_loc, init_recv.reshape(-1)])
-        inter_out = staged[inter_gather]                  # [n_nodes, inter_pad]
+        staged = jnp.concatenate([v_loc, init_recv.reshape(-1, nv)])
+        inter_out = staged[inter_gather]                  # [n_nodes, inter_pad, nv]
         inter_recv = jax.lax.all_to_all(inter_out, "node", 0, 0, tiled=True)
 
-        # local_spmv(A_on_process, v) — no communication needed (Alg. 3).
-        w = segment_sum(on_proc_vals * v_loc[on_proc_cols], on_proc_rows,
-                        num_segments=rows_pad)
-        # local_spmv(A_on_node, b_l->l)
-        bnode = full_recv.reshape(-1)[bnode_gather]
-        w = w + segment_sum(on_node_vals * bnode[on_node_cols], on_node_rows,
-                            num_segments=rows_pad)
-
         # Phase D: intra-node scatter of received off-node data.
-        inter_flat = inter_recv.reshape(-1)
+        inter_flat = inter_recv.reshape(-1, nv)
         final_out = inter_flat[final_send]
         final_recv = jax.lax.all_to_all(final_out, "proc", 0, 0, tiled=True)
-        boff = jnp.concatenate([inter_flat, final_recv.reshape(-1)])[boff_gather]
-        # local_spmv(A_off_node, b_nl->l)
-        w = w + segment_sum(off_node_vals * boff[off_node_cols], off_node_rows,
-                            num_segments=rows_pad)
-        return w.reshape(1, 1, rows_pad)
+
+        # Buffers of Algorithm 3's three local_spmv calls.
+        bnode = full_recv.reshape(-1, nv)[bnode_gather]   # [bnode_pad, nv]
+        boff = jnp.concatenate([inter_flat, final_recv.reshape(-1, nv)])[boff_gather]
+
+        if local_compute == "bsr":
+            fused_cols, fused_blocks = tail
+            xv = jnp.pad(v_loc, ((0, lay["vblk"] - rows_pad), (0, 0)))
+            xn = jnp.pad(bnode, ((0, lay["nblk"] - bnode.shape[0]), (0, 0)))
+            xo = jnp.pad(boff, ((0, lay["oblk"] - boff.shape[0]), (0, 0)))
+            bn = compiled.block_shape[1]
+            x_cat = jnp.concatenate([xv, xn, xo]).reshape(-1, bn, nv)
+            w_tiles = fused_bsr_spmm(fused_cols, fused_blocks, x_cat,
+                                     nv_block=nv_block, interpret=interpret)
+            w = w_tiles.reshape(-1, nv)[:rows_pad]
+        else:
+            (on_proc_rows, on_proc_cols, on_proc_vals,
+             on_node_rows, on_node_cols, on_node_vals,
+             off_node_rows, off_node_cols, off_node_vals) = tail
+            # local_spmv(A_on_process, v) — no communication needed (Alg. 3).
+            w = segment_sum(on_proc_vals[:, None] * v_loc[on_proc_cols],
+                            on_proc_rows, num_segments=rows_pad)
+            # local_spmv(A_on_node, b_l->l)
+            w = w + segment_sum(on_node_vals[:, None] * bnode[on_node_cols],
+                                on_node_rows, num_segments=rows_pad)
+            # local_spmv(A_off_node, b_nl->l)
+            w = w + segment_sum(off_node_vals[:, None] * boff[off_node_cols],
+                                off_node_rows, num_segments=rows_pad)
+        return w.reshape(1, 1, rows_pad, -1)
 
     dev = compiled.device_arrays()
-    names = ["full_send", "init_send", "final_send", "inter_gather", "bnode_gather",
-             "boff_gather", "on_proc_rows", "on_proc_cols", "on_proc_vals",
-             "on_node_rows", "on_node_cols", "on_node_vals",
-             "off_node_rows", "off_node_cols", "off_node_vals"]
+    names = ["full_send", "init_send", "final_send", "inter_gather",
+             "bnode_gather", "boff_gather"]
+    if local_compute == "bsr":
+        names += ["fused_cols", "fused_blocks"]
+    else:
+        names += ["on_proc_rows", "on_proc_cols", "on_proc_vals",
+                  "on_node_rows", "on_node_cols", "on_node_vals",
+                  "off_node_rows", "off_node_cols", "off_node_vals"]
     spec = P("node", "proc")
     smapped = shard_map(per_device, mesh=mesh,
-                        in_specs=(spec,) * (1 + len(names)), out_specs=spec)
+                        in_specs=(spec,) * (1 + len(names)), out_specs=spec,
+                        check_vma=False)
 
     @jax.jit
-    def run(v_shards):
+    def run4(v_shards):
         return smapped(v_shards, *[dev[k] for k in names])
+
+    def run(v_shards):
+        v_shards = jnp.asarray(v_shards, jnp.float32)
+        if v_shards.ndim == 3:
+            return run4(v_shards[..., None])[..., 0]
+        return run4(v_shards)
 
     return run
 
 
+# ---------------------------------------------------------------------------
+# Standard (Algorithm 1) executor
+# ---------------------------------------------------------------------------
+
 def standard_spmv_shardmap(a: CSR, part: RowPartition, topo: Topology, mesh: Mesh,
-                           plan: Optional[StandardPlan] = None):
-    """Algorithm 1 as a flat padded all-to-all over ("node","proc")."""
+                           plan: Optional[StandardPlan] = None,
+                           local_compute: str = "bsr",
+                           block_shape: Tuple[int, int] = (8, 128),
+                           nv_block: int = 128, interpret: bool = True):
+    """Algorithm 1 as a flat padded all-to-all over ("node","proc").
+
+    Local compute runs through the same fused BSR kernel as the NAP path
+    (one combined [v_loc | recv buffer] operand) or the scalar segment_sum
+    reference, selected by ``local_compute``.
+    """
+    if local_compute not in ("bsr", "coo"):
+        raise ValueError(local_compute)
     if plan is None:
         plan = build_standard_plan(a.indptr, a.indices, part, topo)
     n_procs = topo.n_procs
@@ -323,62 +487,113 @@ def standard_spmv_shardmap(a: CSR, part: RowPartition, topo: Topology, mesh: Mes
     buf_pad = max(1, max(b.on_node_cols.size + b.off_node_cols.size for b in blocks))
     buf_gather = np.zeros((n_procs, buf_pad), dtype=np.int32)
     nnz_pad = max(1, max(b.on_node.nnz + b.off_node.nnz + b.on_proc.nnz for b in blocks))
-    rows_s, cols_s, vals_s = [], [], []
+    bm, bn = block_shape
+    vblk = _ceil_to(rows_pad, bn)
+    bblk = _ceil_to(buf_pad, bn)
+    rows_s, cols_s, vals_s, fused = [], [], [], []
     for r in range(n_procs):
         blk = blocks[r]
-        recv_by_src = _msg_by_src(plan.recvs[r])
         cols_all = np.concatenate([blk.on_node_cols, blk.off_node_cols])
-        for slot, j in enumerate(cols_all):
-            src = int(part.owner[j])
-            buf_gather[r, slot] = src * pair_pad + _pos_in(recv_by_src[src].idx, int(j))
+        buf_gather[r, : cols_all.size] = lookup_slots(
+            plan.recv_slot_map(r, pair_pad), cols_all)
         rr0, cc0, vv0 = blk.on_proc.to_coo()
         rr1, cc1, vv1 = blk.on_node.to_coo()
         rr2, cc2, vv2 = blk.off_node.to_coo()
-        # shift buffer columns: on_proc -> [0, rows_pad), buffer -> offset rows_pad
-        rows_s.append(np.concatenate([rr0, rr1, rr2]).astype(np.int32))
-        cols_s.append(np.concatenate([cc0, rows_pad + cc1,
-                                      rows_pad + blk.on_node_cols.size + cc2]).astype(np.int32))
-        vals_s.append(np.concatenate([vv0, vv1, vv2]).astype(np.float32))
+        rr = np.concatenate([rr0, rr1, rr2])
+        vv = np.concatenate([vv0, vv1, vv2])
+        if local_compute == "coo":
+            # shift buffer columns: on_proc -> [0, rows_pad), buffer -> rows_pad+
+            rows_s.append(rr.astype(np.int32))
+            cols_s.append(np.concatenate([cc0, rows_pad + cc1,
+                                          rows_pad + blk.on_node_cols.size + cc2]).astype(np.int32))
+            vals_s.append(vv.astype(np.float32))
+        else:
+            # fused BSR element domain: [v_loc | buffer], each bn-aligned
+            fused.append(BSR.from_coo(
+                rr, np.concatenate([cc0, vblk + cc1,
+                                    vblk + blk.on_node_cols.size + cc2]), vv,
+                (rows_pad, vblk + bblk), bm=bm, bn=bn))
 
-    A_rows = _pad_to(rows_s, nnz_pad).astype(np.int32)
-    A_cols = _pad_to(cols_s, nnz_pad).astype(np.int32)
-    A_vals = _pad_to(vals_s, nnz_pad, fill=0.0)
     nn, ppn = topo.n_nodes, topo.ppn
     reshape = lambda x: x.reshape((nn, ppn) + x.shape[1:])
-    dev = dict(send_idx=reshape(send_idx), buf_gather=reshape(buf_gather),
-               A_rows=reshape(A_rows), A_cols=reshape(A_cols), A_vals=reshape(A_vals))
+    dev = dict(send_idx=reshape(send_idx), buf_gather=reshape(buf_gather))
+    if local_compute == "coo":
+        dev["A_rows"] = reshape(_pad_to(rows_s, nnz_pad).astype(np.int32))
+        dev["A_cols"] = reshape(_pad_to(cols_s, nnz_pad).astype(np.int32))
+        dev["A_vals"] = reshape(_pad_to(vals_s, nnz_pad, fill=0.0))
+    else:
+        f_cols, f_blocks, _ = _stack_padded_bsr(fused)
+        dev["fused_cols"] = reshape(f_cols)
+        dev["fused_blocks"] = reshape(f_blocks)
 
-    def per_device(v_loc, send_idx, buf_gather, A_rows, A_cols, A_vals):
+    def per_device(v_loc, send_idx, buf_gather, *tail):
         squeeze = lambda x: x.reshape(x.shape[2:])
-        v_loc, send_idx, buf_gather, A_rows, A_cols, A_vals = map(
-            squeeze, (v_loc, send_idx, buf_gather, A_rows, A_cols, A_vals))
-        out = v_loc[send_idx]                               # [n_procs, pair_pad]
+        v_loc, send_idx, buf_gather = map(squeeze, (v_loc, send_idx, buf_gather))
+        tail = tuple(map(squeeze, tail))
+        nv = v_loc.shape[-1]
+        out = v_loc[send_idx]                               # [n_procs, pair_pad, nv]
         recv = jax.lax.all_to_all(out, ("node", "proc"), 0, 0, tiled=True)
-        buf = jnp.concatenate([v_loc, recv.reshape(-1)[buf_gather]])
-        w = segment_sum(A_vals * buf[A_cols], A_rows, num_segments=rows_pad)
-        return w.reshape(1, 1, rows_pad)
+        buf = recv.reshape(-1, nv)[buf_gather]              # [buf_pad, nv]
+        if local_compute == "bsr":
+            fused_cols, fused_blocks = tail
+            xv = jnp.pad(v_loc, ((0, vblk - rows_pad), (0, 0)))
+            xb = jnp.pad(buf, ((0, bblk - buf.shape[0]), (0, 0)))
+            x_cat = jnp.concatenate([xv, xb]).reshape(-1, bn, nv)
+            w_tiles = fused_bsr_spmm(fused_cols, fused_blocks, x_cat,
+                                     nv_block=nv_block, interpret=interpret)
+            w = w_tiles.reshape(-1, nv)[:rows_pad]
+        else:
+            A_rows, A_cols, A_vals = tail
+            full = jnp.concatenate([v_loc, buf])
+            w = segment_sum(A_vals[:, None] * full[A_cols], A_rows,
+                            num_segments=rows_pad)
+        return w.reshape(1, 1, rows_pad, -1)
 
+    names = (["fused_cols", "fused_blocks"] if local_compute == "bsr"
+             else ["A_rows", "A_cols", "A_vals"])
     spec = P("node", "proc")
-    smapped = shard_map(per_device, mesh=mesh, in_specs=(spec,) * 6, out_specs=spec)
+    smapped = shard_map(per_device, mesh=mesh,
+                        in_specs=(spec,) * (3 + len(names)), out_specs=spec,
+                        check_vma=False)
 
     @jax.jit
-    def run(v_shards):
+    def run4(v_shards):
         return smapped(v_shards, dev["send_idx"], dev["buf_gather"],
-                       dev["A_rows"], dev["A_cols"], dev["A_vals"])
+                       *[dev[k] for k in names])
+
+    def run(v_shards):
+        v_shards = jnp.asarray(v_shards, jnp.float32)
+        if v_shards.ndim == 3:
+            return run4(v_shards[..., None])[..., 0]
+        return run4(v_shards)
 
     return run, rows_pad
 
 
+# ---------------------------------------------------------------------------
+# Traffic accounting
+# ---------------------------------------------------------------------------
+
 def padded_traffic(compiled: CompiledNAP) -> Dict[str, int]:
-    """Padded (SPMD-actual) vs effective bytes per phase, float32 payloads."""
-    topo, pads = compiled.topo, compiled.pads
-    eff = {
-        "inter": sum(m.size for r in range(topo.n_procs) for m in []),
-    }
+    """Padded (SPMD-actual) vs effective bytes per phase, float32 payloads.
+
+    Padded bytes are what the static all-to-alls actually move (every rank
+    sends its full padded buffer every time); effective bytes are the plan's
+    true message payloads — the gap is the padding the paper's T/U balancing
+    minimises.  Effective ≤ padded always.
+    """
+    topo, pads, plan = compiled.topo, compiled.pads, compiled.plan
     n = topo.n_procs
-    return {
+    out = {
         "inter_padded": n * topo.n_nodes * pads["inter"] * 4,
         "full_padded": n * topo.ppn * pads["full"] * 4,
         "init_padded": n * topo.ppn * pads["init"] * 4,
         "final_padded": n * topo.ppn * pads["final"] * 4,
     }
+    if plan is not None:
+        phases = {"inter": plan.inter_sends, "full": plan.local_full_sends,
+                  "init": plan.local_init_sends, "final": plan.local_final_sends}
+        for name, sends in phases.items():
+            out[f"{name}_effective"] = 4 * sum(
+                m.size for msgs in sends for m in msgs)
+    return out

@@ -18,6 +18,17 @@ for larger nv or multi-row blocks.
 
 Padding slots (block col == -1) carry all-zero matrix blocks, so they are
 mathematically inert; the index_map clamps them to 0 to stay in bounds.
+
+The distributed executor (``core/spmv_jax.py``) does NOT call this kernel
+three times for Algorithm 3's three ``local_spmv`` blocks — it uses the
+**fused** variant in :mod:`repro.kernels.bsr_spmv.fused`, which multiplies
+the on-process / on-node / off-node blocks against one concatenated x
+operand in a single ``pallas_call`` (one output-tile accumulation, slots
+ordered so locally-available blocks are streamed first).  The fused kernel
+also tiles the nv (multi-RHS) axis: at nv = 128 the per-step VMEM budget
+matches the figure above; at larger nv the budget stays flat because nv is
+a parallel grid axis, not a larger block.  See fused.py for the breakdown
+and what remains for a real multi-host mesh (ROADMAP "Open items").
 """
 from __future__ import annotations
 
@@ -27,6 +38,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from repro.compat import tpu_compiler_params
 
 
 def _kernel(cols_ref, blk_ref, x_ref, o_ref):
@@ -67,7 +80,7 @@ def bsr_spmm_padded(cols: jax.Array, blocks: jax.Array, x: jax.Array,
         _kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((n_brows, bm, nv), jnp.float32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "arbitrary"),
         ),
         interpret=interpret,

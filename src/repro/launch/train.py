@@ -25,6 +25,7 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.checkpoint import CheckpointManager
+from repro.compat import make_mesh
 from repro.configs import get_config, get_reduced
 from repro.data import SyntheticLM
 from repro.launch.steps import (adamw_config_for, make_train_step,
@@ -54,8 +55,7 @@ def main() -> None:
     cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
     cfg = cfg.replace(grad_accum=1)
     n_dev = jax.device_count()
-    mesh = jax.make_mesh((n_dev, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((n_dev, 1), ("data", "model"))
     model = build_model(cfg, mesh=mesh)
     opt_cfg = adamw_config_for(cfg).__class__(
         lr=args.lr, total_steps=args.steps,

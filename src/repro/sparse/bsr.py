@@ -74,35 +74,55 @@ class BSR:
         nbr = -(-n_rows // bm)
         nbc = -(-n_cols // bn)
         rows, cols, vals = a.to_coo()
-        br, bc = rows // bm, cols // bn
-        key = br * nbc + bc
-        order = np.argsort(key, kind="stable")
-        rows, cols, vals, key = rows[order], cols[order], vals[order], key[order]
-        ukey, start = np.unique(key, return_index=True)
-        start = np.append(start, rows.size)
-        data = np.zeros((ukey.size, bm, bn), dtype=dtype)
-        for b in range(ukey.size):
-            sl = slice(start[b], start[b + 1])
-            data[b, rows[sl] % bm, cols[sl] % bn] = vals[sl]
-        ubr = (ukey // nbc).astype(np.int32)
-        ubc = (ukey % nbc).astype(np.int32)
-        indptr = np.zeros(nbr + 1, dtype=np.int32)
-        np.add.at(indptr, ubr + 1, 1)
-        indptr = np.cumsum(indptr).astype(np.int32)
-        return BSR(indptr=indptr, indices=ubc, data=data,
-                   shape=(nbr * bm, nbc * bn))
+        return _bsr_from_coo(rows, cols, vals, nbr, nbc, bm, bn, dtype)
 
-    def padded_uniform(self) -> Tuple[np.ndarray, np.ndarray, int]:
+    @staticmethod
+    def from_coo(rows: np.ndarray, cols: np.ndarray, vals: np.ndarray,
+                 shape: Tuple[int, int], bm: int = 128, bn: int = 128,
+                 dtype=np.float32) -> "BSR":
+        """COO (element indices) -> BSR, zero-padding up to the block grid.
+        Duplicate entries are summed.  Fully vectorised — this is the
+        conversion path for every rank-local block of the distributed SpMV,
+        so it must scale past 10^7 nnz without Python-level loops."""
+        nbr = -(-shape[0] // bm)
+        nbc = -(-shape[1] // bn)
+        return _bsr_from_coo(np.asarray(rows, np.int64), np.asarray(cols, np.int64),
+                             np.asarray(vals), nbr, nbc, bm, bn, dtype)
+
+    def padded_uniform(self, kmax: int = 0) -> Tuple[np.ndarray, np.ndarray, int]:
         """Pad every block row to the max blocks/row: returns
         (block_cols [n_brows, kmax] int32 with -1 pad,
          blocks [n_brows, kmax, bm, bn], kmax).  This is the static layout
-        the Pallas kernel consumes (grid = (n_brows, kmax))."""
-        kmax = max(1, int(np.diff(self.indptr).max()))
+        the Pallas kernel consumes (grid = (n_brows, kmax)).  A larger
+        ``kmax`` may be forced to align layouts across ranks."""
+        counts = np.diff(self.indptr)
+        kmax = max(kmax, 1, int(counts.max()) if counts.size else 0)
         bm, bn = self.block_shape
+        brow = np.repeat(np.arange(self.n_brows), counts)
+        slot = np.arange(self.n_blocks) - np.repeat(self.indptr[:-1], counts)
         cols = np.full((self.n_brows, kmax), -1, dtype=np.int32)
         blocks = np.zeros((self.n_brows, kmax, bm, bn), dtype=self.data.dtype)
-        for i in range(self.n_brows):
-            k0, k1 = self.indptr[i], self.indptr[i + 1]
-            cols[i, : k1 - k0] = self.indices[k0:k1]
-            blocks[i, : k1 - k0] = self.data[k0:k1]
+        cols[brow, slot] = self.indices
+        blocks[brow, slot] = self.data
         return cols, blocks, kmax
+
+
+def _bsr_from_coo(rows: np.ndarray, cols: np.ndarray, vals: np.ndarray,
+                  nbr: int, nbc: int, bm: int, bn: int, dtype) -> BSR:
+    """Shared vectorised COO -> BSR assembly (block grid of nbr x nbc)."""
+    br, bc = rows // bm, cols // bn
+    key = br * nbc + bc
+    order = np.argsort(key, kind="stable")
+    rows, cols, vals, key = rows[order], cols[order], vals[order], key[order]
+    ukey, start = np.unique(key, return_index=True)
+    counts = np.diff(np.append(start, rows.size))
+    block_id = np.repeat(np.arange(ukey.size), counts)
+    data = np.zeros((ukey.size, bm, bn), dtype=dtype)
+    np.add.at(data, (block_id, rows % bm, cols % bn), vals.astype(dtype))
+    ubr = (ukey // nbc).astype(np.int32)
+    ubc = (ukey % nbc).astype(np.int32)
+    indptr = np.zeros(nbr + 1, dtype=np.int32)
+    np.add.at(indptr, ubr + 1, 1)
+    indptr = np.cumsum(indptr).astype(np.int32)
+    return BSR(indptr=indptr, indices=ubc, data=data,
+               shape=(nbr * bm, nbc * bn))

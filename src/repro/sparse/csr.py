@@ -47,14 +47,20 @@ class CSR:
     def select_rows(self, rows: np.ndarray) -> "CSR":
         counts = np.diff(self.indptr)[rows]
         indptr = np.concatenate([[0], np.cumsum(counts)]).astype(np.int64)
-        take = np.concatenate([np.arange(self.indptr[i], self.indptr[i + 1]) for i in rows]) \
-            if rows.size else np.empty(0, dtype=np.int64)
+        # vectorised gather of each row's nnz range: start offsets repeated
+        # per-element plus an intra-row ramp (no per-row Python loop)
+        starts = self.indptr[rows]
+        take = np.repeat(starts - indptr[:-1], counts) + np.arange(indptr[-1])
         return CSR(indptr=indptr, indices=self.indices[take], data=self.data[take],
                    shape=(int(rows.size), self.shape[1]))
 
     @staticmethod
     def from_coo(rows: np.ndarray, cols: np.ndarray, vals: np.ndarray,
-                 shape: Tuple[int, int], sum_duplicates: bool = True) -> "CSR":
+                 shape: Tuple[int, int], sum_duplicates: bool = True,
+                 assume_sorted: bool = False) -> "CSR":
+        """``assume_sorted`` skips the row-major sort for input already in
+        row-major order (only meaningful with sum_duplicates=False; asserted
+        on the row grouping, which indptr construction relies on)."""
         rows = np.asarray(rows, dtype=np.int64)
         cols = np.asarray(cols, dtype=np.int64)
         vals = np.asarray(vals, dtype=np.float64)
@@ -65,6 +71,8 @@ class CSR:
             uniq, start = np.unique(key, return_index=True)
             summed = np.add.reduceat(vals, start) if vals.size else vals
             rows, cols, vals = rows[start], cols[start], summed
+        elif assume_sorted:
+            assert rows.size < 2 or (np.diff(rows) >= 0).all()
         else:
             order = np.lexsort((cols, rows))
             rows, cols, vals = rows[order], cols[order], vals[order]

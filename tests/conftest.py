@@ -1,0 +1,4 @@
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "multidev: runs a subprocess with a forced multi-device host platform")

@@ -18,8 +18,9 @@ from repro.models.moe import EPInfo, moe_apply_local, moe_apply_sharded, moe_ini
 
 cfg0 = get_reduced("qwen3-moe-235b-a22b").replace(
     n_experts=8, top_k=4, moe_dff=32, d_model=32, capacity_factor=8.0)
-mesh = jax.make_mesh((2, 4), ("pod", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+from repro.compat import make_mesh, set_mesh
+
+mesh = make_mesh((2, 4), ("pod", "model"))
 params = moe_init(jax.random.key(0), cfg0, jnp.float32)
 rng = np.random.default_rng(0)
 x = jnp.asarray(rng.standard_normal((4, 16, cfg0.d_model)) * 0.3, jnp.float32)
@@ -30,7 +31,7 @@ for mode in ("flat", "nap"):
     cfg = cfg0.replace(moe_dispatch=mode)
     ep = EPInfo(inner_axis="model", pod_axis="pod")
     fn = jax.jit(lambda p, xx: moe_apply_sharded(p, cfg, xx, ep, mesh))
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         compiled = fn.lower(params, x).compile()
         got = np.asarray(fn(params, x))
     err = np.abs(got - want).max() / np.abs(want).max()
@@ -49,7 +50,7 @@ def loss_ref(p, xx):
     return (moe_apply_local(p, cfg0, xx) ** 2).sum()
 
 g_ref = jax.grad(loss_ref)(params, x)
-with jax.set_mesh(mesh):
+with set_mesh(mesh):
     g_nap = jax.jit(jax.grad(lambda p, xx: loss(p, xx, "nap")))(params, x)
 for a, b in zip(jax.tree.leaves(g_ref), jax.tree.leaves(g_nap)):
     np.testing.assert_allclose(np.asarray(a), np.asarray(b),

@@ -1,0 +1,26 @@
+"""Fused Pallas BSR NAPSpMV vs simulator/dense oracles (multi-device subprocess).
+
+The sweep itself lives in tests/multidev/fused_nap_prog.py — it needs a
+forced 8-device host platform, which must be set before jax initialises.
+"""
+import os
+import pathlib
+import subprocess
+import sys
+
+import pytest
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+
+
+@pytest.mark.multidev
+def test_fused_nap_matches_oracles_8dev():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(ROOT / "src")
+    env.pop("XLA_FLAGS", None)  # the program sets its own device count
+    proc = subprocess.run(
+        [sys.executable, str(ROOT / "tests" / "multidev" / "fused_nap_prog.py")],
+        capture_output=True, text=True, env=env, timeout=600,
+    )
+    assert proc.returncode == 0, f"stdout:\n{proc.stdout}\nstderr:\n{proc.stderr}"
+    assert "ALL OK" in proc.stdout

@@ -4,7 +4,8 @@ import pytest
 
 import jax.numpy as jnp
 
-from repro.kernels.bsr_spmv import bsr_spmm, bsr_spmv
+from repro.kernels.bsr_spmv import (bsr_spmm, bsr_spmv, fused_bsr_spmm,
+                                    fused_bsr_spmm_ref)
 from repro.kernels.bsr_spmv.kernel import bsr_spmm_padded
 from repro.kernels.bsr_spmv.ref import bsr_spmm_padded_ref, bsr_spmv_ref
 from repro.kernels.decode_attn import decode_attention, decode_attention_ref
@@ -47,6 +48,29 @@ def test_bsr_spmv_matches_csr_matvec(dtype):
     # and the jnp oracle agrees
     np.testing.assert_allclose(np.asarray(bsr_spmv_ref(bsr, vpad))[: a.shape[0]],
                                want, rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("bm,bn,nv,nv_block", [
+    (8, 8, 1, 128),     # single RHS, no tiling
+    (8, 16, 8, 4),      # nv tiled into 2 blocks
+    (16, 8, 128, 64),   # wide multi-RHS, 2 nv tiles
+    (8, 128, 12, 8),    # nv not a multiple of nv_block (pad + slice)
+])
+def test_fused_bsr_kernel_vs_ref(bm, bn, nv, nv_block):
+    """The fused (nv-tiled) kernel against its gather+einsum oracle."""
+    rng = np.random.default_rng(bm * 1000 + bn * 10 + nv + nv_block)
+    nbr, nbc, ktot = 3, 5, 4
+    cols = rng.integers(-1, nbc, size=(nbr, ktot)).astype(np.int32)
+    blocks = rng.standard_normal((nbr, ktot, bm, bn)).astype(np.float32)
+    blocks[cols < 0] = 0.0
+    x = rng.standard_normal((nbc, bn, nv)).astype(np.float32)
+    got = fused_bsr_spmm(jnp.asarray(cols), jnp.asarray(blocks),
+                         jnp.asarray(x), nv_block=nv_block, interpret=True)
+    want = fused_bsr_spmm_ref(jnp.asarray(cols), jnp.asarray(blocks),
+                              jnp.asarray(x))
+    assert got.shape == (nbr, bm, nv)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-5)
 
 
 def test_bsr_spmm_multi_vector():

@@ -10,8 +10,11 @@ System invariants, over arbitrary sparsity / topology / partition:
      (checked implicitly by the simulator's access assertions).
 """
 import numpy as np
+import pytest
 import scipy.sparse as sp
-from hypothesis import given, settings, strategies as st
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.comm_graph import build_nap_plan, build_standard_plan, nap_stats, standard_stats
 from repro.core.partition import make_partition
