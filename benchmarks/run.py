@@ -1,14 +1,55 @@
 """Benchmark driver: one experiment per paper table/figure + the roofline.
 
     PYTHONPATH=src python -m benchmarks.run [--quick]
+
+The run fails (non-zero exit) if the freshly measured BENCH_spmv.json
+regresses plan-compile or local-compute wall time by more than
+``REGRESSION_FACTOR`` versus the committed baseline — keep it green
+across PRs.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import os
 import subprocess
 import sys
 import time
+
+REGRESSION_FACTOR = 1.5
+# interpret-mode walls in the low-ms range jitter well past 1.5x on a
+# shared CPU even with best-of-iters timing; a regression must also
+# clear an absolute floor so scheduler noise can't fail the gate while
+# a real slowdown (ms -> tens of ms) still does.
+REGRESSION_MIN_DELTA_S = 0.005
+
+
+def check_regressions(baseline: dict, fresh: dict,
+                      factor: float = REGRESSION_FACTOR,
+                      min_delta: float = REGRESSION_MIN_DELTA_S) -> list:
+    """Compare the perf fields shared by two BENCH_spmv.json payloads.
+
+    Sections whose problem size differs between the payloads (e.g. a
+    --quick baseline vs a full run) are skipped — same keys, different
+    workloads, not comparable.
+    """
+    regs = []
+
+    def compare(label: str, old, new) -> None:
+        if old and new and new > factor * old and new - old > min_delta:
+            regs.append(f"{label}: {old}s -> {new}s (> {factor}x)")
+
+    old_pc, new_pc = baseline.get("plan_compile", {}), fresh.get("plan_compile", {})
+    if old_pc.get("n_rows") == new_pc.get("n_rows"):
+        compare("plan_compile.vectorized_s",
+                old_pc.get("vectorized_s"), new_pc.get("vectorized_s"))
+    old_sw, new_sw = baseline.get("spmv_wall", {}), fresh.get("spmv_wall", {})
+    if old_sw.get("n_rows") == new_sw.get("n_rows"):
+        old_wall = old_sw.get("wall", {})
+        new_wall = new_sw.get("wall", {})
+        for k in sorted(set(old_wall) & set(new_wall)):
+            compare(f"spmv_wall.wall.{k}", old_wall[k], new_wall[k])
+    return regs
 
 
 def main() -> None:
@@ -53,6 +94,10 @@ def main() -> None:
 
     # machine-readable SpMV perf trajectory (own process: it forces the
     # host device count before jax initialises)
+    baseline = None
+    if os.path.exists("BENCH_spmv.json"):
+        with open("BENCH_spmv.json") as f:
+            baseline = json.load(f)
     cmd = [sys.executable, "-m", "benchmarks.bench_spmv",
            "--out", "BENCH_spmv.json"] + (["--quick"] if args.quick else [])
     env = dict(os.environ)
@@ -62,6 +107,26 @@ def main() -> None:
     if proc.returncode != 0:
         print(f"bench_spmv FAILED:\n{proc.stderr}", flush=True)
         raise SystemExit(proc.returncode)
+
+    if baseline is not None:
+        with open("BENCH_spmv.json") as f:
+            fresh = json.load(f)
+        regs = check_regressions(baseline, fresh)
+        if regs:
+            # keep the baseline in place so a rerun can't silently pass by
+            # comparing the regressed numbers against themselves; park the
+            # failing measurement next to it for inspection
+            with open("BENCH_spmv.rejected.json", "w") as f:
+                json.dump(fresh, f, indent=2)
+            with open("BENCH_spmv.json", "w") as f:
+                json.dump(baseline, f, indent=2)
+            print("PERF REGRESSION vs committed BENCH_spmv.json baseline "
+                  "(fresh numbers parked in BENCH_spmv.rejected.json):")
+            for r in regs:
+                print(f"  {r}")
+            raise SystemExit(1)
+        print("no perf regressions vs committed baseline "
+              f"(threshold {REGRESSION_FACTOR}x)")
 
     print(f"\nall benchmarks done in {time.time() - t_start:.1f}s")
 

@@ -159,3 +159,97 @@ def compute_time(nnz: int, flop_rate: float = 2.0e9) -> float:
     """Local SpMV compute estimate: 2 flops per nonzero at an effective rate
     (memory-bound; ~2 GF/s/core is representative of Interlagos SpMV)."""
     return 2.0 * nnz / flop_rate
+
+
+# ---------------------------------------------------------------------------
+# Local-compute format autotuner (BSR vs ELL vs COO)
+# ---------------------------------------------------------------------------
+#
+# The shared-memory SpMV literature's core lesson — no single sparse format
+# wins across structures — applied to the rank-local compute of the
+# distributed SpMV.  Each candidate is scored with a two-term roofline
+#
+#     t = max(padded_flops / unit_rate, bytes_moved / hbm_bw)
+#
+# where "padded" counts the work the static layout actually issues (dense
+# (bm, bn) tiles for BSR, kmax-padded rows for ELL, nnz-padded triples for
+# COO), and the unit rate reflects which hardware unit executes it: BSR
+# feeds the MXU, ELL the VPU (vector gather + FMA), COO an effective
+# scatter/segment-sum rate that is brutally low on TPU.  The SPMD program
+# is bulk-synchronous, so the per-call decision uses stats maxed over
+# ranks; per-rank estimates are still recorded for diagnostics.
+
+
+@dataclasses.dataclass(frozen=True)
+class LocalComputeParams:
+    """Effective unit rates for the local-compute roofline (f32, TPU-ish).
+
+    Absolute values matter less than ratios: MXU >> VPU >> scatter, and
+    everything can be HBM-bound.  ``vmem_x_budget`` bounds the packed x
+    operand the ELL kernel holds resident per nv tile.
+    """
+
+    name: str = "tpu_v5e_local"
+    mxu_flops: float = 5.0e13     # dense-block matmul rate
+    vpu_flops: float = 2.0e12     # vectorised gather+FMA rate
+    scatter_flops: float = 4.0e9  # segment_sum / scalar scatter-add rate
+    hbm_bw: float = 8.1e11        # HBM bandwidth
+    vmem_x_budget: int = 8 * 2**20  # max packed-x bytes per ELL nv tile
+
+    def signature(self) -> tuple:
+        return dataclasses.astuple(self)
+
+
+TPU_V5E_LOCAL = LocalComputeParams()
+
+LOCAL_FORMATS = ("bsr", "ell", "coo")
+
+
+def local_format_times(stats: Dict[str, float],
+                       params: LocalComputeParams = TPU_V5E_LOCAL,
+                       nv: int = 1) -> Dict[str, float]:
+    """Per-format modeled seconds for one local SpMV application.
+
+    ``stats`` (all padded to the SPMD max over ranks, per-rank element
+    counts — see ``spmv_jax._autotune_stats``):
+      rows_pad   output rows
+      n_x        packed x length (v_loc + on-node + off-node buffers)
+      nnz_pad    COO triples incl. cross-rank padding
+      bsr_blocks padded (bm, bn) tiles incl. cross-rank kmax alignment
+      bm, bn     block shape
+      ell_kmax   padded ELL slots per row (cross-rank max)
+    """
+    bm, bn = int(stats["bm"]), int(stats["bn"])
+    rows, n_x = stats["rows_pad"], stats["n_x"]
+    out_b = 4 * rows * nv
+
+    blocks = stats["bsr_blocks"]
+    bsr_flops = 2.0 * blocks * bm * bn * nv
+    bsr_bytes = blocks * (bm * bn * 4 + bn * 4 * nv) + out_b
+    times = {"bsr": max(bsr_flops / params.mxu_flops,
+                        bsr_bytes / params.hbm_bw)}
+
+    kmax = stats["ell_kmax"]
+    ell_flops = 2.0 * rows * kmax * nv
+    ell_bytes = rows * kmax * 8 + n_x * 4 * nv + out_b
+    ell_x_resident = n_x * 4 * min(nv, 128)
+    if ell_x_resident > params.vmem_x_budget:
+        times["ell"] = float("inf")  # packed x cannot stay VMEM-resident
+    else:
+        times["ell"] = max(ell_flops / params.vpu_flops,
+                           ell_bytes / params.hbm_bw)
+
+    nnz = stats["nnz_pad"]
+    coo_flops = 2.0 * nnz * nv
+    coo_bytes = nnz * 12 + nnz * 4 * nv + out_b
+    times["coo"] = max(coo_flops / params.scatter_flops,
+                       coo_bytes / params.hbm_bw)
+    return times
+
+
+def choose_local_format(stats: Dict[str, float],
+                        params: LocalComputeParams = TPU_V5E_LOCAL,
+                        nv: int = 1) -> str:
+    """argmin-time format for the given layout stats."""
+    times = local_format_times(stats, params, nv=nv)
+    return min(LOCAL_FORMATS, key=lambda f: times[f])

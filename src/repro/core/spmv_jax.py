@@ -14,24 +14,38 @@ XLA programs are static-SPMD, so the comm plans of :mod:`comm_graph` are
 Mesh convention: ``("node", "proc")`` with shape ``(n_nodes, ppn)`` — on a
 real fleet "node" is the pod/DCI axis and "proc" the intra-pod ICI axis.
 
-Local compute (``local_compute=``):
+Local compute (``local_compute=``) — the **adaptive engine**:
 
-* ``"bsr"`` (default) — the **fused Pallas BSR path**: the three
-  ``local_spmv`` blocks of Algorithm 3 are compiled into one MXU-aligned
-  block-sparse matmul against the concatenated ``[v_loc | b_on_node |
-  b_off_node]`` operand (:mod:`repro.kernels.bsr_spmv.fused`), with
-  multi-RHS (nv-wide SpMM) support.  Slots are ordered on-process →
-  on-node → off-node, so the Pallas pipeline streams the blocks that
-  depend on inter-node data last — the paper's Isend/compute overlap,
-  expressed as pipeline stages.
+* ``"auto"`` (default) — a density-driven format autotuner: plan
+  compilation records per-rank layout stats (block fill density, padded
+  FLOPs, bytes moved — see :func:`repro.core.cost_model.local_format_times`)
+  and picks the cheapest of bsr/ell/coo under a two-term roofline.  The
+  decision is recorded on :class:`CompiledNAP` (``.autotune``).
+* ``"bsr"`` — the **fused Pallas BSR path**: the three ``local_spmv``
+  blocks of Algorithm 3 are compiled into one MXU-aligned block-sparse
+  matmul over the packed ``[v_loc | b_on_node | b_off_node]`` x domain
+  (:mod:`repro.kernels.bsr_spmv.fused`), with multi-RHS (nv-wide SpMM)
+  support.  Slots are ordered on-process → on-node → off-node, so the
+  Pallas pipeline streams the blocks that depend on inter-node data
+  last — the paper's Isend/compute overlap, expressed as pipeline stages.
+* ``"ell"`` — the **Pallas ELL path** (:mod:`repro.kernels.ell_spmv`) for
+  low-density / block-hostile ranks where padded BSR tiles densify:
+  kmax-padded rows, vectorised in-kernel row gather, same slot ordering.
 * ``"coo"`` — scalar ``segment_sum`` gathers (the pre-fusion reference
   path, kept as an in-graph oracle and for nv on hardware without Pallas).
+
+**Zero-copy x**: every per-rank buffer length is rounded up to the block
+lane width bn at compile time, so the BSR/ELL kernels read ``v_loc``,
+``b_on_node`` and ``b_off_node`` as separate refs via slot-indexed
+index_maps — the packed x operand is never materialised as an HBM
+pad/concat (``materialize_x=True`` re-enables the old concat path as a
+bit-for-bit A/B oracle).
 
 Plan compilation is fully vectorised (bulk ``np.searchsorted`` against the
 slot maps :meth:`NAPPlan.recv_slot_map` exposes — no per-element Python
 loops) and cached keyed on (matrix structure+values, partition, topology,
-block shape), so repeated SpMVs (AMG V-cycles, training steps) pay the
-plan-build cost once.
+block shape, requested local_compute, autotuner params), so repeated
+SpMVs (AMG V-cycles, training steps) pay the plan-build cost once.
 
 Padding note: all per-rank buffers are padded to the max over ranks; the
 paper's T/U load balancing minimises exactly this padding.  Effective vs
@@ -54,12 +68,17 @@ from repro.compat import shard_map
 from repro.core.comm_graph import (Message, NAPPlan, StandardPlan,
                                    build_nap_plan, build_standard_plan,
                                    lookup_slots)
+from repro.core.cost_model import (LOCAL_FORMATS, LocalComputeParams,
+                                   TPU_V5E_LOCAL, choose_local_format,
+                                   local_format_times)
 from repro.core.partition import RowPartition
 from repro.core.spmv import LocalBlocks, split_all_blocks
 from repro.core.topology import Topology
-from repro.kernels.bsr_spmv.fused import fused_bsr_spmm
+from repro.kernels.bsr_spmv.fused import fused_bsr_spmm, fused_bsr_spmm_packed
+from repro.kernels.ell_spmv.kernel import ell_spmm_packed
 from repro.sparse.bsr import BSR
 from repro.sparse.csr import CSR
+from repro.sparse.ell import ELL, stack_ell
 
 
 def _pad_to(arrs: List[np.ndarray], pad: int, fill: float = 0) -> np.ndarray:
@@ -84,12 +103,55 @@ class CompiledNAP:
     arrays: Dict[str, np.ndarray]  # stacked [n_procs, ...] index/value arrays
     plan: Optional[NAPPlan] = None          # kept for traffic accounting
     block_shape: Tuple[int, int] = (8, 128)  # fused BSR (bm, bn)
-    # element column offsets of the concatenated fused x operand, all
-    # multiples of bn: [0, vblk) = v_loc, [vblk, vblk+nblk) = on-node
-    # buffer, [vblk+nblk, vblk+nblk+oblk) = off-node buffer.
+    # element column offsets of the packed fused x operand, all multiples
+    # of bn: [0, vblk) = v_loc, [vblk, vblk+nblk) = on-node buffer,
+    # [vblk+nblk, vblk+nblk+oblk) = off-node buffer.
     bsr_layout: Dict[str, int] = dataclasses.field(default_factory=dict)
-    # rank-local blocks retained for lazy fused-BSR emission
+    # rank-local blocks retained for lazy fused-BSR / ELL emission
     local_blocks: Optional[List[LocalBlocks]] = None
+    # format autotuner verdict + inputs (chosen format, per-rank stats,
+    # modeled per-format times) — filled by compile_nap
+    autotune: Dict[str, object] = dataclasses.field(default_factory=dict)
+    requested_local_compute: str = "auto"
+    ell_kmax: int = 0
+
+    @property
+    def chosen_local_compute(self) -> str:
+        return str(self.autotune.get("chosen", "coo"))
+
+    def resolve_local_compute(self, requested: str) -> str:
+        """Map an executor's ``local_compute`` request to a concrete format.
+
+        Precedence: an explicit executor request wins; an executor
+        ``"auto"`` defers to a concrete format requested at compile time
+        (``compile_nap(..., local_compute=...)``), and only then to the
+        autotuner's verdict.
+        """
+        if requested == "auto":
+            if self.requested_local_compute != "auto":
+                return self.requested_local_compute
+            return self.chosen_local_compute
+        if requested not in LOCAL_FORMATS:
+            raise ValueError(requested)
+        return requested
+
+    @property
+    def packed_x_len(self) -> int:
+        """Element length of the packed [v_loc | b_on_node | b_off_node] x."""
+        return self.rows_pad + self.pads["bnode"] + self.pads["boff"]
+
+    def ensure_ell(self) -> None:
+        """Materialise the packed ELL arrays (lazily, once) — the
+        block-hostile branch of the adaptive engine."""
+        if "ell_cols" in self.arrays:
+            return
+        assert self.local_blocks is not None, "compiled plan lost its blocks"
+        cols, vals, kmax = _fused_ell_arrays(
+            self.local_blocks, self.rows_pad, self.pads["bnode"],
+            self.pads["boff"])
+        self.arrays["ell_cols"] = cols
+        self.arrays["ell_vals"] = vals
+        self.ell_kmax = kmax
 
     def ensure_fused(self) -> None:
         """Materialise the fused Pallas BSR arrays (lazily, once).
@@ -142,11 +204,17 @@ def _cache_get(key: tuple) -> Optional[CompiledNAP]:
 
 
 def _cache_key(a: CSR, part: RowPartition, topo: Topology,
-               block_shape: Tuple[int, int]) -> tuple:
+               block_shape: Tuple[int, int], local_compute: str,
+               tuner: LocalComputeParams) -> tuple:
     h = hashlib.sha1()
     for arr in (a.indptr, a.indices, a.data, part.owner):
         h.update(np.ascontiguousarray(arr).tobytes())
-    return (h.hexdigest(), a.shape, topo.n_nodes, topo.ppn, tuple(block_shape))
+    # block_shape and the tuner signature cover every autotuner input that
+    # is not a function of the hashed matrix (fill density etc. derive from
+    # structure + block shape); local_compute covers the requested mode —
+    # switching either can never return a stale CompiledNAP.
+    return (h.hexdigest(), a.shape, topo.n_nodes, topo.ppn,
+            tuple(block_shape), str(local_compute), tuner.signature())
 
 
 def _fused_bsr_arrays(blocks: List[LocalBlocks], rows_pad: int,
@@ -181,6 +249,98 @@ def _fused_bsr_arrays(blocks: List[LocalBlocks], rows_pad: int,
     return cols, data, layout
 
 
+def _fused_ell_arrays(blocks: List[LocalBlocks], rows_pad: int,
+                      bnode_pad: int, boff_pad: int
+                      ) -> Tuple[np.ndarray, np.ndarray, int]:
+    """Emit each rank's three column blocks as one ELL over the packed x
+    domain ``[v_loc | b_on_node | b_off_node]`` (offsets rows_pad and
+    rows_pad + bnode_pad), stacked to a shared kmax across ranks."""
+    n_x = rows_pad + bnode_pad + boff_pad
+    per_rank: List[ELL] = []
+    for blk in blocks:
+        op_r, op_c, op_v = blk.on_proc.to_coo()
+        on_r, on_c, on_v = blk.on_node.to_coo()
+        off_r, off_c, off_v = blk.off_node.to_coo()
+        rows = np.concatenate([op_r, on_r, off_r])
+        cols = np.concatenate([op_c, rows_pad + on_c,
+                               rows_pad + bnode_pad + off_c])
+        vals = np.concatenate([op_v, on_v, off_v])
+        per_rank.append(ELL.from_coo(rows, cols, vals, (rows_pad, n_x),
+                                     n_rows_pad=rows_pad))
+    return stack_ell(per_rank)
+
+
+def _format_stats_from_coo(per_rank_rc: List[Tuple[np.ndarray, np.ndarray]],
+                           rows_pad: int, n_x: int, nnz_pad_total: int,
+                           block_shape: Tuple[int, int],
+                           tuner: LocalComputeParams) -> Dict[str, object]:
+    """Layout stats + format decision from per-rank packed-domain COOs,
+    without materialising any format.
+
+    BSR tile counts come from unique (block row, block col) keys over the
+    packed column domain; ELL kmax from per-row counts — both pure bulk
+    numpy.  The SPMD program is bulk-synchronous, so the global decision
+    uses stats maxed over ranks; per-rank verdicts are recorded for
+    diagnostics/benchmarks.  Shared by compile_nap (three-segment packed
+    domain) and standard_spmv_shardmap (two-segment).
+    """
+    bm, bn = block_shape
+    nbc = n_x // bn
+    n_brows = -(-rows_pad // bm)
+    per_rank = []
+    kb_global = 1
+    ke_global = 1
+    for rank, (rows, cols) in enumerate(per_rank_rc):
+        keys = np.unique((rows // bm) * nbc + cols // bn)
+        kb = int(np.bincount((keys // nbc).astype(np.int64),
+                             minlength=n_brows).max(initial=0))
+        ke = max(1, int(np.bincount(rows.astype(np.int64),
+                                    minlength=rows_pad).max(initial=0)))
+        nnz = int(rows.size)
+        per_rank.append({
+            "rank": rank, "nnz": nnz, "bsr_tiles": int(keys.size),
+            "bsr_fill": nnz / max(int(keys.size) * bm * bn, 1),
+            "ell_kmax": ke,
+        })
+        kb_global = max(kb_global, kb)
+        ke_global = max(ke_global, ke)
+    stats = {
+        "rows_pad": rows_pad, "n_x": n_x, "nnz_pad": nnz_pad_total,
+        "bsr_blocks": n_brows * kb_global, "bm": bm, "bn": bn,
+        "ell_kmax": ke_global,
+    }
+    times = local_format_times(stats, tuner)
+    for entry in per_rank:
+        rank_stats = dict(stats, bsr_blocks=entry["bsr_tiles"],
+                          ell_kmax=entry["ell_kmax"], nnz_pad=entry["nnz"])
+        entry["choice"] = choose_local_format(rank_stats, tuner)
+    return {
+        "chosen": min(LOCAL_FORMATS, key=lambda f: times[f]),
+        "times": times,
+        "stats": stats,
+        "per_rank": per_rank,
+        "tuner": tuner.name,
+    }
+
+
+def _autotune_stats(blocks: List[LocalBlocks], rows_pad: int, bnode_pad: int,
+                    boff_pad: int, nnz_pad_total: int,
+                    block_shape: Tuple[int, int],
+                    tuner: LocalComputeParams) -> Dict[str, object]:
+    """NAP three-segment packed domain -> format stats + decision."""
+    per_rank_rc = []
+    for blk in blocks:
+        parts = [blk.on_proc.to_coo(), blk.on_node.to_coo(),
+                 blk.off_node.to_coo()]
+        offs = [0, rows_pad, rows_pad + bnode_pad]
+        rows = np.concatenate([p[0] for p in parts])
+        cols = np.concatenate([p[1] + o for p, o in zip(parts, offs)])
+        per_rank_rc.append((rows, cols))
+    return _format_stats_from_coo(per_rank_rc, rows_pad,
+                                  rows_pad + bnode_pad + boff_pad,
+                                  nnz_pad_total, block_shape, tuner)
+
+
 def _stack_padded_bsr(per_rank: List[BSR]) -> Tuple[np.ndarray, np.ndarray, int]:
     """Align every rank's padded-uniform layout to one shared kmax and stack
     into the [n_procs, n_brows, kmax(, bm, bn)] arrays the kernel consumes."""
@@ -197,10 +357,13 @@ def _stack_padded_bsr(per_rank: List[BSR]) -> Tuple[np.ndarray, np.ndarray, int]
 def compile_nap(a: CSR, part: RowPartition, topo: Topology,
                 plan: Optional[NAPPlan] = None,
                 block_shape: Tuple[int, int] = (8, 128),
-                cache: bool = True) -> CompiledNAP:
+                cache: bool = True, local_compute: str = "auto",
+                tuner: LocalComputeParams = TPU_V5E_LOCAL) -> CompiledNAP:
+    if local_compute not in ("auto",) + LOCAL_FORMATS:
+        raise ValueError(local_compute)
     key = None
     if plan is None and cache:
-        key = _cache_key(a, part, topo, block_shape)
+        key = _cache_key(a, part, topo, block_shape, local_compute, tuner)
         hit = _cache_get(key)
         if hit is not None:
             return hit
@@ -209,7 +372,17 @@ def compile_nap(a: CSR, part: RowPartition, topo: Topology,
     n_procs, ppn, n_nodes = topo.n_procs, topo.ppn, topo.n_nodes
     blocks = split_all_blocks(a, part, topo)
     local_index = part.local_index()
-    rows_pad = max(1, int(part.counts().max()))
+    bn = block_shape[1]
+    assert bn % 8 == 0, "bn must be a multiple of the 8-wide sublane tile"
+    # Segment lengths of the packed x operand are rounded up to the lane
+    # width bn, so v_loc / b_on_node / b_off_node are bn-aligned views of
+    # one packed domain and the Pallas kernels gather them zero-copy (no
+    # HBM pad/concat per call).  Padding slots beyond the true sizes are
+    # never referenced by a nonzero, so the rounding is mathematically
+    # inert everywhere (incl. the COO path's segment_sum).
+    rows_pad = _ceil_to(max(1, int(part.counts().max())), bn)
+    bnode_pad = _ceil_to(max(1, max(b.on_node_cols.size for b in blocks)), bn)
+    boff_pad = _ceil_to(max(1, max(b.off_node_cols.size for b in blocks)), bn)
 
     def msg_pad(phase: List[List[Message]]) -> int:
         sizes = [m.size for msgs in phase for m in msgs]
@@ -219,8 +392,6 @@ def compile_nap(a: CSR, part: RowPartition, topo: Topology,
     init_pad = msg_pad(plan.local_init_sends)
     inter_pad = msg_pad(plan.inter_sends)
     final_pad = msg_pad(plan.local_final_sends)
-    bnode_pad = max(1, max(b.on_node_cols.size for b in blocks))
-    boff_pad = max(1, max(b.off_node_cols.size for b in blocks))
     nnz_pads = {
         "on_proc": max(1, max(b.on_proc.nnz for b in blocks)),
         "on_node": max(1, max(b.on_node.nnz for b in blocks)),
@@ -314,10 +485,14 @@ def compile_nap(a: CSR, part: RowPartition, topo: Topology,
 
     pads = dict(full=full_pad, init=init_pad, inter=inter_pad, final=final_pad,
                 bnode=bnode_pad, boff=boff_pad, **{f"nnz_{k}": v for k, v in nnz_pads.items()})
+    autotune = _autotune_stats(blocks, rows_pad, bnode_pad, boff_pad,
+                               sum(nnz_pads.values()), tuple(block_shape),
+                               tuner)
     compiled = CompiledNAP(topo=topo, part=part, rows_pad=rows_pad, pads=pads,
                            arrays=arrays, plan=plan,
                            block_shape=tuple(block_shape),
-                           local_blocks=blocks)
+                           local_blocks=blocks, autotune=autotune,
+                           requested_local_compute=local_compute)
     if key is not None:
         _cache_put(key, compiled)
     return compiled
@@ -354,22 +529,27 @@ def unpack_vector(w: np.ndarray, part: RowPartition, topo: Topology) -> np.ndarr
 # ---------------------------------------------------------------------------
 
 def nap_spmv_shardmap(compiled: CompiledNAP, mesh: Mesh,
-                      local_compute: str = "bsr", nv_block: int = 128,
-                      interpret: bool = True):
+                      local_compute: str = "auto", nv_block: int = 128,
+                      interpret: bool = True, materialize_x: bool = False):
     """Build the jitted shard_map NAPSpMV: f(v_shards) -> w_shards.
 
     ``v_shards`` is [n_nodes, ppn, rows_pad] or [n_nodes, ppn, rows_pad, nv]
     (multi-RHS SpMM); the output matches.  ``local_compute`` selects the
-    fused Pallas BSR kernel ("bsr", default) or the scalar segment_sum
-    reference ("coo").
+    local kernel: ``"auto"`` (default) defers to the compile-time format
+    autotuner, ``"bsr"`` / ``"ell"`` force the fused Pallas kernels and
+    ``"coo"`` the scalar segment_sum reference.  The resolved format is
+    exposed as ``run.local_compute``.  ``materialize_x=True`` re-enables
+    the legacy HBM pad/concat of the packed x operand (bit-for-bit equal
+    to the default zero-copy gather; kept as an A/B oracle).
     """
-    if local_compute not in ("bsr", "coo"):
-        raise ValueError(local_compute)
-    if local_compute == "bsr":
+    fmt = compiled.resolve_local_compute(local_compute)
+    if fmt == "bsr":
         compiled.ensure_fused()
+    elif fmt == "ell":
+        compiled.ensure_ell()
     topo = compiled.topo
     rows_pad = compiled.rows_pad
-    lay = compiled.bsr_layout
+    bn = compiled.block_shape[1]
 
     def per_device(v_loc, full_send, init_send, final_send, inter_gather,
                    bnode_gather, boff_gather, *tail):
@@ -401,16 +581,27 @@ def nap_spmv_shardmap(compiled: CompiledNAP, mesh: Mesh,
         bnode = full_recv.reshape(-1, nv)[bnode_gather]   # [bnode_pad, nv]
         boff = jnp.concatenate([inter_flat, final_recv.reshape(-1, nv)])[boff_gather]
 
-        if local_compute == "bsr":
+        if fmt == "bsr":
             fused_cols, fused_blocks = tail
-            xv = jnp.pad(v_loc, ((0, lay["vblk"] - rows_pad), (0, 0)))
-            xn = jnp.pad(bnode, ((0, lay["nblk"] - bnode.shape[0]), (0, 0)))
-            xo = jnp.pad(boff, ((0, lay["oblk"] - boff.shape[0]), (0, 0)))
-            bn = compiled.block_shape[1]
-            x_cat = jnp.concatenate([xv, xn, xo]).reshape(-1, bn, nv)
-            w_tiles = fused_bsr_spmm(fused_cols, fused_blocks, x_cat,
-                                     nv_block=nv_block, interpret=interpret)
+            # segment lengths are bn-aligned at compile time: the three
+            # buffers ARE the packed x domain — no pad/concat round-trip.
+            if materialize_x:
+                x_cat = jnp.concatenate([v_loc, bnode, boff]).reshape(-1, bn, nv)
+                w_tiles = fused_bsr_spmm(fused_cols, fused_blocks, x_cat,
+                                         nv_block=nv_block, interpret=interpret)
+            else:
+                xs = tuple(seg.reshape(-1, bn, nv)
+                           for seg in (v_loc, bnode, boff))
+                w_tiles = fused_bsr_spmm_packed(fused_cols, fused_blocks, xs,
+                                                nv_block=nv_block,
+                                                interpret=interpret)
             w = w_tiles.reshape(-1, nv)[:rows_pad]
+        elif fmt == "ell":
+            ell_cols, ell_vals = tail
+            xs = ((jnp.concatenate([v_loc, bnode, boff]),) if materialize_x
+                  else (v_loc, bnode, boff))
+            w = ell_spmm_packed(ell_cols, ell_vals, xs,
+                                nv_block=nv_block, interpret=interpret)
         else:
             (on_proc_rows, on_proc_cols, on_proc_vals,
              on_node_rows, on_node_cols, on_node_vals,
@@ -429,8 +620,10 @@ def nap_spmv_shardmap(compiled: CompiledNAP, mesh: Mesh,
     dev = compiled.device_arrays()
     names = ["full_send", "init_send", "final_send", "inter_gather",
              "bnode_gather", "boff_gather"]
-    if local_compute == "bsr":
+    if fmt == "bsr":
         names += ["fused_cols", "fused_blocks"]
+    elif fmt == "ell":
+        names += ["ell_cols", "ell_vals"]
     else:
         names += ["on_proc_rows", "on_proc_cols", "on_proc_vals",
                   "on_node_rows", "on_node_cols", "on_node_vals",
@@ -450,6 +643,8 @@ def nap_spmv_shardmap(compiled: CompiledNAP, mesh: Mesh,
             return run4(v_shards[..., None])[..., 0]
         return run4(v_shards)
 
+    run.local_compute = fmt
+    run.run4 = run4  # jitted 4-D entry, exposed for jaxpr/HLO inspection
     return run
 
 
@@ -459,23 +654,33 @@ def nap_spmv_shardmap(compiled: CompiledNAP, mesh: Mesh,
 
 def standard_spmv_shardmap(a: CSR, part: RowPartition, topo: Topology, mesh: Mesh,
                            plan: Optional[StandardPlan] = None,
-                           local_compute: str = "bsr",
+                           local_compute: str = "auto",
                            block_shape: Tuple[int, int] = (8, 128),
-                           nv_block: int = 128, interpret: bool = True):
+                           nv_block: int = 128, interpret: bool = True,
+                           materialize_x: bool = False,
+                           tuner: LocalComputeParams = TPU_V5E_LOCAL):
     """Algorithm 1 as a flat padded all-to-all over ("node","proc").
 
-    Local compute runs through the same fused BSR kernel as the NAP path
-    (one combined [v_loc | recv buffer] operand) or the scalar segment_sum
-    reference, selected by ``local_compute``.
+    Local compute runs through the same adaptive engine as the NAP path —
+    ``"auto"`` (default) picks bsr/ell/coo from the format cost model over
+    the two-segment ``[v_loc | recv buffer]`` packed x domain; both Pallas
+    paths read the segments zero-copy.  The resolved format is exposed as
+    ``run.local_compute``.
     """
-    if local_compute not in ("bsr", "coo"):
+    if local_compute not in ("auto",) + LOCAL_FORMATS:
         raise ValueError(local_compute)
     if plan is None:
         plan = build_standard_plan(a.indptr, a.indices, part, topo)
     n_procs = topo.n_procs
     blocks = split_all_blocks(a, part, topo)
     local_index = part.local_index()
-    rows_pad = max(1, int(part.counts().max()))
+    bm, bn = block_shape
+    # bn-aligned segments: [0, rows_pad) = v_loc, [rows_pad, rows_pad+buf_pad)
+    # = the single off-process recv buffer (zero-copy kernel domain).
+    rows_pad = _ceil_to(max(1, int(part.counts().max())), bn)
+    buf_pad = _ceil_to(
+        max(1, max(b.on_node_cols.size + b.off_node_cols.size for b in blocks)),
+        bn)
     pair_pad = max(1, max((m.size for msgs in plan.sends for m in msgs), default=1))
 
     send_idx = np.zeros((n_procs, n_procs, pair_pad), dtype=np.int32)
@@ -483,14 +688,12 @@ def standard_spmv_shardmap(a: CSR, part: RowPartition, topo: Topology, mesh: Mes
         for m in plan.sends[r]:
             send_idx[r, m.dst, : m.size] = local_index[m.idx]
 
-    # off-process buffer = on_node ∪ off_node columns (standard has one buffer)
-    buf_pad = max(1, max(b.on_node_cols.size + b.off_node_cols.size for b in blocks))
-    buf_gather = np.zeros((n_procs, buf_pad), dtype=np.int32)
     nnz_pad = max(1, max(b.on_node.nnz + b.off_node.nnz + b.on_proc.nnz for b in blocks))
-    bm, bn = block_shape
-    vblk = _ceil_to(rows_pad, bn)
-    bblk = _ceil_to(buf_pad, bn)
-    rows_s, cols_s, vals_s, fused = [], [], [], []
+
+    # --- packed two-segment domain [v_loc | buf] + format decision --------
+    n_x = rows_pad + buf_pad
+    per_rank_coo = []
+    buf_gather = np.zeros((n_procs, buf_pad), dtype=np.int32)
     for r in range(n_procs):
         blk = blocks[r]
         cols_all = np.concatenate([blk.on_node_cols, blk.off_node_cols])
@@ -500,29 +703,36 @@ def standard_spmv_shardmap(a: CSR, part: RowPartition, topo: Topology, mesh: Mes
         rr1, cc1, vv1 = blk.on_node.to_coo()
         rr2, cc2, vv2 = blk.off_node.to_coo()
         rr = np.concatenate([rr0, rr1, rr2])
+        cc = np.concatenate([cc0, rows_pad + cc1,
+                             rows_pad + blk.on_node_cols.size + cc2])
         vv = np.concatenate([vv0, vv1, vv2])
-        if local_compute == "coo":
-            # shift buffer columns: on_proc -> [0, rows_pad), buffer -> rows_pad+
-            rows_s.append(rr.astype(np.int32))
-            cols_s.append(np.concatenate([cc0, rows_pad + cc1,
-                                          rows_pad + blk.on_node_cols.size + cc2]).astype(np.int32))
-            vals_s.append(vv.astype(np.float32))
-        else:
-            # fused BSR element domain: [v_loc | buffer], each bn-aligned
-            fused.append(BSR.from_coo(
-                rr, np.concatenate([cc0, vblk + cc1,
-                                    vblk + blk.on_node_cols.size + cc2]), vv,
-                (rows_pad, vblk + bblk), bm=bm, bn=bn))
+        per_rank_coo.append((rr, cc, vv))
+    fmt = local_compute
+    if fmt == "auto":
+        fmt = _format_stats_from_coo(
+            [(rr, cc) for rr, cc, _ in per_rank_coo], rows_pad, n_x,
+            nnz_pad, (bm, bn), tuner)["chosen"]
 
     nn, ppn = topo.n_nodes, topo.ppn
     reshape = lambda x: x.reshape((nn, ppn) + x.shape[1:])
     dev = dict(send_idx=reshape(send_idx), buf_gather=reshape(buf_gather))
-    if local_compute == "coo":
-        dev["A_rows"] = reshape(_pad_to(rows_s, nnz_pad).astype(np.int32))
-        dev["A_cols"] = reshape(_pad_to(cols_s, nnz_pad).astype(np.int32))
-        dev["A_vals"] = reshape(_pad_to(vals_s, nnz_pad, fill=0.0))
+    if fmt == "coo":
+        dev["A_rows"] = reshape(_pad_to(
+            [rr.astype(np.int32) for rr, _, _ in per_rank_coo], nnz_pad).astype(np.int32))
+        dev["A_cols"] = reshape(_pad_to(
+            [cc.astype(np.int32) for _, cc, _ in per_rank_coo], nnz_pad).astype(np.int32))
+        dev["A_vals"] = reshape(_pad_to(
+            [vv.astype(np.float32) for _, _, vv in per_rank_coo], nnz_pad, fill=0.0))
+    elif fmt == "ell":
+        e_cols, e_vals, _ = stack_ell([
+            ELL.from_coo(rr, cc, vv, (rows_pad, n_x), n_rows_pad=rows_pad)
+            for rr, cc, vv in per_rank_coo])
+        dev["ell_cols"] = reshape(e_cols)
+        dev["ell_vals"] = reshape(e_vals)
     else:
-        f_cols, f_blocks, _ = _stack_padded_bsr(fused)
+        f_cols, f_blocks, _ = _stack_padded_bsr([
+            BSR.from_coo(rr, cc, vv, (rows_pad, n_x), bm=bm, bn=bn)
+            for rr, cc, vv in per_rank_coo])
         dev["fused_cols"] = reshape(f_cols)
         dev["fused_blocks"] = reshape(f_blocks)
 
@@ -534,14 +744,24 @@ def standard_spmv_shardmap(a: CSR, part: RowPartition, topo: Topology, mesh: Mes
         out = v_loc[send_idx]                               # [n_procs, pair_pad, nv]
         recv = jax.lax.all_to_all(out, ("node", "proc"), 0, 0, tiled=True)
         buf = recv.reshape(-1, nv)[buf_gather]              # [buf_pad, nv]
-        if local_compute == "bsr":
+        if fmt == "bsr":
             fused_cols, fused_blocks = tail
-            xv = jnp.pad(v_loc, ((0, vblk - rows_pad), (0, 0)))
-            xb = jnp.pad(buf, ((0, bblk - buf.shape[0]), (0, 0)))
-            x_cat = jnp.concatenate([xv, xb]).reshape(-1, bn, nv)
-            w_tiles = fused_bsr_spmm(fused_cols, fused_blocks, x_cat,
-                                     nv_block=nv_block, interpret=interpret)
+            if materialize_x:
+                x_cat = jnp.concatenate([v_loc, buf]).reshape(-1, bn, nv)
+                w_tiles = fused_bsr_spmm(fused_cols, fused_blocks, x_cat,
+                                         nv_block=nv_block, interpret=interpret)
+            else:
+                w_tiles = fused_bsr_spmm_packed(
+                    fused_cols, fused_blocks,
+                    (v_loc.reshape(-1, bn, nv), buf.reshape(-1, bn, nv)),
+                    nv_block=nv_block, interpret=interpret)
             w = w_tiles.reshape(-1, nv)[:rows_pad]
+        elif fmt == "ell":
+            ell_cols, ell_vals = tail
+            xs = ((jnp.concatenate([v_loc, buf]),) if materialize_x
+                  else (v_loc, buf))
+            w = ell_spmm_packed(ell_cols, ell_vals, xs,
+                                nv_block=nv_block, interpret=interpret)
         else:
             A_rows, A_cols, A_vals = tail
             full = jnp.concatenate([v_loc, buf])
@@ -549,8 +769,9 @@ def standard_spmv_shardmap(a: CSR, part: RowPartition, topo: Topology, mesh: Mes
                             num_segments=rows_pad)
         return w.reshape(1, 1, rows_pad, -1)
 
-    names = (["fused_cols", "fused_blocks"] if local_compute == "bsr"
-             else ["A_rows", "A_cols", "A_vals"])
+    names = {"bsr": ["fused_cols", "fused_blocks"],
+             "ell": ["ell_cols", "ell_vals"],
+             "coo": ["A_rows", "A_cols", "A_vals"]}[fmt]
     spec = P("node", "proc")
     smapped = shard_map(per_device, mesh=mesh,
                         in_specs=(spec,) * (3 + len(names)), out_specs=spec,
@@ -567,6 +788,8 @@ def standard_spmv_shardmap(a: CSR, part: RowPartition, topo: Topology, mesh: Mes
             return run4(v_shards[..., None])[..., 0]
         return run4(v_shards)
 
+    run.local_compute = fmt
+    run.run4 = run4
     return run, rows_pad
 
 

@@ -1,6 +1,7 @@
-from repro.kernels.bsr_spmv.fused import fused_bsr_spmm, fused_bsr_spmm_ref
+from repro.kernels.bsr_spmv.fused import (fused_bsr_spmm, fused_bsr_spmm_packed,
+                                          fused_bsr_spmm_ref)
 from repro.kernels.bsr_spmv.ops import bsr_spmv, bsr_spmm
 from repro.kernels.bsr_spmv.ref import bsr_spmv_ref
 
 __all__ = ["bsr_spmv", "bsr_spmm", "bsr_spmv_ref",
-           "fused_bsr_spmm", "fused_bsr_spmm_ref"]
+           "fused_bsr_spmm", "fused_bsr_spmm_packed", "fused_bsr_spmm_ref"]

@@ -104,3 +104,96 @@ def fused_bsr_spmm_ref(cols, blocks, x) -> jnp.ndarray:
     prod = jnp.einsum("rkmn,rknv->rkmv", blocks,
                       jnp.where(valid, gathered, 0.0))
     return prod.sum(axis=1).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Zero-copy packed-x variant
+# ---------------------------------------------------------------------------
+#
+# Same math as fused_bsr_spmm, but the x operand arrives as SEPARATE
+# bn-aligned segments (v_loc, b_on_node, b_off_node) instead of one
+# HBM-materialised concat.  Each segment gets its own ref whose index_map
+# routes the prefetched block-column id into that segment's local block
+# index (clamped to 0 when the slot belongs to another segment); the
+# kernel then selects the one block that is in range.  Because an
+# out-of-range ref's index_map pins it to block 0, the Pallas pipeline
+# re-fetches it only on segment transitions — slots are sorted
+# on-process -> on-node -> off-node, so each x ref's DMA stream stays
+# monotone and the extra traffic is at most one block per segment switch.
+
+
+def _make_packed_kernel(bounds):
+    def kernel(cols_ref, blk_ref, *rest):
+        *x_refs, o_ref = rest
+        k = pl.program_id(2)
+
+        @pl.when(k == 0)
+        def _init():
+            o_ref[...] = jnp.zeros_like(o_ref)
+
+        c = cols_ref[pl.program_id(0), k]
+        x = x_refs[-1][0]
+        for b, x_ref in zip(reversed(bounds[:-1]), reversed(x_refs[:-1])):
+            x = jnp.where(c < b, x_ref[0], x)
+        o_ref[...] += jnp.dot(blk_ref[0, 0], x,
+                              preferred_element_type=jnp.float32)
+
+    return kernel
+
+
+def _segment_spec(lo, hi, bn, nv_block):
+    # route block col c into this segment's local index; pin to 0 otherwise
+    def index_map(i, v, k, cols):
+        c = cols[i, k]
+        return (jnp.where((c >= lo) & (c < hi), c - lo, 0), 0, v)
+
+    return pl.BlockSpec((1, bn, nv_block), index_map)
+
+
+@functools.partial(jax.jit, static_argnames=("nv_block", "interpret"))
+def fused_bsr_spmm_packed(cols: jax.Array, blocks: jax.Array, xs, *,
+                          nv_block: int = 128,
+                          interpret: bool = True) -> jax.Array:
+    """w = A @ concat(xs) without materialising the concat in HBM.
+
+    cols:   [n_brows, ktot] int32 block-column ids into the packed domain
+            (-1 = padding slot); segment s covers block columns
+            [sum(len(xs[:s])), sum(len(xs[:s+1]))) in block units
+    blocks: [n_brows, ktot, bm, bn] (padding slots zero-filled)
+    xs:     tuple of [n_bcols_s, bn, nv] segments (1..3 of them)
+    returns [n_brows, bm, nv] float32 — bit-for-bit equal to
+    ``fused_bsr_spmm(cols, blocks, jnp.concatenate(xs))``.
+    """
+    xs = tuple(jnp.asarray(x, jnp.float32) for x in xs)
+    n_brows, ktot, bm, bn = blocks.shape
+    nv = xs[0].shape[-1]
+    nv_block = min(nv_block, max(nv, 1))
+    nv_pad = -(-nv // nv_block) * nv_block
+    if nv_pad != nv:
+        xs = tuple(jnp.pad(x, ((0, 0), (0, 0), (0, nv_pad - nv))) for x in xs)
+    bounds = []
+    acc = 0
+    for x in xs:
+        acc += x.shape[0]
+        bounds.append(acc)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n_brows, nv_pad // nv_block, ktot),
+        in_specs=[
+            pl.BlockSpec((1, 1, bm, bn), lambda i, v, k, cols: (i, k, 0, 0)),
+        ] + [
+            _segment_spec(lo, hi, bn, nv_block)
+            for lo, hi in zip([0] + bounds[:-1], bounds)
+        ],
+        out_specs=pl.BlockSpec((1, bm, nv_block), lambda i, v, k, cols: (i, 0, v)),
+    )
+    out = pl.pallas_call(
+        _make_packed_kernel(tuple(bounds)),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n_brows, bm, nv_pad), jnp.float32),
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(cols, blocks, *xs)
+    return out[..., :nv] if nv_pad != nv else out

@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for the packed ELL SpMV/SpMM kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def ell_spmm_packed_ref(cols, vals, xs) -> jnp.ndarray:
+    """Same contract as :func:`kernel.ell_spmm_packed` (gather + reduce)."""
+    x = jnp.concatenate([jnp.asarray(x, jnp.float32) for x in xs], axis=0)
+    gathered = x[jnp.maximum(cols, 0)]                   # [n_rows, kmax, nv]
+    valid = (cols >= 0)[..., None]
+    return (vals[..., None] * jnp.where(valid, gathered, 0.0)).sum(axis=1)
+
+
+def ell_spmv_ref(ell, v):
+    """Oracle on a sparse.ELL container + element vector (numpy/jnp)."""
+    out = ell_spmm_packed_ref(jnp.asarray(ell.cols), jnp.asarray(ell.vals),
+                              (jnp.asarray(v).reshape(-1, 1),))
+    return out.reshape(-1)

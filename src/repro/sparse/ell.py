@@ -1,0 +1,109 @@
+"""ELLPACK (padded-row) container — the VPU-friendly local SpMV format.
+
+BSR (``sparse/bsr.py``) wins when nonzeros cluster into dense (bm, bn)
+tiles; on block-hostile structures (random matrices at <= 12 nnz/row,
+graph Laplacians, AMG coarse levels) densifying blocks inflates both the
+bytes moved and the padded FLOPs by 1/fill.  ELL pads every *row* to the
+matrix's max nnz/row instead: two [n_rows, kmax] arrays (column ids and
+values), a layout whose padding overhead is ``kmax / mean_nnz_row`` — tiny
+whenever the row-length distribution is flat, which is exactly the regime
+where blocks are hostile.
+
+The Pallas kernel in ``kernels/ell_spmv`` consumes this layout directly:
+each row-tile does a vectorised gather of x rows by ``cols`` and a
+multiply-accumulate over the kmax axis on the VPU (no MXU, no scatter).
+
+Padding slots use ``cols == -1`` with ``vals == 0``; consumers clamp the
+column to 0, so padding is mathematically inert against any finite x.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+from repro.sparse.csr import CSR
+
+
+@dataclasses.dataclass
+class ELL:
+    """Row-padded sparse matrix: row i holds ``cols[i, :]`` / ``vals[i, :]``."""
+
+    cols: np.ndarray   # int32 [n_rows, kmax], -1 = padding slot
+    vals: np.ndarray   # float32 [n_rows, kmax], 0 on padding slots
+    shape: Tuple[int, int]  # logical element shape (n_rows may exceed shape[0])
+
+    @property
+    def kmax(self) -> int:
+        return int(self.cols.shape[1])
+
+    @property
+    def n_rows(self) -> int:
+        return int(self.cols.shape[0])
+
+    @property
+    def nnz(self) -> int:
+        return int((self.cols >= 0).sum())
+
+    @property
+    def fill(self) -> float:
+        """Fraction of ELL slots holding real nonzeros (1 = no padding)."""
+        return self.nnz / max(self.cols.size, 1)
+
+    def matvec(self, v: np.ndarray) -> np.ndarray:
+        """Dense gather oracle (numpy); v indexed by the stored column ids."""
+        gathered = np.asarray(v)[np.maximum(self.cols, 0)]
+        return (self.vals * np.where(self.cols >= 0, gathered, 0.0)).sum(axis=1)
+
+    def to_dense(self) -> np.ndarray:
+        out = np.zeros((self.n_rows, self.shape[1]))
+        r, k = np.nonzero(self.cols >= 0)
+        out[r, self.cols[r, k]] += self.vals[r, k]
+        return out
+
+    @staticmethod
+    def from_coo(rows: np.ndarray, cols: np.ndarray, vals: np.ndarray,
+                 shape: Tuple[int, int], n_rows_pad: int = 0,
+                 kmax: int = 0) -> "ELL":
+        """COO -> ELL, fully vectorised (no per-row Python loops).
+
+        ``n_rows_pad`` pads the row axis (extra all-padding rows); ``kmax``
+        forces a wider slot axis than the data needs — both are used to
+        align per-rank layouts across an SPMD mesh.
+        """
+        rows = np.asarray(rows, np.int64)
+        cols = np.asarray(cols, np.int64)
+        vals = np.asarray(vals)
+        n_rows = max(shape[0], n_rows_pad)
+        order = np.argsort(rows, kind="stable")
+        rows, cols, vals = rows[order], cols[order], vals[order]
+        counts = np.bincount(rows, minlength=n_rows)
+        kmax = max(kmax, 1, int(counts.max(initial=0)))
+        starts = np.concatenate([[0], np.cumsum(counts)[:-1]])
+        slot = np.arange(rows.size) - starts[rows]
+        out_cols = np.full((n_rows, kmax), -1, dtype=np.int32)
+        out_vals = np.zeros((n_rows, kmax), dtype=np.float32)
+        out_cols[rows, slot] = cols.astype(np.int32)
+        out_vals[rows, slot] = vals.astype(np.float32)
+        return ELL(cols=out_cols, vals=out_vals, shape=shape)
+
+    @staticmethod
+    def from_csr(a: CSR, n_rows_pad: int = 0, kmax: int = 0) -> "ELL":
+        rows, cols, vals = a.to_coo()
+        return ELL.from_coo(rows, cols, vals, a.shape,
+                            n_rows_pad=n_rows_pad, kmax=kmax)
+
+
+def stack_ell(per_rank: List["ELL"],
+              kmax: Optional[int] = None) -> Tuple[np.ndarray, np.ndarray, int]:
+    """Align ranks to one shared kmax and stack into the
+    [n_procs, n_rows, kmax] cols/vals arrays the SPMD executor shards."""
+    kmax = max(kmax or 1, max(e.kmax for e in per_rank))
+    n_rows = max(e.n_rows for e in per_rank)
+    cols = np.full((len(per_rank), n_rows, kmax), -1, dtype=np.int32)
+    vals = np.zeros((len(per_rank), n_rows, kmax), dtype=np.float32)
+    for r, e in enumerate(per_rank):
+        cols[r, : e.n_rows, : e.kmax] = e.cols
+        vals[r, : e.n_rows, : e.kmax] = e.vals
+    return cols, vals, kmax

@@ -2,3 +2,15 @@ def pytest_configure(config):
     config.addinivalue_line(
         "markers",
         "multidev: runs a subprocess with a forced multi-device host platform")
+    config.addinivalue_line(
+        "markers",
+        "tier1: fast single-process smoke tier (`pytest -m tier1`); "
+        "everything not marked multidev")
+
+
+def pytest_collection_modifyitems(config, items):
+    # tier1 = the whole suite minus the slow multi-device subprocess sweeps,
+    # so `pytest -m tier1` is the quick smoke alias documented in ROADMAP.
+    for item in items:
+        if "multidev" not in item.keywords:
+            item.add_marker("tier1")

@@ -1,4 +1,4 @@
-"""Multi-device property check of the fused Pallas BSR NAPSpMV (subprocess).
+"""Multi-device property check of the adaptive NAPSpMV engine (subprocess).
 
 Seeded-random sweep on an 8-device host platform: for every topology
 ``(n_nodes, ppn) ∈ {(1,4), (2,2), (4,2)}``, block sizes, partition kinds
@@ -7,8 +7,16 @@ and ``nv ∈ {1, 8, 128}``, the fused-BSR shard_map executor must agree with
   * the numpy message-passing simulator (exact MPI semantics oracle), and
   * the dense ``A @ x`` ground truth,
 
-to 1e-5, in Pallas interpret mode.  The COO (segment_sum) executor and the
-standard-algorithm executor are swept at nv=8 as cross-checks.
+to 1e-5, in Pallas interpret mode.  The ELL, COO and autotuned executors
+and the standard-algorithm executor are swept at nv=8 as cross-checks,
+and the zero-copy packed-x path is checked bit-for-bit against the
+materialised-concat path (``materialize_x=True``).
+
+A block-hostile low-density problem additionally asserts the format
+autotuner rejects BSR, and a jaxpr scan asserts the packed x operand is
+NOT materialised as an HBM concat by the zero-copy executors (while the
+materialize_x oracle path IS — a differential check, immune to shape
+coincidences).
 """
 import os
 
@@ -16,8 +24,10 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 
 import numpy as np
 
+import jax
+
 from repro.compat import make_mesh
-from repro.core.partition import make_partition
+from repro.core.partition import contiguous_partition, make_partition
 from repro.core.spmv import DistSpMV
 from repro.core.spmv_jax import (compile_nap, nap_spmv_shardmap, pack_vector,
                                  standard_spmv_shardmap, unpack_vector)
@@ -50,22 +60,100 @@ def check(topo_shape, kind, block_shape, nv, seed):
     sim = np.stack([dist.run(v[:, i], "nap") for i in range(nv)], axis=1)
     np.testing.assert_allclose(sim, want, rtol=1e-9, atol=1e-11)
 
-    # fused Pallas BSR shard_map executor vs both oracles
+    # fused Pallas BSR shard_map executor (zero-copy) vs both oracles
     run = nap_spmv_shardmap(compiled, mesh, local_compute="bsr")
     shards = pack_vector(v, part, topo, compiled.rows_pad)
-    got = unpack_vector(np.asarray(run(shards)), part, topo)
+    got_raw = np.asarray(run(shards))
+    got = unpack_vector(got_raw, part, topo)
     np.testing.assert_allclose(got, sim, rtol=1e-4, atol=1e-5)
     np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
 
+    # zero-copy in-kernel gather == materialised HBM concat, bit-for-bit
+    run_mat = nap_spmv_shardmap(compiled, mesh, local_compute="bsr",
+                                materialize_x=True)
+    assert np.array_equal(np.asarray(run_mat(shards)), got_raw)
+
     if nv == 8:
-        run_coo = nap_spmv_shardmap(compiled, mesh, local_compute="coo")
-        got_coo = unpack_vector(np.asarray(run_coo(shards)), part, topo)
-        np.testing.assert_allclose(got_coo, want, rtol=1e-4, atol=1e-5)
-        run_std, _ = standard_spmv_shardmap(a, part, topo, mesh,
-                                            local_compute="bsr",
-                                            block_shape=block_shape)
-        got_std = unpack_vector(np.asarray(run_std(shards)), part, topo)
-        np.testing.assert_allclose(got_std, want, rtol=1e-4, atol=1e-5)
+        for fmt in ("coo", "ell", "auto"):
+            run_f = nap_spmv_shardmap(compiled, mesh, local_compute=fmt)
+            got_f = unpack_vector(np.asarray(run_f(shards)), part, topo)
+            np.testing.assert_allclose(got_f, want, rtol=1e-4, atol=1e-5)
+        assert run_f.local_compute == compiled.chosen_local_compute
+        run_ell_mat = nap_spmv_shardmap(compiled, mesh, local_compute="ell",
+                                        materialize_x=True)
+        run_ell = nap_spmv_shardmap(compiled, mesh, local_compute="ell")
+        assert np.array_equal(np.asarray(run_ell(shards)),
+                              np.asarray(run_ell_mat(shards)))
+        for fmt in ("bsr", "auto"):
+            run_std, _ = standard_spmv_shardmap(a, part, topo, mesh,
+                                                local_compute=fmt,
+                                                block_shape=block_shape)
+            got_std = unpack_vector(np.asarray(run_std(shards)), part, topo)
+            np.testing.assert_allclose(got_std, want, rtol=1e-4, atol=1e-5)
+
+
+def _count_packed_x_concats(fn, shards, n_x, nv) -> int:
+    """Occurrences of a concatenate producing the packed x operand
+    ([n_x, nv] elementwise or [n_x/bn, bn, nv] block form) in the
+    executor's jaxpr.  The walk does NOT descend into pallas_call bodies:
+    interpret mode traces kernel internals as jax eqns, and a concat of
+    VMEM refs inside the kernel is not an HBM materialisation — the
+    assertion targets the per-call executor graph."""
+    jaxpr = jax.make_jaxpr(fn)(shards)
+
+    def walk(jx):
+        hits = 0
+        for eqn in jx.eqns:
+            if eqn.primitive.name == "concatenate":
+                shape = eqn.outvars[0].aval.shape
+                if (len(shape) >= 2 and shape[0] == n_x
+                        and shape[-1] == nv):
+                    hits += 1
+            if "pallas" in eqn.primitive.name:
+                continue
+            for val in eqn.params.values():
+                leaves = val if isinstance(val, (list, tuple)) else [val]
+                for leaf in leaves:
+                    if isinstance(leaf, jax.core.ClosedJaxpr):
+                        hits += walk(leaf.jaxpr)
+                    elif isinstance(leaf, jax.core.Jaxpr):
+                        hits += walk(leaf)
+        return hits
+
+    return walk(jaxpr.jaxpr)
+
+
+def check_block_hostile_autotune():
+    """Low-density (<= 12 nnz/row) matrix: auto must reject BSR, match the
+    dense oracle, and never materialise the packed x concat."""
+    topo = Topology(n_nodes=2, ppn=4)
+    mesh = make_mesh((2, 4), ("node", "proc"))
+    n, nv = 1024, 8
+    a = random_fixed_nnz(n, 8, seed=7)
+    part = contiguous_partition(n, topo.n_procs)
+    compiled = compile_nap(a, part, topo, cache=False)
+    assert compiled.chosen_local_compute in ("ell", "coo"), compiled.autotune
+    assert all(e["choice"] != "bsr" for e in compiled.autotune["per_rank"])
+
+    rng = np.random.default_rng(1)
+    v = rng.standard_normal((n, nv))
+    shards = pack_vector(v, part, topo, compiled.rows_pad)
+    want = dense_oracle(a, v)
+    n_x = compiled.packed_x_len
+
+    for fmt in ("auto", "ell", "bsr"):
+        run = nap_spmv_shardmap(compiled, mesh, local_compute=fmt)
+        got = unpack_vector(np.asarray(run(shards)), part, topo)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+        # the zero-copy executor must NOT materialise the packed x concat...
+        assert _count_packed_x_concats(run.run4, shards, n_x, nv) == 0, fmt
+    # ...while the materialize_x oracle path DOES (differential: proves the
+    # scan actually sees the concat when it exists)
+    run_mat = nap_spmv_shardmap(compiled, mesh, local_compute="ell",
+                                materialize_x=True)
+    assert _count_packed_x_concats(run_mat.run4, shards, n_x, nv) >= 1
+    print(f"block-hostile autotune ok: chose {compiled.chosen_local_compute}, "
+          f"no packed-x concat in zero-copy jaxpr", flush=True)
 
 
 def main():
@@ -81,6 +169,7 @@ def main():
         check((2, 2), "contiguous", block_shape, 8, seed)
         print(f"topo=(2,2) bs={block_shape} nv=8 ok", flush=True)
         seed += 1
+    check_block_hostile_autotune()
     print("ALL OK")
 
 

@@ -5,12 +5,14 @@ import pytest
 import jax.numpy as jnp
 
 from repro.kernels.bsr_spmv import (bsr_spmm, bsr_spmv, fused_bsr_spmm,
-                                    fused_bsr_spmm_ref)
+                                    fused_bsr_spmm_packed, fused_bsr_spmm_ref)
 from repro.kernels.bsr_spmv.kernel import bsr_spmm_padded
 from repro.kernels.bsr_spmv.ref import bsr_spmm_padded_ref, bsr_spmv_ref
 from repro.kernels.decode_attn import decode_attention, decode_attention_ref
 from repro.kernels.decode_attn.kernel import decode_attention_grouped
-from repro.sparse import BSR, CSR, poisson_2d, random_fixed_nnz
+from repro.kernels.ell_spmv import (ell_spmm_packed, ell_spmm_packed_ref,
+                                    ell_spmv_ref)
+from repro.sparse import BSR, CSR, ELL, poisson_2d, random_fixed_nnz
 
 
 # ---------------------------------------------------------------------------
@@ -81,6 +83,91 @@ def test_bsr_spmm_multi_vector():
     got = np.asarray(bsr_spmm(bsr, x, interpret=True))
     want = bsr.to_dense() @ x
     np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("n_segments", [1, 2, 3])
+@pytest.mark.parametrize("nv,nv_block", [(1, 128), (8, 4), (12, 8)])
+def test_fused_bsr_packed_bitwise_equals_concat(n_segments, nv, nv_block):
+    """The zero-copy segment-routed kernel must equal the materialised-
+    concat kernel bit-for-bit (same dots, same accumulation order)."""
+    rng = np.random.default_rng(n_segments * 100 + nv + nv_block)
+    bm, bn, nbr, ktot = 8, 16, 4, 5
+    seg_lens = [3, 2, 4][:n_segments]
+    nbc = sum(seg_lens)
+    cols = rng.integers(-1, nbc, size=(nbr, ktot)).astype(np.int32)
+    blocks = rng.standard_normal((nbr, ktot, bm, bn)).astype(np.float32)
+    blocks[cols < 0] = 0.0
+    x = rng.standard_normal((nbc, bn, nv)).astype(np.float32)
+    bounds = np.cumsum([0] + seg_lens)
+    xs = tuple(x[bounds[i]:bounds[i + 1]] for i in range(n_segments))
+    got = fused_bsr_spmm_packed(jnp.asarray(cols), jnp.asarray(blocks), xs,
+                                nv_block=nv_block, interpret=True)
+    want = fused_bsr_spmm(jnp.asarray(cols), jnp.asarray(blocks),
+                          jnp.asarray(x), nv_block=nv_block, interpret=True)
+    assert np.array_equal(np.asarray(got), np.asarray(want))
+
+
+# ---------------------------------------------------------------------------
+# ELL SpMV / SpMM
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n_segments", [1, 3])
+@pytest.mark.parametrize("nv,nv_block,rows_block", [
+    (1, 128, 0),    # single RHS, auto row tile
+    (8, 4, 0),      # nv tiled into 2 blocks
+    (12, 8, 8),     # nv not a multiple of nv_block + forced 8-row tiles
+    (128, 64, 16),  # wide multi-RHS
+])
+def test_ell_packed_kernel_vs_ref(n_segments, nv, nv_block, rows_block):
+    rng = np.random.default_rng(n_segments * 10 + nv + rows_block)
+    n_rows, kmax = 32, 5
+    seg_lens = [16, 8, 24][:n_segments]
+    n_x = sum(seg_lens)
+    cols = rng.integers(-1, n_x, size=(n_rows, kmax)).astype(np.int32)
+    vals = rng.standard_normal((n_rows, kmax)).astype(np.float32)
+    vals[cols < 0] = 0.0
+    bounds = np.cumsum([0] + seg_lens)
+    x = rng.standard_normal((n_x, nv)).astype(np.float32)
+    xs = tuple(x[bounds[i]:bounds[i + 1]] for i in range(n_segments))
+    got = ell_spmm_packed(jnp.asarray(cols), jnp.asarray(vals), xs,
+                          nv_block=nv_block, rows_block=rows_block,
+                          interpret=True)
+    want = ell_spmm_packed_ref(jnp.asarray(cols), jnp.asarray(vals), xs)
+    assert got.shape == (n_rows, nv)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-5)
+    # zero-copy multi-segment == materialised single-segment, bit-for-bit
+    got_cat = ell_spmm_packed(jnp.asarray(cols), jnp.asarray(vals), (x,),
+                              nv_block=nv_block, rows_block=rows_block,
+                              interpret=True)
+    assert np.array_equal(np.asarray(got), np.asarray(got_cat))
+
+
+def test_ell_spmv_matches_csr_matvec():
+    a = poisson_2d(12)
+    ell = ELL.from_csr(a)
+    rng = np.random.default_rng(0)
+    v = rng.standard_normal(a.shape[1])
+    want = a.matvec(v)
+    np.testing.assert_allclose(ell.matvec(v), want, rtol=1e-6)
+    got = ell_spmm_packed(jnp.asarray(ell.cols), jnp.asarray(ell.vals),
+                          (v.reshape(-1, 1).astype(np.float32),),
+                          interpret=True)
+    np.testing.assert_allclose(np.asarray(got).ravel()[: a.shape[0]], want,
+                               rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(ell_spmv_ref(ell, v))[: a.shape[0]],
+                               want, rtol=1e-4, atol=1e-5)
+
+
+def test_ell_padding_slots_are_inert():
+    """col == -1 slots must not contribute even against nonzero x rows."""
+    cols = np.array([[0, -1], [1, 0]], np.int32)
+    vals = np.array([[2.0, 0.0], [3.0, 1.0]], np.float32)
+    x = np.array([[10.0], [100.0]], np.float32)
+    got = ell_spmm_packed(jnp.asarray(np.tile(cols, (4, 1))),
+                          jnp.asarray(np.tile(vals, (4, 1))), (x,),
+                          interpret=True)
+    np.testing.assert_allclose(np.asarray(got)[:2].ravel(), [20.0, 310.0])
 
 
 # ---------------------------------------------------------------------------
