@@ -18,6 +18,11 @@ Measures, on a forced 8-device host platform (2 nodes x 4 ppn):
   iterations and ``jax.block_until_ready`` around every timed call.
   Pallas runs in interpret mode on CPU, so absolute numbers are NOT
   hardware numbers — they track relative regressions across PRs.
+  Additionally ``operator_forward_nv*_s`` / ``operator_transpose_nv*_s``
+  record the END-TO-END `repro.api` operator wall (pack -> SPMD run ->
+  unpack, and the reversed-plan transpose) — these share the wall dict,
+  so benchmarks/run.py's >1.5x regression gate covers them like every
+  other wall entry.
 * ``modeled_bytes`` — padded vs effective bytes per phase (the quantity
   the paper's T/U balancing minimises) and plan-level message stats.
 
@@ -118,12 +123,14 @@ def bench_local_emit(n_rows: int, nnz_per_row: int) -> dict:
 
 def bench_spmv_wall(n_rows: int, nnz_per_row: int, quick: bool) -> dict:
     import jax
+    import repro.api as nap_api
     from repro.compat import make_mesh
     from repro.core.comm_graph import build_standard_plan, nap_stats, standard_stats, build_nap_plan
     from repro.core.partition import contiguous_partition
-    from repro.core.spmv_jax import (compile_nap, nap_spmv_shardmap,
-                                     pack_vector, padded_traffic,
-                                     standard_spmv_shardmap)
+    from repro.core.spmv_jax import (compile_nap, compile_standard,
+                                     nap_forward_shardmap, pack_vector,
+                                     padded_traffic,
+                                     standard_forward_shardmap)
     from repro.core.topology import Topology
     from repro.sparse import random_fixed_nnz
 
@@ -132,43 +139,58 @@ def bench_spmv_wall(n_rows: int, nnz_per_row: int, quick: bool) -> dict:
     a = random_fixed_nnz(n_rows, nnz_per_row, seed=0)
     part = contiguous_partition(n_rows, topo.n_procs)
     compiled = compile_nap(a, part, topo, cache=False)
+    compiled_std = compile_standard(a, part, topo, cache=False)
     rng = np.random.default_rng(0)
+
+    def timed(fn, *args):
+        # fairness: identical explicit warmup + a block_until_ready
+        # fence around every timed application for every variant;
+        # best-of-iters so shared-CPU load spikes don't masquerade as
+        # regressions under run.py's 1.5x gate
+        for _ in range(WARMUP_ITERS):
+            jax.block_until_ready(fn(*args))
+        best = float("inf")
+        for _ in range(iters):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(*args))
+            best = min(best, time.perf_counter() - t0)
+        return best
 
     iters = 3 if quick else 10
     walls = {}
     auto_vs_best = {}
+    # one operator reused across nv (jit retraces per shape; the plan
+    # compile + format emission happen once, like the shard-level paths)
+    op = nap_api.operator(a, part=part, topo=topo, method="nap",
+                          backend="shardmap", mesh=mesh, cache=False)
     for nv in ((8,) if quick else (1, 8)):
         v = rng.standard_normal((n_rows, nv))
         shards = pack_vector(v, part, topo, compiled.rows_pad)
-        run_auto = nap_spmv_shardmap(compiled, mesh, local_compute="auto")
+        run_auto = nap_forward_shardmap(compiled, mesh, local_compute="auto")
         # auto is timed adjacent to the cheap fixed formats it resolves
         # against, not in the heap-churn shadow of the 11 MB BSR variant
         paths = {
-            "standard_bsr": standard_spmv_shardmap(a, part, topo, mesh,
-                                                   local_compute="bsr")[0],
-            "nap_coo": nap_spmv_shardmap(compiled, mesh, local_compute="coo"),
-            "nap_ell": nap_spmv_shardmap(compiled, mesh, local_compute="ell"),
+            "standard_bsr": standard_forward_shardmap(compiled_std, mesh,
+                                                      local_compute="bsr"),
+            "nap_coo": nap_forward_shardmap(compiled, mesh, local_compute="coo"),
+            "nap_ell": nap_forward_shardmap(compiled, mesh, local_compute="ell"),
             "nap_auto": run_auto,
-            "nap_fused_bsr": nap_spmv_shardmap(compiled, mesh,
-                                               local_compute="bsr"),
+            "nap_fused_bsr": nap_forward_shardmap(compiled, mesh,
+                                                  local_compute="bsr"),
         }
         for name, run in paths.items():
-            # fairness: identical explicit warmup + a block_until_ready
-            # fence around every timed application for every variant;
-            # best-of-iters so shared-CPU load spikes don't masquerade as
-            # regressions under run.py's 1.5x gate
-            for _ in range(WARMUP_ITERS):
-                jax.block_until_ready(run(shards))
-            best = float("inf")
-            for _ in range(iters):
-                t0 = time.perf_counter()
-                jax.block_until_ready(run(shards))
-                best = min(best, time.perf_counter() - t0)
-            walls[f"{name}_nv{nv}_s"] = round(best, 5)
+            walls[f"{name}_nv{nv}_s"] = round(timed(run, shards), 5)
         best_fixed = min(walls[f"nap_{f}_nv{nv}_s"]
                          for f in ("coo", "ell", "fused_bsr"))
         auto_vs_best[f"nv{nv}"] = round(
             walls[f"nap_auto_nv{nv}_s"] / best_fixed, 3)
+
+        # operator-level end-to-end walls (pack -> run -> unpack), forward
+        # and reversed-plan transpose, through the repro.api front-end
+        walls[f"operator_forward_nv{nv}_s"] = round(
+            timed(lambda: op @ v), 5)
+        walls[f"operator_transpose_nv{nv}_s"] = round(
+            timed(lambda: op.T @ v), 5)
 
     std_plan = build_standard_plan(a.indptr, a.indices, part, topo)
     nap_plan = compiled.plan or build_nap_plan(

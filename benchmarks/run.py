@@ -5,7 +5,11 @@
 The run fails (non-zero exit) if the freshly measured BENCH_spmv.json
 regresses plan-compile or local-compute wall time by more than
 ``REGRESSION_FACTOR`` versus the committed baseline — keep it green
-across PRs.
+across PRs.  The gate walks EVERY key shared by the two ``spmv_wall.wall``
+dicts, which includes the operator-level end-to-end walls
+(``operator_forward_nv*_s`` / ``operator_transpose_nv*_s`` — the
+`repro.api` pack->run->unpack path) alongside the shard-level executor
+walls.
 """
 from __future__ import annotations
 

@@ -1,23 +1,23 @@
-"""AMG-preconditioned CG where every SpMV is the distributed NAPSpMV.
+"""AMG-preconditioned CG where every SpMV is a NapOperator.
 
 This is the paper's driving application: algebraic multigrid solves spend
-their time in per-level SpMVs whose communication patterns degrade on coarse
-levels.  Here a rotated-anisotropic system is solved by AMG-PCG with the
-level-0 (and optionally every level's) SpMV executed through the exact
-NAPSpMV message-passing simulator, and the per-level communication savings
-are printed.
+their time in per-level SpMVs whose communication patterns degrade on
+coarse levels.  Here a rotated-anisotropic system is solved by AMG-PCG
+with EVERY level's SpMV executed through `repro.api.operator` (exact
+NAPSpMV message-passing backend), and the per-level communication savings
+are printed.  A BiCG solve on a nonsymmetric perturbation additionally
+exercises `op.T` — the transpose SpMV that AMG restriction and BiCG-type
+solvers need, compiled from the same communication plan.
 
     PYTHONPATH=src python examples/amg_spmv.py
 """
 import numpy as np
 
-from repro.amg import amg_vcycle, cg_solve, smoothed_aggregation_hierarchy
-from repro.configs.paper_spmv import CONFIG
-from repro.core.cost_model import BLUE_WATERS, nap_cost, standard_cost
-from repro.core.partition import contiguous_partition
-from repro.core.spmv import DistSpMV
+from repro.amg import (amg_vcycle, bicgstab_solve, cg_solve, level_operators,
+                       smoothed_aggregation_hierarchy)
+from repro.core.cost_model import BLUE_WATERS
 from repro.core.topology import Topology
-from repro.sparse import CSR, rotated_anisotropic_2d
+from repro.sparse import CSR, random_fixed_nnz, rotated_anisotropic_2d
 
 
 def main() -> None:
@@ -27,32 +27,40 @@ def main() -> None:
     levels = smoothed_aggregation_hierarchy(a, theta=0.1, coarse_size=64)
     print(f"AMG hierarchy: {[lvl.a.shape[0] for lvl in levels]} rows/level")
 
-    # distributed SpMV per level (exact simulator) + modeled times
-    dists = []
-    for i, lvl in enumerate(levels):
-        if lvl.a.shape[0] < topo.n_procs:
-            dists.append(None)
+    # one NapOperator per level (exact simulator backend) + modeled times
+    ops = level_operators(levels, topo, method="nap", backend="simulate")
+    std_ops = level_operators(levels, topo, method="standard",
+                              backend="simulate")
+    for i, (lvl, op, op_std) in enumerate(zip(levels, ops, std_ops)):
+        if op is None:
             continue
-        part = contiguous_partition(lvl.a.shape[0], topo.n_procs)
-        d = DistSpMV.build(lvl.a, part, topo)
-        dists.append(d)
-        ts = standard_cost(d.standard, BLUE_WATERS)["total"]
-        tn = nap_cost(d.nap, BLUE_WATERS)["total"]
+        ts = op_std.cost(BLUE_WATERS)["total"]
+        tn = op.cost(BLUE_WATERS)["total"]
         print(f"  level {i}: rows {lvl.a.shape[0]:6d}  modeled comm "
               f"std {ts:.2e}s  nap {tn:.2e}s  ({ts/tn:4.1f}x)")
-
-    def spmv_at(lvl_idx: int, vec: np.ndarray) -> np.ndarray:
-        d = dists[lvl_idx]
-        return d.run(vec, "nap") if d is not None else levels[lvl_idx].a.matvec(vec)
 
     rng = np.random.default_rng(0)
     b = rng.standard_normal(a.shape[0])
     x, iters, rel = cg_solve(
         a, b, tol=1e-8, maxiter=100,
-        precond=lambda r: amg_vcycle(levels, r, spmv_at=spmv_at),
-        spmv=lambda vec: dists[0].run(vec, "nap"))
+        precond=lambda r: amg_vcycle(levels, r, operators=ops),
+        spmv=ops[0])
     print(f"AMG-PCG with NAPSpMV converged in {iters} iters (relres {rel:.1e})")
     assert rel < 1e-8
+
+    # -- transpose SpMV in anger: BiCG on a nonsymmetric system --------------
+    # plain BiCG needs A.T @ v every iteration; op.T serves it from the
+    # same compiled NAP plan with the send/recv roles reversed.
+    import repro.api as nap
+    an = random_fixed_nnz(1024, 9, seed=3)
+    an = CSR.from_dense(an.to_dense() + np.eye(1024) * 12.0)  # diag-dominant
+    op_n = nap.operator(an, topo=topo, method="nap", backend="simulate")
+    bn = rng.standard_normal(1024)
+    xb, itb, relb = bicgstab_solve(an, bn, tol=1e-8, maxiter=200,
+                                   spmv=op_n, spmv_t=op_n.T)
+    print(f"BiCG with forward+transpose NAPSpMV converged in {itb} iters "
+          f"(relres {relb:.1e})")
+    assert relb < 1e-8
 
 
 if __name__ == "__main__":

@@ -1,9 +1,16 @@
-"""Quickstart: node-aware SpMV on a small problem, end to end.
+"""Quickstart: node-aware SpMV through the unified operator API.
 
 Builds a 2D anisotropic diffusion matrix, distributes it over a simulated
-(4 nodes x 4 processes) machine, runs the standard and node-aware SpMV
-through (a) the exact message-passing simulator and (b) the JAX shard_map
-SPMD executor, checks exactness, and prints the communication win.
+(4 nodes x 4 processes) machine, and runs forward AND transpose SpMV
+through one `NapOperator` on both backends — the exact message-passing
+simulator and the JAX shard_map SPMD executor — then prints the
+communication win.  The whole flow is five lines:
+
+    import repro.api as nap
+    op = nap.operator(a, topo=Topology(n_nodes=4, ppn=4))
+    w  = op @ v        # forward SpMV (multi-RHS: v of shape [n, nv])
+    z  = op.T @ v      # transpose SpMV, same compiled plan reversed
+    op.stats(); op.cost(BLUE_WATERS); op.autotune_report()
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -14,65 +21,56 @@ os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=16")
 import numpy as np
 import jax
 
-from repro.compat import make_mesh
-from repro.core.comm_graph import build_nap_plan, build_standard_plan, nap_stats, standard_stats
-from repro.core.cost_model import BLUE_WATERS, nap_cost, standard_cost
-from repro.core.partition import contiguous_partition
-from repro.core.spmv import DistSpMV
-from repro.core.spmv_jax import (compile_nap, nap_spmv_shardmap, pack_vector,
-                                 unpack_vector)
+import repro.api as nap
+from repro.core.cost_model import BLUE_WATERS
 from repro.core.topology import Topology
-from repro.sparse import rotated_anisotropic_2d
+from repro.sparse import random_fixed_nnz, rotated_anisotropic_2d
 
 
 def main() -> None:
     # -- problem + machine ----------------------------------------------------
     a = rotated_anisotropic_2d(32, eps=0.01, theta=np.pi / 6)
     topo = Topology(n_nodes=4, ppn=4)
-    part = contiguous_partition(a.shape[0], topo.n_procs)
     rng = np.random.default_rng(0)
     v = rng.standard_normal(a.shape[0])
     want = a.matvec(v)
+    want_t = a.transpose().matvec(v)
 
-    # -- exact message-passing simulation ------------------------------------
-    dist = DistSpMV.build(a, part, topo)
-    w_std = dist.run(v, "standard")
-    w_nap = dist.run(v, "nap")
-    np.testing.assert_allclose(w_std, want, rtol=1e-12)
-    np.testing.assert_allclose(w_nap, want, rtol=1e-12)
-    print("exactness: standard & NAP simulators match A@v")
+    # -- exact message-passing simulation through the operator ----------------
+    for method in ("standard", "nap"):
+        op = nap.operator(a, topo=topo, method=method, backend="simulate")
+        np.testing.assert_allclose(op @ v, want, rtol=1e-12)
+        np.testing.assert_allclose(op.T @ v, want_t, rtol=1e-12)
+    print("exactness: standard & NAP simulators match A@v and A.T@v")
 
     # -- communication statistics (the paper's Figs. 11/12 in miniature) ------
     # unstructured matrices are where the node-level dedup wins: many ranks
     # of one node need the same remote value, and NAP injects it once.
-    from repro.sparse import random_fixed_nnz
     ar = random_fixed_nnz(4096, 50, seed=0)
-    partr = contiguous_partition(ar.shape[0], topo.n_procs)
-    distr = DistSpMV.build(ar, partr, topo)
-    np.testing.assert_allclose(distr.run(v0 := rng.standard_normal(4096), "nap"),
-                               ar.matvec(v0), rtol=1e-9, atol=1e-12)
-    s = standard_stats(distr.standard)
-    n = nap_stats(distr.nap)
+    op_std = nap.operator(ar, topo=topo, method="standard", backend="simulate")
+    op_nap = nap.operator(ar, topo=topo, method="nap", backend="simulate")
+    v0 = rng.standard_normal(4096)
+    np.testing.assert_allclose(op_nap @ v0, ar.matvec(v0), rtol=1e-9, atol=1e-12)
+    s, n = op_std.stats(), op_nap.stats()
     print("\nrandom 4096x4096, 50 nnz/row (the paper's unstructured case):")
-    print(f"inter-node messages: standard {s['inter'].total_msgs:4d}  "
-          f"nap {n['inter'].total_msgs:4d}")
-    print(f"inter-node bytes:    standard {s['inter'].total_bytes:6d}  "
-          f"nap {n['inter'].total_bytes:6d}")
-    print(f"intra-node bytes:    standard {s['intra'].total_bytes:6d}  "
-          f"nap {n['intra'].total_bytes:6d}   (cheap traffic grows)")
-    ts = standard_cost(distr.standard, BLUE_WATERS)["total"]
-    tn = nap_cost(distr.nap, BLUE_WATERS)["total"]
+    print(f"inter-node messages: standard {s['messages_inter'].total_msgs:4d}  "
+          f"nap {n['messages_inter'].total_msgs:4d}")
+    print(f"inter-node bytes:    standard {s['messages_inter'].total_bytes:6d}  "
+          f"nap {n['messages_inter'].total_bytes:6d}")
+    print(f"intra-node bytes:    standard {s['messages_intra'].total_bytes:6d}  "
+          f"nap {n['messages_intra'].total_bytes:6d}   (cheap traffic grows)")
+    ts = op_std.cost(BLUE_WATERS)["total"]
+    tn = op_nap.cost(BLUE_WATERS)["total"]
     print(f"modeled comm time:   standard {ts:.2e}s  nap {tn:.2e}s  "
           f"({ts / tn:.2f}x)")
 
     # -- the same plan compiled to shard_map SPMD ------------------------------
     if jax.device_count() >= topo.n_procs:
-        mesh = make_mesh((topo.n_nodes, topo.ppn), ("node", "proc"))
-        compiled = compile_nap(a, part, topo)
-        run = nap_spmv_shardmap(compiled, mesh)
-        shards = pack_vector(v, part, topo, compiled.rows_pad)
-        w_spmd = unpack_vector(np.asarray(run(shards)), part, topo)
-        np.testing.assert_allclose(w_spmd, want, rtol=1e-4, atol=1e-5)
+        op = nap.operator(a, topo=topo, method="nap", backend="shardmap")
+        np.testing.assert_allclose(op @ v, want, rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose(op.T @ v, want_t, rtol=1e-4, atol=1e-5)
+        print(f"\nautotuned local compute: {op.local_compute} "
+              f"(see op.autotune_report())")
         print("SPMD shard_map NAPSpMV matches on a 16-device host mesh")
 
 

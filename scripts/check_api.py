@@ -1,0 +1,87 @@
+"""API smoke: the unified NapOperator surface + the deprecation contract.
+
+Run as its own process (it forces the XLA host device count before jax
+initialises); wired into the tier-1 pytest run via tests/test_api.py.
+
+Checks, on a 64-row operator over a (2, 2) machine on CPU:
+  * `repro.api` imports and `operator(...)` builds on both backends;
+  * forward AND transpose match the dense oracle (1e-9 on simulate,
+    f32 tolerance on shardmap), 1-RHS and multi-RHS;
+  * each deprecation shim (`nap_spmv_shardmap`, `standard_spmv_shardmap`,
+    `DistSpMV.run`) emits DeprecationWarning EXACTLY once per process
+    while remaining fully functional.
+
+    PYTHONPATH=src python scripts/check_api.py
+"""
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=4")
+
+import warnings
+
+import numpy as np
+
+
+def main() -> None:
+    import repro.api as nap
+    from repro.compat import make_mesh
+    from repro.core.partition import contiguous_partition
+    from repro.core.spmv import DistSpMV
+    from repro.core.spmv_jax import (compile_nap, nap_spmv_shardmap,
+                                     pack_vector, standard_spmv_shardmap)
+    from repro.core.topology import Topology
+    from repro.sparse import random_fixed_nnz
+
+    n = 64
+    topo = Topology(n_nodes=2, ppn=2)
+    a = random_fixed_nnz(n, 6, seed=0)
+    rng = np.random.default_rng(0)
+    v = rng.standard_normal(n)
+    v4 = rng.standard_normal((n, 4))
+    at = a.transpose()
+
+    # -- operator forward + transpose on both backends ----------------------
+    for backend, rtol, atol in [("simulate", 1e-9, 1e-12),
+                                ("shardmap", 1e-4, 1e-5)]:
+        for method in ("nap", "standard"):
+            op = nap.operator(a, topo=topo, method=method, backend=backend)
+            np.testing.assert_allclose(op @ v, a.matvec(v), rtol=rtol, atol=atol)
+            np.testing.assert_allclose(op.T @ v, at.matvec(v), rtol=rtol, atol=atol)
+            w4, z4 = op @ v4, op.T @ v4
+            for i in range(4):
+                np.testing.assert_allclose(w4[:, i], a.matvec(v4[:, i]),
+                                           rtol=rtol, atol=atol)
+                np.testing.assert_allclose(z4[:, i], at.matvec(v4[:, i]),
+                                           rtol=rtol, atol=atol)
+            assert op.T.T is op
+    print("operator forward+transpose OK on simulate + shardmap "
+          "(nap & standard, 1-RHS & multi-RHS)")
+
+    # -- deprecation shims: warn exactly once, still functional -------------
+    part = contiguous_partition(n, topo.n_procs)
+    mesh = make_mesh((topo.n_nodes, topo.ppn), ("node", "proc"))
+    compiled = compile_nap(a, part, topo)
+    shards = pack_vector(v, part, topo, compiled.rows_pad)
+    dist = DistSpMV.build(a, part, topo)
+    shims = {
+        "nap_spmv_shardmap": lambda: nap_spmv_shardmap(compiled, mesh)(shards),
+        "standard_spmv_shardmap": lambda: standard_spmv_shardmap(
+            a, part, topo, mesh)[0](shards),
+        "DistSpMV.run": lambda: dist.run(v),
+    }
+    for name, call in shims.items():
+        with warnings.catch_warnings(record=True) as caught:
+            warnings.simplefilter("always")
+            call()
+            call()
+        got = [w for w in caught if issubclass(w.category, DeprecationWarning)]
+        assert len(got) == 1, (
+            f"{name}: expected exactly ONE DeprecationWarning over two "
+            f"calls, saw {len(got)}")
+        assert "repro.api" in str(got[0].message), got[0].message
+    print("deprecation shims warn exactly once each and stay functional")
+    print("API OK")
+
+
+if __name__ == "__main__":
+    main()

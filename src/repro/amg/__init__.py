@@ -1,6 +1,7 @@
 from repro.amg.hierarchy import Level, smoothed_aggregation_hierarchy
 from repro.amg.matmul import csr_matmul
-from repro.amg.solve import amg_vcycle, cg_solve
+from repro.amg.solve import (amg_vcycle, bicgstab_solve, cg_solve,
+                             level_operators)
 
 __all__ = ["Level", "smoothed_aggregation_hierarchy", "csr_matmul",
-           "amg_vcycle", "cg_solve"]
+           "amg_vcycle", "bicgstab_solve", "cg_solve", "level_operators"]

@@ -1,17 +1,44 @@
-"""AMG V-cycle + (preconditioned) CG, numpy reference solvers.
+"""AMG V-cycle + (preconditioned) CG over NapOperator-backed SpMVs.
 
-These exercise the hierarchy end-to-end; the *distributed* SpMV inside each
-level is what the paper optimizes (examples/amg_spmv.py wires the NAPSpMV
-executor into this loop).
+These exercise the hierarchy end-to-end; the *distributed* SpMV inside
+each level is what the paper optimizes.  Every solver accepts either a
+plain callable or a :class:`repro.api.NapOperator` (operators are
+callable), and :func:`level_operators` builds one operator per hierarchy
+level so AMG cycles run entirely through the unified front-end —
+``examples/amg_spmv.py`` wires the NAPSpMV executors into this loop with
+no raw lambdas.
 """
 from __future__ import annotations
 
-from typing import Callable, List, Optional
+from typing import Callable, List, Optional, Sequence
 
 import numpy as np
 
 from repro.amg.hierarchy import Level
 from repro.sparse.csr import CSR
+
+
+def level_operators(levels: Sequence[Level], topo, *, method: str = "nap",
+                    backend: str = "simulate", min_rows: Optional[int] = None,
+                    **kwargs) -> List[Optional[object]]:
+    """One :class:`repro.api.NapOperator` per AMG level.
+
+    Levels smaller than ``min_rows`` (default: the machine size — a level
+    cannot be distributed over more ranks than it has rows) get ``None``;
+    :func:`amg_vcycle` falls back to the level's local ``a.matvec`` there.
+    Extra ``kwargs`` pass straight to :func:`repro.api.operator`.
+    """
+    import repro.api as nap  # local import keeps numpy-only users jax-free
+
+    floor = topo.n_procs if min_rows is None else min_rows
+    ops: List[Optional[object]] = []
+    for lvl in levels:
+        if lvl.a.shape[0] < floor:
+            ops.append(None)
+            continue
+        ops.append(nap.operator(lvl.a, topo=topo, method=method,
+                                backend=backend, **kwargs))
+    return ops
 
 
 def _diag(a: CSR) -> np.ndarray:
@@ -26,6 +53,7 @@ def _diag(a: CSR) -> np.ndarray:
 def jacobi(a: CSR, x: np.ndarray, b: np.ndarray, d: np.ndarray,
            sweeps: int = 2, omega: float = 2.0 / 3.0,
            spmv: Optional[Callable] = None) -> np.ndarray:
+    """``spmv`` may be a callable or a NapOperator (operators are callable)."""
     mv = spmv or a.matvec
     for _ in range(sweeps):
         x = x + omega * (b - mv(x)) / d
@@ -34,12 +62,23 @@ def jacobi(a: CSR, x: np.ndarray, b: np.ndarray, d: np.ndarray,
 
 def amg_vcycle(levels: List[Level], b: np.ndarray,
                x: Optional[np.ndarray] = None, lvl: int = 0,
-               spmv_at: Optional[Callable[[int, np.ndarray], np.ndarray]] = None
+               spmv_at: Optional[Callable[[int, np.ndarray], np.ndarray]] = None,
+               operators: Optional[Sequence[Optional[object]]] = None
                ) -> np.ndarray:
-    """One V(2,2)-cycle.  ``spmv_at(lvl, v)`` may override the per-level SpMV
-    (e.g. with the distributed NAP executor)."""
+    """One V(2,2)-cycle.
+
+    Per-level SpMV resolution: ``operators[lvl]`` (a NapOperator from
+    :func:`level_operators`; ``None`` entries fall back to the level's
+    ``a.matvec``) or the lower-level ``spmv_at(lvl, v)`` callback.
+    """
     a = levels[lvl].a
-    mv = (lambda v: spmv_at(lvl, v)) if spmv_at else a.matvec
+    if operators is not None and spmv_at is None:
+        op = operators[lvl] if lvl < len(operators) else None
+        mv = op if op is not None else a.matvec
+    elif spmv_at is not None:
+        mv = lambda v: spmv_at(lvl, v)
+    else:
+        mv = a.matvec
     if x is None:
         x = np.zeros_like(b)
     if lvl == len(levels) - 1 or levels[lvl].p is None:
@@ -48,7 +87,7 @@ def amg_vcycle(levels: List[Level], b: np.ndarray,
     d = _diag(a)
     x = jacobi(a, x, b, d, spmv=mv)
     coarse_b = levels[lvl].r.matvec(b - mv(x))
-    coarse_x = amg_vcycle(levels, coarse_b, None, lvl + 1, spmv_at)
+    coarse_x = amg_vcycle(levels, coarse_b, None, lvl + 1, spmv_at, operators)
     x = x + levels[lvl].p.matvec(coarse_x)
     return jacobi(a, x, b, d, spmv=mv)
 
@@ -56,7 +95,10 @@ def amg_vcycle(levels: List[Level], b: np.ndarray,
 def cg_solve(a: CSR, b: np.ndarray, tol: float = 1e-8, maxiter: int = 500,
              precond: Optional[Callable[[np.ndarray], np.ndarray]] = None,
              spmv: Optional[Callable] = None):
-    """(Preconditioned) conjugate gradients; returns (x, iters, relres)."""
+    """(Preconditioned) conjugate gradients; returns (x, iters, relres).
+
+    ``spmv`` may be a plain callable or a NapOperator.
+    """
     mv = spmv or a.matvec
     x = np.zeros_like(b)
     r = b - mv(x)
@@ -76,4 +118,69 @@ def cg_solve(a: CSR, b: np.ndarray, tol: float = 1e-8, maxiter: int = 500,
         rz_new = float(r @ z)
         p = z + (rz_new / max(rz, 1e-300)) * p
         rz = rz_new
+    return x, maxiter, float(np.linalg.norm(r)) / b_norm
+
+
+def _safe_div(num: float, den: float) -> float:
+    """num/den with a sign-preserving breakdown guard (BiCG denominators
+    are legitimately negative — clamping with max() would flip search
+    directions into garbage)."""
+    if abs(den) < 1e-300:
+        den = 1e-300 if den >= 0 else -1e-300
+    return num / den
+
+
+def bicgstab_solve(a: CSR, b: np.ndarray, tol: float = 1e-8,
+                   maxiter: int = 500, spmv: Optional[Callable] = None,
+                   spmv_t: Optional[Callable] = None):
+    """BiCG-stabilised solve for nonsymmetric systems; returns
+    (x, iters, relres).
+
+    BiCGSTAB itself needs only ``A @ v``, but the classic BiCG it
+    stabilises needs ``A.T @ v`` — pass ``spmv_t`` (e.g. ``op.T``) to run
+    plain BiCG instead, exercising the transpose SpMV the NapOperator
+    front-end provides from the same compiled plan.
+    """
+    mv = spmv or a.matvec
+    x = np.zeros_like(b)
+    r = b - mv(x)
+    b_norm = max(float(np.linalg.norm(b)), 1e-30)
+    if spmv_t is not None:
+        # plain BiCG (Lanczos biorthogonalisation) using A and A.T
+        rt = r.copy()
+        p, pt = r.copy(), rt.copy()
+        rho = float(rt @ r)
+        for it in range(1, maxiter + 1):
+            ap = mv(p)
+            alpha = _safe_div(rho, float(pt @ ap))
+            x += alpha * p
+            r -= alpha * ap
+            rel = float(np.linalg.norm(r)) / b_norm
+            if rel < tol:
+                return x, it, rel
+            rt = rt - alpha * spmv_t(pt)
+            rho_new = float(rt @ r)
+            beta = _safe_div(rho_new, rho)
+            p = r + beta * p
+            pt = rt + beta * pt
+            rho = rho_new
+        return x, maxiter, float(np.linalg.norm(r)) / b_norm
+    rt0 = r.copy()
+    rho = alpha = omega = 1.0
+    v = p = np.zeros_like(b)
+    for it in range(1, maxiter + 1):
+        rho_new = float(rt0 @ r)
+        beta = _safe_div(rho_new, rho) * _safe_div(alpha, omega)
+        rho = rho_new
+        p = r + beta * (p - omega * v)
+        v = mv(p)
+        alpha = _safe_div(rho, float(rt0 @ v))
+        s = r - alpha * v
+        t = mv(s)
+        omega = _safe_div(float(t @ s), float(t @ t))
+        x += alpha * p + omega * s
+        r = s - omega * t
+        rel = float(np.linalg.norm(r)) / b_norm
+        if rel < tol:
+            return x, it, rel
     return x, maxiter, float(np.linalg.norm(r)) / b_norm

@@ -1,0 +1,196 @@
+"""One LinearOperator-style front-end over every NAPSpMV backend.
+
+The paper's NAPSpMV is one kernel inside larger solvers — AMG cycles need
+``A @ x`` *and* the restriction ``A.T @ x`` against the same communication
+plan on every level.  This module collapses the four historical entry
+points (``DistSpMV.run``, ``compile_nap`` + ``nap_spmv_shardmap``
+closures, ``standard_spmv_shardmap``, manual ``pack_vector`` /
+``unpack_vector``) into one object::
+
+    import repro.api as nap
+
+    op = nap.operator(a, topo=Topology(n_nodes=4, ppn=4))
+    w  = op @ v          # forward SpMV (1-RHS or [n, nv] multi-RHS)
+    z  = op.T @ v        # transpose SpMV, same compiled plan reversed
+    op.stats(), op.cost(BLUE_WATERS), op.autotune_report()
+
+Backends resolve through the pluggable registry in
+:mod:`repro.core.executors` — ``backend="shardmap"`` is the jitted SPMD
+executor (Pallas local compute, zero-copy packed x), ``"simulate"`` the
+exact float64 message-passing oracle; new backends (true-TPU Mosaic,
+collective-permute overlap) register themselves without touching any call
+site.  Compilation is lazy per backend *and* per direction: building an
+operator costs one plan build; the forward program JITs on first
+``op @ x`` and the transpose program only on first ``op.T @ x``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import numpy as np
+
+from repro.core.cost_model import (LocalComputeParams, MachineParams,
+                                   TPU_V5E_LOCAL)
+from repro.core.executors import (OperatorSpec, available_executors,
+                                  bind_executor, register_executor)
+from repro.core.partition import RowPartition, contiguous_partition
+from repro.core.topology import Topology
+
+__all__ = ["operator", "NapOperator", "available_executors",
+           "register_executor"]
+
+
+def operator(a, topo: Optional[Topology] = None,
+             part: Optional[RowPartition] = None, *,
+             method: str = "nap", backend: str = "shardmap",
+             local_compute: str = "auto", mesh=None,
+             pairing: str = "aligned",
+             block_shape: Tuple[int, int] = (8, 128), nv_block: int = 128,
+             interpret: bool = True, cache: bool = True,
+             tuner: LocalComputeParams = TPU_V5E_LOCAL) -> "NapOperator":
+    """Build a :class:`NapOperator` for ``a`` on a (topo, part) layout.
+
+    Parameters
+    ----------
+    a : CSR
+        Square sparse matrix (vector space and row space share ``part``).
+    topo : Topology, optional
+        Machine shape.  Defaults to a single node with one process —
+        pass the real (n_nodes, ppn) for anything distributed.
+    part : RowPartition, optional
+        Row ownership; defaults to ``contiguous_partition``.
+    method : ``"nap"`` (Algorithms 2+3) or ``"standard"`` (Algorithm 1).
+    backend : ``"shardmap"`` (jitted SPMD) | ``"simulate"`` (exact numpy
+        oracle) | any backend later added to the executor registry.
+    local_compute : shardmap local kernel — ``"auto"`` | ``"bsr"`` |
+        ``"ell"`` | ``"coo"`` (see kernels/README.md).
+    mesh : optional pre-built jax mesh with axes ("node", "proc");
+        shardmap builds one lazily otherwise.
+    pairing : inter-node slot pairing for the nap plan ("aligned" is the
+        TPU all-to-all-natural choice and the only one the shardmap
+        backend lowers; "balanced" is the paper's text rule, available on
+        the simulate backend).
+    """
+    if a.shape[0] != a.shape[1]:
+        raise ValueError(
+            f"operator requires a square matrix (row partition doubles as "
+            f"the vector partition); got shape {a.shape}")
+    if topo is None:
+        topo = Topology(n_nodes=1, ppn=1)
+    if part is None:
+        part = contiguous_partition(a.shape[0], topo.n_procs)
+    if backend == "shardmap" and pairing != "aligned":
+        raise ValueError("the shardmap backend lowers pairing='aligned' "
+                         "only (the all-to-all slot contract)")
+    spec = OperatorSpec(method=method, backend=backend,
+                        local_compute=local_compute, pairing=pairing,
+                        block_shape=tuple(block_shape), nv_block=nv_block,
+                        interpret=interpret, cache=cache, tuner=tuner)
+    exec_ = bind_executor(backend, method, a, part, topo, spec, mesh=mesh)
+    return NapOperator(a=a, part=part, topo=topo, spec=spec, executor=exec_)
+
+
+@dataclasses.dataclass
+class NapOperator:
+    """Distributed SpMV as a composable linear operator.
+
+    ``op @ x`` / ``op(x)`` apply ``A``; ``op.T @ x`` applies ``A.T``
+    through the SAME compiled communication plan with send/recv roles
+    reversed.  ``x`` is a global ``[n]`` vector or ``[n, nv]``
+    multivector (numpy or jax); the result matches the input shape.
+    """
+
+    a: object
+    part: RowPartition
+    topo: Topology
+    spec: OperatorSpec
+    executor: object
+    transposed: bool = False
+    _parent: Optional["NapOperator"] = dataclasses.field(
+        default=None, repr=False)
+
+    # -- application -------------------------------------------------------
+    def __call__(self, x, donate: bool = False,
+                 precision: Optional[str] = None) -> np.ndarray:
+        """Apply the operator.
+
+        ``donate=True`` lets XLA reuse the packed input buffer (shardmap
+        backend; ignored by simulate).  ``precision`` pins the result
+        dtype: ``"float32"`` / ``"float64"`` / None (backend native —
+        float32 for shardmap, float64 for simulate).  The shardmap
+        backend computes in float32 regardless; asking it for float64
+        raises rather than implying precision it cannot deliver.
+        """
+        if precision not in (None, "float32", "float64"):
+            raise ValueError(f"precision must be float32|float64, "
+                             f"got {precision!r}")
+        if precision == "float64" and self.spec.backend == "shardmap":
+            raise NotImplementedError(
+                "the shardmap backend computes in float32; use "
+                "backend='simulate' for float64 results")
+        apply = (self.executor.transpose if self.transposed
+                 else self.executor.forward)
+        out = apply(x, donate=donate)
+        if precision is not None:
+            out = np.asarray(out, dtype=precision)
+        return out
+
+    def __matmul__(self, x) -> np.ndarray:
+        return self(x)
+
+    def matvec(self, x) -> np.ndarray:
+        return self(x)
+
+    # -- structure ---------------------------------------------------------
+    @property
+    def shape(self) -> Tuple[int, int]:
+        n, m = self.a.shape
+        return (m, n) if self.transposed else (n, m)
+
+    @property
+    def method(self) -> str:
+        return self.spec.method
+
+    @property
+    def backend(self) -> str:
+        return self.spec.backend
+
+    @property
+    def local_compute(self) -> str:
+        """Resolved local-compute format for THIS direction (the transpose
+        programs run the COO/segment_sum path until transposed Pallas
+        kernels land — see the transpose builders in core/spmv_jax.py)."""
+        if self.transposed:
+            return getattr(self.executor, "transpose_local_compute",
+                           getattr(self.executor, "local_compute", "unknown"))
+        return getattr(self.executor, "local_compute", "unknown")
+
+    @property
+    def T(self) -> "NapOperator":
+        """Transpose view sharing this operator's executor and compiled
+        plan (``op.T.T is op``)."""
+        if self._parent is not None:
+            return self._parent
+        return dataclasses.replace(self, transposed=not self.transposed,
+                                   _parent=self)
+
+    # -- introspection -----------------------------------------------------
+    def stats(self):
+        """Plan-level message statistics (+ padded traffic on shardmap)."""
+        return self.executor.stats()
+
+    def cost(self, machine: MachineParams):
+        """Modeled communication time under a machine model (Eqs. 10-12)."""
+        return self.executor.cost(machine)
+
+    def autotune_report(self):
+        """Local-compute format decision (chosen format, modeled times,
+        per-rank stats) where the backend runs the adaptive engine."""
+        return self.executor.autotune_report()
+
+    def __repr__(self) -> str:
+        t = ".T" if self.transposed else ""
+        return (f"NapOperator{t}(n={self.a.shape[0]}, "
+                f"method={self.spec.method!r}, backend={self.spec.backend!r}, "
+                f"topo=({self.topo.n_nodes}x{self.topo.ppn}))")

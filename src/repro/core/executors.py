@@ -1,0 +1,322 @@
+"""Pluggable executor registry behind the :class:`repro.api.NapOperator`.
+
+An *executor* binds one (backend, method) pair to a concrete matrix +
+layout and exposes the four things the operator front-end needs:
+
+* ``forward(v, donate=False)``  — global ``A @ v`` (1-RHS or multi-RHS)
+* ``transpose(u, donate=False)``— global ``A.T @ u`` against the SAME plan
+* ``stats()`` / ``cost(machine)`` / ``autotune_report()`` — plan-level
+  message statistics, modeled comm time, and the local-format verdict.
+
+Backends registered here:
+
+* ``("shardmap", "nap" | "standard")`` — the jitted SPMD executors of
+  :mod:`repro.core.spmv_jax`, sharing ONE packed-x path
+  (:func:`pack_vector` / :func:`unpack_vector`) for forward and
+  transpose, with lazy per-direction compilation (the transpose program
+  is only built when ``op.T`` is first applied).
+* ``("simulate", "nap" | "standard")`` — the exact numpy message-passing
+  simulators (float64 correctness oracles).
+
+Future backends — a true-TPU Mosaic lowering, the collective-permute
+overlap executor of the roadmap's open item (d) — plug in with
+``@register_executor("mosaic", "nap")`` and become reachable from every
+call site through ``repro.api.operator(..., backend="mosaic")`` without
+touching the operator or any ported caller.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Tuple
+
+import numpy as np
+
+from repro.core.comm_graph import (build_nap_plan, build_standard_plan,
+                                   nap_stats, standard_stats)
+from repro.core.cost_model import (LocalComputeParams, MachineParams,
+                                   TPU_V5E_LOCAL, nap_cost, standard_cost)
+from repro.core.partition import RowPartition
+from repro.core.spmv import (simulate_nap_spmv, simulate_nap_spmv_transpose,
+                             simulate_standard_spmv,
+                             simulate_standard_spmv_transpose)
+from repro.core.topology import Topology
+
+# NOTE: repro.core.spmv_jax (and thus jax) is imported lazily inside the
+# shardmap executors — the simulate backend stays importable and usable on
+# a jax-free numpy installation.
+
+
+@dataclasses.dataclass(frozen=True)
+class OperatorSpec:
+    """Everything an executor factory needs beyond (a, part, topo)."""
+
+    method: str = "nap"
+    backend: str = "shardmap"
+    local_compute: str = "auto"
+    pairing: str = "aligned"
+    block_shape: Tuple[int, int] = (8, 128)
+    nv_block: int = 128
+    interpret: bool = True
+    cache: bool = True
+    tuner: LocalComputeParams = TPU_V5E_LOCAL
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY: Dict[Tuple[str, str], Callable] = {}
+
+
+def register_executor(backend: str, method: str):
+    """Class/factory decorator: makes ``backend``/``method`` constructible
+    through :func:`bind_executor` (and thus ``repro.api.operator``)."""
+
+    def deco(factory):
+        _REGISTRY[(backend, method)] = factory
+        return factory
+
+    return deco
+
+
+def available_executors() -> List[Tuple[str, str]]:
+    return sorted(_REGISTRY)
+
+
+def bind_executor(backend: str, method: str, a, part: RowPartition,
+                  topo: Topology, spec: OperatorSpec, mesh=None):
+    """Instantiate the registered executor for (backend, method)."""
+    try:
+        factory = _REGISTRY[(backend, method)]
+    except KeyError:
+        avail = ", ".join(f"{b}/{m}" for b, m in available_executors())
+        raise ValueError(
+            f"no executor registered for backend={backend!r} "
+            f"method={method!r}; available: {avail}") from None
+    return factory(a, part, topo, spec, mesh=mesh)
+
+
+def check_operand(n: int, v: np.ndarray) -> np.ndarray:
+    """Shared operand validation: a global [n] vector or [n, nv] multivector."""
+    v = np.asarray(v)
+    if v.shape[:1] != (n,) or v.ndim > 2:
+        raise ValueError(f"operand must be [{n}] or [{n}, nv], got {v.shape}")
+    return v
+
+
+# ---------------------------------------------------------------------------
+# shard_map backend (shared packed-x path, lazy per-direction compile)
+# ---------------------------------------------------------------------------
+
+class _ShardmapExecutor:
+    """Common shard_map plumbing: one pack/unpack path for every method
+    and direction; the forward/transpose programs build lazily and are
+    memoized per direction."""
+
+    backend = "shardmap"
+
+    def __init__(self, a, part: RowPartition, topo: Topology,
+                 spec: OperatorSpec, mesh=None):
+        self.a, self.part, self.topo, self.spec = a, part, topo, spec
+        self._mesh = mesh
+        self._compiled = None
+        self._runs: Dict[str, Callable] = {}
+
+    # -- lazy resources ----------------------------------------------------
+    @property
+    def mesh(self):
+        if self._mesh is None:
+            from repro.compat import make_mesh
+            self._mesh = make_mesh((self.topo.n_nodes, self.topo.ppn),
+                                   ("node", "proc"))
+        return self._mesh
+
+    @property
+    def compiled(self):
+        if self._compiled is None:
+            self._compiled = self._compile()
+        return self._compiled
+
+    def _run(self, direction: str) -> Callable:
+        if direction not in self._runs:
+            self._runs[direction] = self._build(direction)
+        return self._runs[direction]
+
+    # -- the ONE packed-x path shared by all shard_map executors -----------
+    def _apply(self, direction: str, v: np.ndarray, donate: bool) -> np.ndarray:
+        from repro.core.spmv_jax import pack_vector, unpack_vector
+
+        v = check_operand(self.a.shape[0], v)
+        shards = pack_vector(v, self.part, self.topo, self.compiled.rows_pad)
+        w = self._run(direction)(shards, donate=donate)
+        return unpack_vector(np.asarray(w), self.part, self.topo)
+
+    def forward(self, v: np.ndarray, donate: bool = False) -> np.ndarray:
+        return self._apply("forward", v, donate)
+
+    def transpose(self, u: np.ndarray, donate: bool = False) -> np.ndarray:
+        return self._apply("transpose", u, donate)
+
+    # the transpose programs hardcode the COO/segment_sum path (transposed
+    # Pallas kernels are a roadmap item) — surfaced so op.T.local_compute
+    # reports what actually runs, not the forward's format.
+    transpose_local_compute = "coo"
+
+    @property
+    def local_compute(self) -> str:
+        return self.compiled.resolve_local_compute(self.spec.local_compute)
+
+    def autotune_report(self) -> Dict[str, object]:
+        return dict(self.compiled.autotune,
+                    resolved=self.local_compute,
+                    transpose_resolved=self.transpose_local_compute,
+                    requested=self.spec.local_compute)
+
+
+@register_executor("shardmap", "nap")
+class NapShardmapExecutor(_ShardmapExecutor):
+    method = "nap"
+
+    def _compile(self):
+        from repro.core.spmv_jax import compile_nap
+        return compile_nap(self.a, self.part, self.topo,
+                           block_shape=self.spec.block_shape,
+                           cache=self.spec.cache,
+                           local_compute=self.spec.local_compute,
+                           tuner=self.spec.tuner)
+
+    def _build(self, direction: str):
+        from repro.core.spmv_jax import (nap_forward_shardmap,
+                                         nap_transpose_shardmap)
+        if direction == "forward":
+            return nap_forward_shardmap(
+                self.compiled, self.mesh,
+                local_compute=self.spec.local_compute,
+                nv_block=self.spec.nv_block, interpret=self.spec.interpret)
+        return nap_transpose_shardmap(self.compiled, self.mesh,
+                                      nv_block=self.spec.nv_block,
+                                      interpret=self.spec.interpret)
+
+    def stats(self) -> Dict[str, object]:
+        from repro.core.spmv_jax import padded_traffic
+        out = {f"messages_{k}": v for k, v in
+               nap_stats(self.compiled.plan).items()}
+        out.update(padded_traffic(self.compiled))
+        return out
+
+    def cost(self, machine: MachineParams) -> Dict[str, float]:
+        return nap_cost(self.compiled.plan, machine)
+
+
+@register_executor("shardmap", "standard")
+class StandardShardmapExecutor(_ShardmapExecutor):
+    method = "standard"
+
+    def _compile(self):
+        from repro.core.spmv_jax import compile_standard
+        return compile_standard(self.a, self.part, self.topo,
+                                block_shape=self.spec.block_shape,
+                                cache=self.spec.cache,
+                                local_compute=self.spec.local_compute,
+                                tuner=self.spec.tuner)
+
+    def _build(self, direction: str):
+        from repro.core.spmv_jax import (standard_forward_shardmap,
+                                         standard_transpose_shardmap)
+        if direction == "forward":
+            return standard_forward_shardmap(
+                self.compiled, self.mesh,
+                local_compute=self.spec.local_compute,
+                nv_block=self.spec.nv_block, interpret=self.spec.interpret)
+        return standard_transpose_shardmap(self.compiled, self.mesh,
+                                           nv_block=self.spec.nv_block,
+                                           interpret=self.spec.interpret)
+
+    def stats(self) -> Dict[str, object]:
+        return {f"messages_{k}": v for k, v in
+                standard_stats(self.compiled.plan).items()}
+
+    def cost(self, machine: MachineParams) -> Dict[str, float]:
+        return standard_cost(self.compiled.plan, machine)
+
+
+# ---------------------------------------------------------------------------
+# Simulator backend (exact message passing, float64 oracle)
+# ---------------------------------------------------------------------------
+
+class _SimulateExecutor:
+    """Exact numpy message-passing backend; multi-RHS loops per column."""
+
+    backend = "simulate"
+    local_compute = "numpy"
+
+    def __init__(self, a, part: RowPartition, topo: Topology,
+                 spec: OperatorSpec, mesh=None):
+        self.a, self.part, self.topo, self.spec = a, part, topo, spec
+        self._plan = None
+
+    @property
+    def plan(self):
+        if self._plan is None:
+            self._plan = self._build_plan()
+        return self._plan
+
+    def _columnwise(self, fn, v: np.ndarray) -> np.ndarray:
+        v = np.asarray(check_operand(self.a.shape[0], v), dtype=np.float64)
+        if v.ndim == 1:
+            return fn(v)
+        return np.stack([fn(v[:, i]) for i in range(v.shape[1])], axis=1)
+
+    def forward(self, v: np.ndarray, donate: bool = False) -> np.ndarray:
+        return self._columnwise(lambda col: self._forward(col), v)
+
+    def transpose(self, u: np.ndarray, donate: bool = False) -> np.ndarray:
+        return self._columnwise(lambda col: self._transpose(col), u)
+
+    def autotune_report(self) -> Dict[str, object]:
+        return {"resolved": self.local_compute,
+                "note": "simulate backend runs exact numpy local compute; "
+                        "the format autotuner applies to shardmap only"}
+
+
+@register_executor("simulate", "nap")
+class NapSimulateExecutor(_SimulateExecutor):
+    method = "nap"
+
+    def _build_plan(self):
+        return build_nap_plan(self.a.indptr, self.a.indices, self.part,
+                              self.topo, pairing=self.spec.pairing)
+
+    def _forward(self, v):
+        return simulate_nap_spmv(self.a, v, self.plan)
+
+    def _transpose(self, u):
+        return simulate_nap_spmv_transpose(self.a, u, self.plan)
+
+    def stats(self) -> Dict[str, object]:
+        return {f"messages_{k}": v for k, v in nap_stats(self.plan).items()}
+
+    def cost(self, machine: MachineParams) -> Dict[str, float]:
+        return nap_cost(self.plan, machine)
+
+
+@register_executor("simulate", "standard")
+class StandardSimulateExecutor(_SimulateExecutor):
+    method = "standard"
+
+    def _build_plan(self):
+        return build_standard_plan(self.a.indptr, self.a.indices, self.part,
+                                   self.topo)
+
+    def _forward(self, v):
+        return simulate_standard_spmv(self.a, v, self.plan)
+
+    def _transpose(self, u):
+        return simulate_standard_spmv_transpose(self.a, u, self.plan)
+
+    def stats(self) -> Dict[str, object]:
+        return {f"messages_{k}": v for k, v in
+                standard_stats(self.plan).items()}
+
+    def cost(self, machine: MachineParams) -> Dict[str, float]:
+        return standard_cost(self.plan, machine)

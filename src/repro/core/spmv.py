@@ -24,6 +24,7 @@ from repro.core.comm_graph import (Message, NAPPlan, StandardPlan,
                                    build_nap_plan, build_standard_plan)
 from repro.core.partition import RowPartition
 from repro.core.topology import Topology
+from repro.deprecation import warn_once
 from repro.sparse.csr import CSR
 
 
@@ -222,6 +223,125 @@ def simulate_nap_spmv(a: CSR, v: np.ndarray, plan: NAPPlan) -> np.ndarray:
 
 
 # ---------------------------------------------------------------------------
+# Transpose simulation (reversed send/recv roles)
+# ---------------------------------------------------------------------------
+#
+# ``z = A.T u`` against the SAME plan: each rank multiplies its local rows
+# through the transposed column blocks, producing per-index *contributions*
+# instead of consuming buffer values; every forward message then runs
+# backwards (forward receiver -> forward sender) carrying partial sums,
+# which the forward sender accumulates — until contributions reach the
+# owner of each vector index, who adds them into z.  This is the MPI-exact
+# mirror of the adjoint shard_map program in :mod:`repro.core.spmv_jax`.
+
+def _block_transpose_contrib(blk: LocalBlocks, u: np.ndarray):
+    """Per-rank transposed local products: (z-contribution on own rows,
+    on-node buffer contributions, off-node buffer contributions)."""
+    u_r = u[blk.rows] if blk.rows.size else np.zeros(0)
+    z_own = blk.on_proc.transpose().matvec(u_r)
+    c_node = blk.on_node.transpose().matvec(u_r) if blk.on_node_cols.size \
+        else np.zeros(0)
+    c_off = blk.off_node.transpose().matvec(u_r) if blk.off_node_cols.size \
+        else np.zeros(0)
+    return z_own, c_node, c_off
+
+
+def _reverse_phase(fwd_sends: List[List[Message]],
+                   pending: List[Dict[int, float]],
+                   deliver) -> None:
+    """Run one forward phase backwards: for every forward message
+    (src -> dst, idx), the forward *receiver* pops its accumulated
+    contributions for idx and the forward *sender* consumes them via
+    ``deliver(src, j, value)``.  Two-phase (post all, then deliver), so a
+    rank that both forwards and consumes a value never double-routes."""
+    posted = []
+    for msgs in fwd_sends:
+        for m in msgs:
+            vals = np.array([pending[m.dst].pop(int(j)) for j in m.idx])
+            posted.append((m.src, m.idx, vals))
+    for src, idx, vals in posted:
+        for j, val in zip(idx, vals):
+            deliver(src, int(j), float(val))
+
+
+def simulate_standard_spmv_transpose(a: CSR, u: np.ndarray,
+                                     plan: StandardPlan) -> np.ndarray:
+    """Algorithm 1 reversed: z = A.T u with explicit message passing."""
+    part, topo = plan.partition, plan.topology
+    blocks = split_all_blocks(a, part, topo)
+    z = np.zeros(a.shape[0])
+    pending: List[Dict[int, float]] = [dict() for _ in range(topo.n_procs)]
+    for r in range(topo.n_procs):
+        blk = blocks[r]
+        z_own, c_node, c_off = _block_transpose_contrib(blk, u)
+        z[blk.rows] += z_own[: blk.rows.size]
+        for j, val in zip(blk.on_node_cols, c_node[: blk.on_node_cols.size]):
+            pending[r][int(j)] = float(val)
+        for j, val in zip(blk.off_node_cols, c_off[: blk.off_node_cols.size]):
+            pending[r][int(j)] = float(val)
+
+    # the standard algorithm has ONE phase: reverse it straight to owners.
+    def to_owner(rank: int, j: int, val: float) -> None:
+        assert part.owner[j] == rank, "reversed message missed the owner"
+        z[j] += val
+
+    _reverse_phase(plan.sends, pending, to_owner)
+    assert all(not p for p in pending), "unrouted transpose contributions"
+    return z
+
+
+def simulate_nap_spmv_transpose(a: CSR, u: np.ndarray,
+                                plan: NAPPlan) -> np.ndarray:
+    """Algorithms 2+3 reversed, phase by phase: z = A.T u.
+
+    Reverse order of Algorithm 3: final scatter first (consumers -> home
+    ranks), then the inter-node exchange (home -> staging rank), then the
+    init redistribution (staging rank -> owner); the fully-local phase
+    reverses independently (on-node consumers -> owners).
+    """
+    part, topo = plan.partition, plan.topology
+    blocks = split_all_blocks(a, part, topo)
+    z = np.zeros(a.shape[0])
+    # contributions awaiting reverse routing toward the owner (off-node
+    # path) and via the fully-local path (on-node buffer).
+    pending: List[Dict[int, float]] = [dict() for _ in range(topo.n_procs)]
+    node_pending: List[Dict[int, float]] = [dict() for _ in range(topo.n_procs)]
+    for r in range(topo.n_procs):
+        blk = blocks[r]
+        z_own, c_node, c_off = _block_transpose_contrib(blk, u)
+        z[blk.rows] += z_own[: blk.rows.size]
+        for j, val in zip(blk.on_node_cols, c_node[: blk.on_node_cols.size]):
+            node_pending[r][int(j)] = float(val)
+        for j, val in zip(blk.off_node_cols, c_off[: blk.off_node_cols.size]):
+            pending[r][int(j)] = float(val)
+
+    def accumulate(rank: int, j: int, val: float) -> None:
+        pending[rank][j] = pending[rank].get(j, 0.0) + val
+
+    # -- reverse phase D: consumers return contributions to the home rank --
+    _reverse_phase(plan.local_final_sends, pending, accumulate)
+    # -- reverse phase C: home ranks return aggregates across the network --
+    _reverse_phase(plan.inter_sends, pending, accumulate)
+
+    # -- reverse phase B: staging ranks return contributions to the owners --
+    def to_owner(rank: int, j: int, val: float) -> None:
+        assert part.owner[j] == rank, "reversed init message missed the owner"
+        z[j] += val
+
+    _reverse_phase(plan.local_init_sends, pending, to_owner)
+    # whatever remains was staged from the rank's own values: fold into z.
+    for r in range(topo.n_procs):
+        for j, val in pending[r].items():
+            assert part.owner[j] == r, "unrouted transpose contribution"
+            z[j] += val
+
+    # -- reverse phase A: on-node consumers return directly to the owners --
+    _reverse_phase(plan.local_full_sends, node_pending, to_owner)
+    assert all(not p for p in node_pending), "unrouted on-node contributions"
+    return z
+
+
+# ---------------------------------------------------------------------------
 # Convenience wrapper
 # ---------------------------------------------------------------------------
 
@@ -243,8 +363,16 @@ class DistSpMV:
         return DistSpMV(a=a, partition=part, topology=topo, standard=std, nap=nap)
 
     def run(self, v: np.ndarray, algorithm: str = "nap") -> np.ndarray:
+        """Deprecated: use ``repro.api.operator(a, backend="simulate")`` (the
+        simulate functions themselves remain the canonical oracles)."""
+        warn_once("repro.core.spmv.DistSpMV.run",
+                  "repro.api.operator(a, backend='simulate') @ v")
+        return self._run(v, algorithm)
+
+    def _run(self, v: np.ndarray, algorithm: str = "nap") -> np.ndarray:
         if algorithm == "standard":
             return simulate_standard_spmv(self.a, v, self.standard)
         if algorithm == "nap":
             return simulate_nap_spmv(self.a, v, self.nap)
         raise ValueError(algorithm)
+

@@ -1,5 +1,27 @@
 """SPMD (shard_map) executors for the distributed SpMV on a device mesh.
 
+Entry points: the canonical user-facing surface is
+:func:`repro.api.operator` (one ``NapOperator`` over every backend); this
+module holds the compiled-plan containers (:class:`CompiledNAP`,
+:class:`CompiledStandard`) and the shard_map program builders the
+``"shardmap"`` backend registers —
+
+* :func:`nap_forward_shardmap` / :func:`nap_transpose_shardmap`
+* :func:`standard_forward_shardmap` / :func:`standard_transpose_shardmap`
+
+(``nap_spmv_shardmap`` / ``standard_spmv_shardmap`` remain as one-release
+deprecation shims over these.)
+
+**Transpose SpMV**: ``A.T @ x`` against the SAME compiled plan, with the
+send/recv roles reversed — every forward gather ``buf = recv[idx_map]``
+becomes a scatter-add ``segment_sum(contrib, idx_map)`` and every tiled
+``all_to_all`` is its own adjoint (it is a (device, slot) transposition),
+so the reversed program is the exact adjoint of the forward one.  Padded
+map slots all point at position 0 but carry exactly-zero contributions
+(no nonzero references a padding slot), so the scatters stay inert where
+the forward gathers were.  AMG restriction and BiCG-type solvers get the
+transpose for free from the forward plan — no second plan build.
+
 XLA programs are static-SPMD, so the comm plans of :mod:`comm_graph` are
 *compiled* into padded gather maps + collectives, once, at plan-build time
 (exactly where the paper's MPI implementation builds its send lists):
@@ -68,6 +90,7 @@ from repro.compat import shard_map
 from repro.core.comm_graph import (Message, NAPPlan, StandardPlan,
                                    build_nap_plan, build_standard_plan,
                                    lookup_slots)
+from repro.deprecation import warn_once
 from repro.core.cost_model import (LOCAL_FORMATS, LocalComputeParams,
                                    TPU_V5E_LOCAL, choose_local_format,
                                    local_format_times)
@@ -92,6 +115,39 @@ def _ceil_to(x: int, b: int) -> int:
     return -(-x // b) * b
 
 
+def _resolve_local_compute(requested: str, compile_requested: str,
+                           chosen: str) -> str:
+    """Executor request -> concrete format (shared by both compiled plans).
+
+    Precedence: an explicit executor request wins; an executor ``"auto"``
+    defers to a concrete format requested at compile time, and only then
+    to the autotuner's verdict.
+    """
+    if requested == "auto":
+        if compile_requested != "auto":
+            return compile_requested
+        return chosen
+    if requested not in LOCAL_FORMATS:
+        raise ValueError(requested)
+    return requested
+
+
+def _memo_device_arrays(topo: Topology, arrays: Dict[str, np.ndarray],
+                        cache: Dict[str, jnp.ndarray]) -> Dict[str, jnp.ndarray]:
+    """Mesh-shaped ((n_nodes, ppn, ...)) device copies of the host arrays.
+
+    Memoized per array name: repeated executor binds against one compiled
+    plan reuse the device buffers instead of re-staging every host array
+    on every bind (lazy format arrays appear later, so the cache fills
+    incrementally — existing entries are never re-copied).
+    """
+    nn, ppn = topo.n_nodes, topo.ppn
+    for k, v in arrays.items():
+        if k not in cache:
+            cache[k] = jnp.asarray(v.reshape((nn, ppn) + v.shape[1:]))
+    return {k: cache[k] for k in arrays}
+
+
 @dataclasses.dataclass
 class CompiledNAP:
     """Static arrays for the shard_map NAPSpMV, stacked over ranks."""
@@ -114,26 +170,18 @@ class CompiledNAP:
     autotune: Dict[str, object] = dataclasses.field(default_factory=dict)
     requested_local_compute: str = "auto"
     ell_kmax: int = 0
+    # per-name device-array memo (see _memo_device_arrays)
+    _dev_cache: Dict[str, jnp.ndarray] = dataclasses.field(
+        default_factory=dict, repr=False, compare=False)
 
     @property
     def chosen_local_compute(self) -> str:
         return str(self.autotune.get("chosen", "coo"))
 
     def resolve_local_compute(self, requested: str) -> str:
-        """Map an executor's ``local_compute`` request to a concrete format.
-
-        Precedence: an explicit executor request wins; an executor
-        ``"auto"`` defers to a concrete format requested at compile time
-        (``compile_nap(..., local_compute=...)``), and only then to the
-        autotuner's verdict.
-        """
-        if requested == "auto":
-            if self.requested_local_compute != "auto":
-                return self.requested_local_compute
-            return self.chosen_local_compute
-        if requested not in LOCAL_FORMATS:
-            raise ValueError(requested)
-        return requested
+        """Map an executor's ``local_compute`` request to a concrete format."""
+        return _resolve_local_compute(requested, self.requested_local_compute,
+                                      self.chosen_local_compute)
 
     @property
     def packed_x_len(self) -> int:
@@ -172,10 +220,9 @@ class CompiledNAP:
         self.arrays["fused_blocks"] = fb
         self.bsr_layout.update(layout)
 
-    def device_arrays(self) -> Dict[str, np.ndarray]:
-        """Reshape the leading rank dim to (n_nodes, ppn) for mesh sharding."""
-        nn, ppn = self.topo.n_nodes, self.topo.ppn
-        return {k: v.reshape((nn, ppn) + v.shape[1:]) for k, v in self.arrays.items()}
+    def device_arrays(self) -> Dict[str, jnp.ndarray]:
+        """Mesh-shaped (n_nodes, ppn, ...) device arrays, memoized per name."""
+        return _memo_device_arrays(self.topo, self.arrays, self._dev_cache)
 
 
 # ---------------------------------------------------------------------------
@@ -205,15 +252,16 @@ def _cache_get(key: tuple) -> Optional[CompiledNAP]:
 
 def _cache_key(a: CSR, part: RowPartition, topo: Topology,
                block_shape: Tuple[int, int], local_compute: str,
-               tuner: LocalComputeParams) -> tuple:
+               tuner: LocalComputeParams, tag: str) -> tuple:
     h = hashlib.sha1()
     for arr in (a.indptr, a.indices, a.data, part.owner):
         h.update(np.ascontiguousarray(arr).tobytes())
     # block_shape and the tuner signature cover every autotuner input that
     # is not a function of the hashed matrix (fill density etc. derive from
-    # structure + block shape); local_compute covers the requested mode —
-    # switching either can never return a stale CompiledNAP.
-    return (h.hexdigest(), a.shape, topo.n_nodes, topo.ppn,
+    # structure + block shape); local_compute covers the requested mode and
+    # tag the plan family (nap vs standard) — switching any of them can
+    # never return a stale compiled plan.
+    return (tag, h.hexdigest(), a.shape, topo.n_nodes, topo.ppn,
             tuple(block_shape), str(local_compute), tuner.signature())
 
 
@@ -363,7 +411,7 @@ def compile_nap(a: CSR, part: RowPartition, topo: Topology,
         raise ValueError(local_compute)
     key = None
     if plan is None and cache:
-        key = _cache_key(a, part, topo, block_shape, local_compute, tuner)
+        key = _cache_key(a, part, topo, block_shape, local_compute, tuner, "nap")
         hit = _cache_get(key)
         if hit is not None:
             return hit
@@ -373,7 +421,9 @@ def compile_nap(a: CSR, part: RowPartition, topo: Topology,
     blocks = split_all_blocks(a, part, topo)
     local_index = part.local_index()
     bn = block_shape[1]
-    assert bn % 8 == 0, "bn must be a multiple of the 8-wide sublane tile"
+    if bn % 8 != 0:
+        raise ValueError(f"bn must be a multiple of the 8-wide sublane "
+                         f"tile, got {bn}")
     # Segment lengths of the packed x operand are rounded up to the lane
     # width bn, so v_loc / b_on_node / b_off_node are bn-aligned views of
     # one packed domain and the Pallas kernels gather them zero-copy (no
@@ -525,12 +575,41 @@ def unpack_vector(w: np.ndarray, part: RowPartition, topo: Topology) -> np.ndarr
 
 
 # ---------------------------------------------------------------------------
+# Shared run wrapper
+# ---------------------------------------------------------------------------
+
+def _make_run(call4, fmt: str):
+    """Wrap a 4-D shard program into the public run callable.
+
+    ``run(v_shards, donate=False)`` accepts [n_nodes, ppn, rows_pad] or
+    [..., nv] shards; ``donate=True`` dispatches to a separately-jitted
+    entry with ``donate_argnums=(0,)`` (built lazily) so XLA may reuse the
+    input shard buffer — the ``NapOperator.__call__(donate=...)`` path.
+    """
+    jits = {False: jax.jit(call4)}
+
+    def run(v_shards, donate: bool = False):
+        v_shards = jnp.asarray(v_shards, jnp.float32)
+        donate = bool(donate)
+        if donate and donate not in jits:
+            jits[True] = jax.jit(call4, donate_argnums=(0,))
+        fn = jits[donate]
+        if v_shards.ndim == 3:
+            return fn(v_shards[..., None])[..., 0]
+        return fn(v_shards)
+
+    run.local_compute = fmt
+    run.run4 = jits[False]  # jitted 4-D entry, exposed for jaxpr/HLO checks
+    return run
+
+
+# ---------------------------------------------------------------------------
 # NAP executor
 # ---------------------------------------------------------------------------
 
-def nap_spmv_shardmap(compiled: CompiledNAP, mesh: Mesh,
-                      local_compute: str = "auto", nv_block: int = 128,
-                      interpret: bool = True, materialize_x: bool = False):
+def nap_forward_shardmap(compiled: CompiledNAP, mesh: Mesh,
+                         local_compute: str = "auto", nv_block: int = 128,
+                         interpret: bool = True, materialize_x: bool = False):
     """Build the jitted shard_map NAPSpMV: f(v_shards) -> w_shards.
 
     ``v_shards`` is [n_nodes, ppn, rows_pad] or [n_nodes, ppn, rows_pad, nv]
@@ -633,48 +712,224 @@ def nap_spmv_shardmap(compiled: CompiledNAP, mesh: Mesh,
                         in_specs=(spec,) * (1 + len(names)), out_specs=spec,
                         check_vma=False)
 
-    @jax.jit
-    def run4(v_shards):
+    def call4(v_shards):
         return smapped(v_shards, *[dev[k] for k in names])
 
-    def run(v_shards):
-        v_shards = jnp.asarray(v_shards, jnp.float32)
-        if v_shards.ndim == 3:
-            return run4(v_shards[..., None])[..., 0]
-        return run4(v_shards)
-
-    run.local_compute = fmt
-    run.run4 = run4  # jitted 4-D entry, exposed for jaxpr/HLO inspection
-    return run
+    return _make_run(call4, fmt)
 
 
-# ---------------------------------------------------------------------------
-# Standard (Algorithm 1) executor
-# ---------------------------------------------------------------------------
+def nap_transpose_shardmap(compiled: CompiledNAP, mesh: Mesh,
+                           nv_block: int = 128, interpret: bool = True):
+    """Build the jitted shard_map transpose NAPSpMV: f(u_shards) -> z_shards
+    with ``z = A.T u`` — the exact adjoint of :func:`nap_forward_shardmap`.
 
-def standard_spmv_shardmap(a: CSR, part: RowPartition, topo: Topology, mesh: Mesh,
-                           plan: Optional[StandardPlan] = None,
-                           local_compute: str = "auto",
-                           block_shape: Tuple[int, int] = (8, 128),
-                           nv_block: int = 128, interpret: bool = True,
-                           materialize_x: bool = False,
-                           tuner: LocalComputeParams = TPU_V5E_LOCAL):
-    """Algorithm 1 as a flat padded all-to-all over ("node","proc").
-
-    Local compute runs through the same adaptive engine as the NAP path —
-    ``"auto"`` (default) picks bsr/ell/coo from the format cost model over
-    the two-segment ``[v_loc | recv buffer]`` packed x domain; both Pallas
-    paths read the segments zero-copy.  The resolved format is exposed as
-    ``run.local_compute``.
+    The forward program is reversed operation by operation: the three
+    local_spmv blocks run transposed first (producing per-buffer
+    contribution vectors via ``segment_sum`` over the COO column maps),
+    then each communication phase runs backwards — final, inter, init,
+    full — with every forward gather map reused as a scatter-add map and
+    every ``all_to_all`` re-applied (a tiled all_to_all is an involution
+    and its own adjoint).  Local compute is the COO/segment_sum reference
+    path; transposed Pallas kernels are future work (the open roadmap
+    item), so ``run.local_compute == "coo"`` always and ``nv_block`` /
+    ``interpret`` are accepted only for signature parity with the forward
+    builder — reserved for those kernels, ignored today.
     """
+    topo = compiled.topo
+    rows_pad = compiled.rows_pad
+    pads = compiled.pads
+    nn, ppn = topo.n_nodes, topo.ppn
+    full_pad, init_pad = pads["full"], pads["init"]
+    inter_pad, final_pad = pads["inter"], pads["final"]
+    bnode_pad, boff_pad = pads["bnode"], pads["boff"]
+
+    def per_device(u_loc, full_send, init_send, final_send, inter_gather,
+                   bnode_gather, boff_gather,
+                   on_proc_rows, on_proc_cols, on_proc_vals,
+                   on_node_rows, on_node_cols, on_node_vals,
+                   off_node_rows, off_node_cols, off_node_vals):
+        squeeze = lambda x: x.reshape(x.shape[2:])
+        args = map(squeeze, (u_loc, full_send, init_send, final_send,
+                             inter_gather, bnode_gather, boff_gather,
+                             on_proc_rows, on_proc_cols, on_proc_vals,
+                             on_node_rows, on_node_cols, on_node_vals,
+                             off_node_rows, off_node_cols, off_node_vals))
+        (u_loc, full_send, init_send, final_send, inter_gather, bnode_gather,
+         boff_gather, on_proc_rows, on_proc_cols, on_proc_vals, on_node_rows,
+         on_node_cols, on_node_vals, off_node_rows, off_node_cols,
+         off_node_vals) = args
+        nv = u_loc.shape[-1]
+
+        # -- transposed local_spmv blocks: rows index u, cols index the
+        #    output domain of each block (local rows / buffer slots).
+        z = segment_sum(on_proc_vals[:, None] * u_loc[on_proc_rows],
+                        on_proc_cols, num_segments=rows_pad)
+        c_node = segment_sum(on_node_vals[:, None] * u_loc[on_node_rows],
+                             on_node_cols, num_segments=bnode_pad)
+        c_off = segment_sum(off_node_vals[:, None] * u_loc[off_node_rows],
+                            off_node_cols, num_segments=boff_pad)
+
+        # -- reverse of boff = concat(inter_flat, final_recv_flat)[boff_gather]
+        comb = segment_sum(c_off, boff_gather,
+                           num_segments=nn * inter_pad + ppn * final_pad)
+        inter_c = comb[: nn * inter_pad]
+        final_recv_c = comb[nn * inter_pad:].reshape(ppn, final_pad, nv)
+
+        # -- reverse phase D: adjoint all_to_all + scatter over final_send
+        final_out_c = jax.lax.all_to_all(final_recv_c, "proc", 0, 0, tiled=True)
+        inter_c = inter_c + segment_sum(final_out_c.reshape(-1, nv),
+                                        final_send.reshape(-1),
+                                        num_segments=nn * inter_pad)
+
+        # -- reverse phase C: adjoint inter-node all_to_all + scatter over
+        #    inter_gather into the staged domain concat(v_loc, init_recv)
+        inter_out_c = jax.lax.all_to_all(inter_c.reshape(nn, inter_pad, nv),
+                                         "node", 0, 0, tiled=True)
+        staged_c = segment_sum(inter_out_c.reshape(-1, nv),
+                               inter_gather.reshape(-1),
+                               num_segments=rows_pad + ppn * init_pad)
+        z = z + staged_c[:rows_pad]
+
+        # -- reverse phase B: init redistribution back to the owners
+        init_recv_c = staged_c[rows_pad:].reshape(ppn, init_pad, nv)
+        init_out_c = jax.lax.all_to_all(init_recv_c, "proc", 0, 0, tiled=True)
+        z = z + segment_sum(init_out_c.reshape(-1, nv),
+                            init_send.reshape(-1), num_segments=rows_pad)
+
+        # -- reverse phase A: on-node buffer contributions back to owners
+        full_recv_c = segment_sum(c_node, bnode_gather,
+                                  num_segments=ppn * full_pad)
+        full_out_c = jax.lax.all_to_all(full_recv_c.reshape(ppn, full_pad, nv),
+                                        "proc", 0, 0, tiled=True)
+        z = z + segment_sum(full_out_c.reshape(-1, nv),
+                            full_send.reshape(-1), num_segments=rows_pad)
+        return z.reshape(1, 1, rows_pad, -1)
+
+    dev = compiled.device_arrays()
+    names = ["full_send", "init_send", "final_send", "inter_gather",
+             "bnode_gather", "boff_gather",
+             "on_proc_rows", "on_proc_cols", "on_proc_vals",
+             "on_node_rows", "on_node_cols", "on_node_vals",
+             "off_node_rows", "off_node_cols", "off_node_vals"]
+    spec = P("node", "proc")
+    smapped = shard_map(per_device, mesh=mesh,
+                        in_specs=(spec,) * (1 + len(names)), out_specs=spec,
+                        check_vma=False)
+
+    def call4(u_shards):
+        return smapped(u_shards, *[dev[k] for k in names])
+
+    return _make_run(call4, "coo")
+
+
+# ---------------------------------------------------------------------------
+# Standard (Algorithm 1) compiled plan + executors
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class CompiledStandard:
+    """Static arrays for the shard_map standard (Alg. 1) SpMV.
+
+    The packed x domain is two-segment: ``[0, rows_pad) = v_loc`` and
+    ``[rows_pad, rows_pad + buf_pad)`` the single off-process recv buffer,
+    both bn-aligned (zero-copy kernel domain).  Format arrays (COO / ELL /
+    fused BSR over that domain) emit lazily from ``per_rank_coo``, exactly
+    like :class:`CompiledNAP`'s.
+    """
+
+    topo: Topology
+    part: RowPartition
+    rows_pad: int
+    buf_pad: int
+    pair_pad: int
+    nnz_pad: int
+    block_shape: Tuple[int, int]
+    arrays: Dict[str, np.ndarray]          # send_idx, buf_gather + lazy fmts
+    per_rank_coo: List[Tuple[np.ndarray, np.ndarray, np.ndarray]]
+    plan: Optional[StandardPlan] = None
+    autotune: Dict[str, object] = dataclasses.field(default_factory=dict)
+    requested_local_compute: str = "auto"
+    _dev_cache: Dict[str, jnp.ndarray] = dataclasses.field(
+        default_factory=dict, repr=False, compare=False)
+
+    @property
+    def n_x(self) -> int:
+        return self.rows_pad + self.buf_pad
+
+    @property
+    def packed_x_len(self) -> int:
+        return self.n_x
+
+    @property
+    def chosen_local_compute(self) -> str:
+        return str(self.autotune.get("chosen", "coo"))
+
+    def resolve_local_compute(self, requested: str) -> str:
+        return _resolve_local_compute(requested, self.requested_local_compute,
+                                      self.chosen_local_compute)
+
+    def ensure_coo(self) -> None:
+        if "A_rows" in self.arrays:
+            return
+        self.arrays["A_rows"] = _pad_to(
+            [rr.astype(np.int32) for rr, _, _ in self.per_rank_coo],
+            self.nnz_pad).astype(np.int32)
+        self.arrays["A_cols"] = _pad_to(
+            [cc.astype(np.int32) for _, cc, _ in self.per_rank_coo],
+            self.nnz_pad).astype(np.int32)
+        self.arrays["A_vals"] = _pad_to(
+            [vv.astype(np.float32) for _, _, vv in self.per_rank_coo],
+            self.nnz_pad, fill=0.0)
+
+    def ensure_ell(self) -> None:
+        if "ell_cols" in self.arrays:
+            return
+        e_cols, e_vals, _ = stack_ell([
+            ELL.from_coo(rr, cc, vv, (self.rows_pad, self.n_x),
+                         n_rows_pad=self.rows_pad)
+            for rr, cc, vv in self.per_rank_coo])
+        self.arrays["ell_cols"] = e_cols
+        self.arrays["ell_vals"] = e_vals
+
+    def ensure_fused(self) -> None:
+        if "fused_cols" in self.arrays:
+            return
+        bm, bn = self.block_shape
+        f_cols, f_blocks, _ = _stack_padded_bsr([
+            BSR.from_coo(rr, cc, vv, (self.rows_pad, self.n_x), bm=bm, bn=bn)
+            for rr, cc, vv in self.per_rank_coo])
+        self.arrays["fused_cols"] = f_cols
+        self.arrays["fused_blocks"] = f_blocks
+
+    def device_arrays(self) -> Dict[str, jnp.ndarray]:
+        """Mesh-shaped (n_nodes, ppn, ...) device arrays, memoized per name."""
+        return _memo_device_arrays(self.topo, self.arrays, self._dev_cache)
+
+
+def compile_standard(a: CSR, part: RowPartition, topo: Topology,
+                     plan: Optional[StandardPlan] = None,
+                     block_shape: Tuple[int, int] = (8, 128),
+                     cache: bool = True, local_compute: str = "auto",
+                     tuner: LocalComputeParams = TPU_V5E_LOCAL) -> CompiledStandard:
+    """Compile Algorithm 1's flat plan into static shard_map arrays."""
     if local_compute not in ("auto",) + LOCAL_FORMATS:
         raise ValueError(local_compute)
+    key = None
+    if plan is None and cache:
+        key = _cache_key(a, part, topo, block_shape, local_compute, tuner,
+                         "standard")
+        hit = _cache_get(key)
+        if hit is not None:
+            return hit
     if plan is None:
         plan = build_standard_plan(a.indptr, a.indices, part, topo)
     n_procs = topo.n_procs
     blocks = split_all_blocks(a, part, topo)
     local_index = part.local_index()
     bm, bn = block_shape
+    if bn % 8 != 0:
+        raise ValueError(f"bn must be a multiple of the 8-wide sublane "
+                         f"tile, got {bn}")
     # bn-aligned segments: [0, rows_pad) = v_loc, [rows_pad, rows_pad+buf_pad)
     # = the single off-process recv buffer (zero-copy kernel domain).
     rows_pad = _ceil_to(max(1, int(part.counts().max())), bn)
@@ -688,7 +943,8 @@ def standard_spmv_shardmap(a: CSR, part: RowPartition, topo: Topology, mesh: Mes
         for m in plan.sends[r]:
             send_idx[r, m.dst, : m.size] = local_index[m.idx]
 
-    nnz_pad = max(1, max(b.on_node.nnz + b.off_node.nnz + b.on_proc.nnz for b in blocks))
+    nnz_pad = max(1, max(b.on_node.nnz + b.off_node.nnz + b.on_proc.nnz
+                         for b in blocks))
 
     # --- packed two-segment domain [v_loc | buf] + format decision --------
     n_x = rows_pad + buf_pad
@@ -707,34 +963,38 @@ def standard_spmv_shardmap(a: CSR, part: RowPartition, topo: Topology, mesh: Mes
                              rows_pad + blk.on_node_cols.size + cc2])
         vv = np.concatenate([vv0, vv1, vv2])
         per_rank_coo.append((rr, cc, vv))
-    fmt = local_compute
-    if fmt == "auto":
-        fmt = _format_stats_from_coo(
-            [(rr, cc) for rr, cc, _ in per_rank_coo], rows_pad, n_x,
-            nnz_pad, (bm, bn), tuner)["chosen"]
+    autotune = _format_stats_from_coo(
+        [(rr, cc) for rr, cc, _ in per_rank_coo], rows_pad, n_x,
+        nnz_pad, (bm, bn), tuner)
+    compiled = CompiledStandard(
+        topo=topo, part=part, rows_pad=rows_pad, buf_pad=buf_pad,
+        pair_pad=pair_pad, nnz_pad=nnz_pad, block_shape=tuple(block_shape),
+        arrays=dict(send_idx=send_idx, buf_gather=buf_gather),
+        per_rank_coo=per_rank_coo, plan=plan, autotune=autotune,
+        requested_local_compute=local_compute)
+    if key is not None:
+        _cache_put(key, compiled)
+    return compiled
 
-    nn, ppn = topo.n_nodes, topo.ppn
-    reshape = lambda x: x.reshape((nn, ppn) + x.shape[1:])
-    dev = dict(send_idx=reshape(send_idx), buf_gather=reshape(buf_gather))
-    if fmt == "coo":
-        dev["A_rows"] = reshape(_pad_to(
-            [rr.astype(np.int32) for rr, _, _ in per_rank_coo], nnz_pad).astype(np.int32))
-        dev["A_cols"] = reshape(_pad_to(
-            [cc.astype(np.int32) for _, cc, _ in per_rank_coo], nnz_pad).astype(np.int32))
-        dev["A_vals"] = reshape(_pad_to(
-            [vv.astype(np.float32) for _, _, vv in per_rank_coo], nnz_pad, fill=0.0))
-    elif fmt == "ell":
-        e_cols, e_vals, _ = stack_ell([
-            ELL.from_coo(rr, cc, vv, (rows_pad, n_x), n_rows_pad=rows_pad)
-            for rr, cc, vv in per_rank_coo])
-        dev["ell_cols"] = reshape(e_cols)
-        dev["ell_vals"] = reshape(e_vals)
-    else:
-        f_cols, f_blocks, _ = _stack_padded_bsr([
-            BSR.from_coo(rr, cc, vv, (rows_pad, n_x), bm=bm, bn=bn)
-            for rr, cc, vv in per_rank_coo])
-        dev["fused_cols"] = reshape(f_cols)
-        dev["fused_blocks"] = reshape(f_blocks)
+
+def standard_forward_shardmap(compiled: CompiledStandard, mesh: Mesh,
+                              local_compute: str = "auto",
+                              nv_block: int = 128, interpret: bool = True,
+                              materialize_x: bool = False):
+    """Algorithm 1 as a flat padded all-to-all over ("node","proc").
+
+    Local compute runs through the same adaptive engine as the NAP path —
+    ``"auto"`` (default) picks bsr/ell/coo from the format cost model over
+    the two-segment ``[v_loc | recv buffer]`` packed x domain; both Pallas
+    paths read the segments zero-copy.  The resolved format is exposed as
+    ``run.local_compute``.
+    """
+    fmt = compiled.resolve_local_compute(local_compute)
+    {"coo": compiled.ensure_coo, "ell": compiled.ensure_ell,
+     "bsr": compiled.ensure_fused}[fmt]()
+    topo = compiled.topo
+    rows_pad = compiled.rows_pad
+    bn = compiled.block_shape[1]
 
     def per_device(v_loc, send_idx, buf_gather, *tail):
         squeeze = lambda x: x.reshape(x.shape[2:])
@@ -769,6 +1029,7 @@ def standard_spmv_shardmap(a: CSR, part: RowPartition, topo: Topology, mesh: Mes
                             num_segments=rows_pad)
         return w.reshape(1, 1, rows_pad, -1)
 
+    dev = compiled.device_arrays()
     names = {"bsr": ["fused_cols", "fused_blocks"],
              "ell": ["ell_cols", "ell_vals"],
              "coo": ["A_rows", "A_cols", "A_vals"]}[fmt]
@@ -777,20 +1038,102 @@ def standard_spmv_shardmap(a: CSR, part: RowPartition, topo: Topology, mesh: Mes
                         in_specs=(spec,) * (3 + len(names)), out_specs=spec,
                         check_vma=False)
 
-    @jax.jit
-    def run4(v_shards):
+    def call4(v_shards):
         return smapped(v_shards, dev["send_idx"], dev["buf_gather"],
                        *[dev[k] for k in names])
 
-    def run(v_shards):
-        v_shards = jnp.asarray(v_shards, jnp.float32)
-        if v_shards.ndim == 3:
-            return run4(v_shards[..., None])[..., 0]
-        return run4(v_shards)
+    return _make_run(call4, fmt)
 
-    run.local_compute = fmt
-    run.run4 = run4
-    return run, rows_pad
+
+def standard_transpose_shardmap(compiled: CompiledStandard, mesh: Mesh,
+                                nv_block: int = 128, interpret: bool = True):
+    """Transpose of Algorithm 1 against the same compiled plan:
+    f(u_shards) -> z_shards with ``z = A.T u``.
+
+    Reverse of :func:`standard_forward_shardmap`: the local SpMV runs
+    transposed over the packed two-segment domain, buffer contributions
+    scatter back through ``buf_gather`` into the recv layout, the flat
+    all_to_all re-applies (its own adjoint), and ``send_idx`` scatters the
+    returned contributions into the owners' rows.  COO local compute;
+    ``nv_block`` / ``interpret`` are reserved for future transposed Pallas
+    kernels and ignored today (signature parity with the forward builder).
+    """
+    compiled.ensure_coo()
+    topo = compiled.topo
+    rows_pad, buf_pad = compiled.rows_pad, compiled.buf_pad
+    pair_pad, n_x = compiled.pair_pad, compiled.n_x
+    n_procs = topo.n_procs
+
+    def per_device(u_loc, send_idx, buf_gather, A_rows, A_cols, A_vals):
+        squeeze = lambda x: x.reshape(x.shape[2:])
+        (u_loc, send_idx, buf_gather, A_rows, A_cols, A_vals) = map(
+            squeeze, (u_loc, send_idx, buf_gather, A_rows, A_cols, A_vals))
+        nv = u_loc.shape[-1]
+        # transposed local SpMV over the packed domain [v_loc | buf]
+        c = segment_sum(A_vals[:, None] * u_loc[A_rows], A_cols,
+                        num_segments=n_x)
+        z = c[:rows_pad]
+        # reverse of buf = recv.reshape(-1)[buf_gather]
+        recv_c = segment_sum(c[rows_pad:], buf_gather,
+                             num_segments=n_procs * pair_pad)
+        out_c = jax.lax.all_to_all(recv_c.reshape(n_procs, pair_pad, nv),
+                                   ("node", "proc"), 0, 0, tiled=True)
+        # reverse of out = v_loc[send_idx]
+        z = z + segment_sum(out_c.reshape(-1, nv), send_idx.reshape(-1),
+                            num_segments=rows_pad)
+        return z.reshape(1, 1, rows_pad, -1)
+
+    dev = compiled.device_arrays()
+    names = ["send_idx", "buf_gather", "A_rows", "A_cols", "A_vals"]
+    spec = P("node", "proc")
+    smapped = shard_map(per_device, mesh=mesh,
+                        in_specs=(spec,) * (1 + len(names)), out_specs=spec,
+                        check_vma=False)
+
+    def call4(u_shards):
+        return smapped(u_shards, *[dev[k] for k in names])
+
+    return _make_run(call4, "coo")
+
+
+# ---------------------------------------------------------------------------
+# Deprecation shims (one release; see kernels/README.md migration table)
+# ---------------------------------------------------------------------------
+
+def nap_spmv_shardmap(compiled: CompiledNAP, mesh: Mesh,
+                      local_compute: str = "auto", nv_block: int = 128,
+                      interpret: bool = True, materialize_x: bool = False):
+    """Deprecated alias of :func:`nap_forward_shardmap`."""
+    warn_once("repro.core.spmv_jax.nap_spmv_shardmap",
+              "repro.api.operator(a, method='nap', backend='shardmap') "
+              "or nap_forward_shardmap")
+    return nap_forward_shardmap(compiled, mesh, local_compute=local_compute,
+                                nv_block=nv_block, interpret=interpret,
+                                materialize_x=materialize_x)
+
+
+def standard_spmv_shardmap(a: CSR, part: RowPartition, topo: Topology, mesh: Mesh,
+                           plan: Optional[StandardPlan] = None,
+                           local_compute: str = "auto",
+                           block_shape: Tuple[int, int] = (8, 128),
+                           nv_block: int = 128, interpret: bool = True,
+                           materialize_x: bool = False,
+                           tuner: LocalComputeParams = TPU_V5E_LOCAL):
+    """Deprecated: compile-and-build in one call, returns ``(run, rows_pad)``.
+
+    Use :func:`repro.api.operator(a, method="standard")` or the split
+    :func:`compile_standard` + :func:`standard_forward_shardmap` pair.
+    """
+    warn_once("repro.core.spmv_jax.standard_spmv_shardmap",
+              "repro.api.operator(a, method='standard', backend='shardmap') "
+              "or compile_standard + standard_forward_shardmap")
+    compiled = compile_standard(a, part, topo, plan=plan,
+                                block_shape=block_shape,
+                                local_compute=local_compute, tuner=tuner)
+    run = standard_forward_shardmap(compiled, mesh, nv_block=nv_block,
+                                    interpret=interpret,
+                                    materialize_x=materialize_x)
+    return run, compiled.rows_pad
 
 
 # ---------------------------------------------------------------------------

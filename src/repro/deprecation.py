@@ -1,0 +1,32 @@
+"""Warn-once deprecation helper for the pre-``NapOperator`` entry points.
+
+The PR that introduced :mod:`repro.api` kept the old SpMV entry points
+(``nap_spmv_shardmap``, ``standard_spmv_shardmap``, ``DistSpMV.run``) as
+thin shims for one release.  Each shim warns exactly once per process,
+so AMG loops calling a shim thousands of times are not flooded.  Note
+Python's default filters hide ``DeprecationWarning`` outside ``__main__``
+— run with ``-W default`` (or under pytest, which surfaces them) to see
+the nudge from library code.  The migration table lives in
+``src/repro/kernels/README.md``.
+"""
+from __future__ import annotations
+
+import warnings
+
+_WARNED: set = set()
+
+
+def warn_once(old: str, new: str) -> None:
+    """Emit one DeprecationWarning per process for entry point ``old``."""
+    if old in _WARNED:
+        return
+    _WARNED.add(old)
+    warnings.warn(
+        f"{old} is deprecated and will be removed next release; use {new} "
+        f"(migration table: src/repro/kernels/README.md)",
+        DeprecationWarning, stacklevel=3)
+
+
+def reset_warned() -> None:
+    """Forget which shims already warned (test isolation only)."""
+    _WARNED.clear()

@@ -10,7 +10,9 @@ and ``nv ∈ {1, 8, 128}``, the fused-BSR shard_map executor must agree with
 to 1e-5, in Pallas interpret mode.  The ELL, COO and autotuned executors
 and the standard-algorithm executor are swept at nv=8 as cross-checks,
 and the zero-copy packed-x path is checked bit-for-bit against the
-materialised-concat path (``materialize_x=True``).
+materialised-concat path (``materialize_x=True``).  The TRANSPOSE
+executors (reversed send/recv roles, same compiled plans) are checked at
+nv=8 against both the reversed-flow simulator and dense ``A.T @ x``.
 
 A block-hostile low-density problem additionally asserts the format
 autotuner rejects BSR, and a jaxpr scan asserts the packed x operand is
@@ -27,10 +29,13 @@ import numpy as np
 import jax
 
 from repro.compat import make_mesh
+from repro.core.comm_graph import build_nap_plan
 from repro.core.partition import contiguous_partition, make_partition
-from repro.core.spmv import DistSpMV
-from repro.core.spmv_jax import (compile_nap, nap_spmv_shardmap, pack_vector,
-                                 standard_spmv_shardmap, unpack_vector)
+from repro.core.spmv import simulate_nap_spmv, simulate_nap_spmv_transpose
+from repro.core.spmv_jax import (compile_nap, compile_standard,
+                                 nap_forward_shardmap, nap_transpose_shardmap,
+                                 pack_vector, standard_forward_shardmap,
+                                 standard_transpose_shardmap, unpack_vector)
 from repro.core.topology import Topology
 from repro.sparse import random_fixed_nnz
 
@@ -56,12 +61,14 @@ def check(topo_shape, kind, block_shape, nv, seed):
     want = dense_oracle(a, v)
 
     # oracle 1: the numpy message-passing simulator (column-wise)
-    dist = DistSpMV.build(a, part, topo, pairing="aligned")
-    sim = np.stack([dist.run(v[:, i], "nap") for i in range(nv)], axis=1)
+    nap_plan = build_nap_plan(a.indptr, a.indices, part, topo,
+                              pairing="aligned")
+    sim = np.stack([simulate_nap_spmv(a, v[:, i], nap_plan)
+                    for i in range(nv)], axis=1)
     np.testing.assert_allclose(sim, want, rtol=1e-9, atol=1e-11)
 
     # fused Pallas BSR shard_map executor (zero-copy) vs both oracles
-    run = nap_spmv_shardmap(compiled, mesh, local_compute="bsr")
+    run = nap_forward_shardmap(compiled, mesh, local_compute="bsr")
     shards = pack_vector(v, part, topo, compiled.rows_pad)
     got_raw = np.asarray(run(shards))
     got = unpack_vector(got_raw, part, topo)
@@ -69,27 +76,40 @@ def check(topo_shape, kind, block_shape, nv, seed):
     np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
 
     # zero-copy in-kernel gather == materialised HBM concat, bit-for-bit
-    run_mat = nap_spmv_shardmap(compiled, mesh, local_compute="bsr",
-                                materialize_x=True)
+    run_mat = nap_forward_shardmap(compiled, mesh, local_compute="bsr",
+                                   materialize_x=True)
     assert np.array_equal(np.asarray(run_mat(shards)), got_raw)
 
     if nv == 8:
         for fmt in ("coo", "ell", "auto"):
-            run_f = nap_spmv_shardmap(compiled, mesh, local_compute=fmt)
+            run_f = nap_forward_shardmap(compiled, mesh, local_compute=fmt)
             got_f = unpack_vector(np.asarray(run_f(shards)), part, topo)
             np.testing.assert_allclose(got_f, want, rtol=1e-4, atol=1e-5)
         assert run_f.local_compute == compiled.chosen_local_compute
-        run_ell_mat = nap_spmv_shardmap(compiled, mesh, local_compute="ell",
-                                        materialize_x=True)
-        run_ell = nap_spmv_shardmap(compiled, mesh, local_compute="ell")
+        run_ell_mat = nap_forward_shardmap(compiled, mesh, local_compute="ell",
+                                           materialize_x=True)
+        run_ell = nap_forward_shardmap(compiled, mesh, local_compute="ell")
         assert np.array_equal(np.asarray(run_ell(shards)),
                               np.asarray(run_ell_mat(shards)))
+        cstd = compile_standard(a, part, topo, block_shape=block_shape,
+                                cache=False)
         for fmt in ("bsr", "auto"):
-            run_std, _ = standard_spmv_shardmap(a, part, topo, mesh,
-                                                local_compute=fmt,
-                                                block_shape=block_shape)
+            run_std = standard_forward_shardmap(cstd, mesh, local_compute=fmt)
             got_std = unpack_vector(np.asarray(run_std(shards)), part, topo)
             np.testing.assert_allclose(got_std, want, rtol=1e-4, atol=1e-5)
+
+        # transpose executors vs the reversed-flow simulator AND dense A.T
+        at = a.transpose()
+        want_t = dense_oracle(at, v)
+        sim_t = np.stack([simulate_nap_spmv_transpose(a, v[:, i], nap_plan)
+                          for i in range(nv)], axis=1)
+        np.testing.assert_allclose(sim_t, want_t, rtol=1e-9, atol=1e-11)
+        run_t = nap_transpose_shardmap(compiled, mesh)
+        got_t = unpack_vector(np.asarray(run_t(shards)), part, topo)
+        np.testing.assert_allclose(got_t, sim_t, rtol=1e-4, atol=1e-5)
+        run_ts = standard_transpose_shardmap(cstd, mesh)
+        got_ts = unpack_vector(np.asarray(run_ts(shards)), part, topo)
+        np.testing.assert_allclose(got_ts, want_t, rtol=1e-4, atol=1e-5)
 
 
 def _count_packed_x_concats(fn, shards, n_x, nv) -> int:
@@ -142,14 +162,14 @@ def check_block_hostile_autotune():
     n_x = compiled.packed_x_len
 
     for fmt in ("auto", "ell", "bsr"):
-        run = nap_spmv_shardmap(compiled, mesh, local_compute=fmt)
+        run = nap_forward_shardmap(compiled, mesh, local_compute=fmt)
         got = unpack_vector(np.asarray(run(shards)), part, topo)
         np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
         # the zero-copy executor must NOT materialise the packed x concat...
         assert _count_packed_x_concats(run.run4, shards, n_x, nv) == 0, fmt
     # ...while the materialize_x oracle path DOES (differential: proves the
     # scan actually sees the concat when it exists)
-    run_mat = nap_spmv_shardmap(compiled, mesh, local_compute="ell",
+    run_mat = nap_forward_shardmap(compiled, mesh, local_compute="ell",
                                 materialize_x=True)
     assert _count_packed_x_concats(run_mat.run4, shards, n_x, nv) >= 1
     print(f"block-hostile autotune ok: chose {compiled.chosen_local_compute}, "

@@ -1,0 +1,177 @@
+"""The unified NapOperator front-end (repro.api) + the executor registry.
+
+Tier-1 tests run the simulate backend in-process (float64 oracles, no
+device mesh needed) plus the scripts/check_api.py smoke as a subprocess
+(it needs its own XLA device count for the shardmap backend).  The full
+shardmap operator sweep lives in tests/multidev/operator_prog.py.
+"""
+import os
+import pathlib
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+import repro.api as nap
+from repro.core.cost_model import BLUE_WATERS
+from repro.core.partition import strided_partition
+from repro.core.topology import Topology
+from repro.sparse import random_fixed_nnz, rotated_anisotropic_2d
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+
+
+def _dense_cols(a, v):
+    if v.ndim == 1:
+        return a.matvec(v)
+    return np.stack([a.matvec(v[:, i]) for i in range(v.shape[1])], axis=1)
+
+
+@pytest.mark.parametrize("method", ["nap", "standard"])
+@pytest.mark.parametrize("nv", [None, 3])
+def test_simulate_forward_transpose_match_dense(method, nv):
+    topo = Topology(n_nodes=2, ppn=3)
+    n = 50
+    a = random_fixed_nnz(n, 7, seed=1)  # nonsymmetric: A != A.T
+    rng = np.random.default_rng(0)
+    v = rng.standard_normal(n if nv is None else (n, nv))
+    op = nap.operator(a, topo=topo, method=method, backend="simulate")
+    np.testing.assert_allclose(op @ v, _dense_cols(a, v),
+                               rtol=1e-9, atol=1e-12)
+    np.testing.assert_allclose(op.T @ v, _dense_cols(a.transpose(), v),
+                               rtol=1e-9, atol=1e-12)
+
+
+def test_operator_structure():
+    topo = Topology(n_nodes=2, ppn=2)
+    a = rotated_anisotropic_2d(8)
+    part = strided_partition(a.shape[0], topo.n_procs)
+    op = nap.operator(a, topo=topo, part=part, backend="simulate")
+    assert op.shape == a.shape and op.method == "nap"
+    assert op.T.T is op and op.T.transposed and not op.transposed
+    assert "NapOperator" in repr(op) and ".T" in repr(op.T)
+    # stats/cost/autotune surfaces exist on every backend
+    s = op.stats()
+    assert s["messages_inter"].total_bytes >= 0
+    assert op.cost(BLUE_WATERS)["total"] >= 0
+    assert "resolved" in op.autotune_report()
+    # the simulate backend computes both directions in exact numpy
+    assert op.T.local_compute == op.local_compute == "numpy"
+    # matvec alias and __call__ agree
+    v = np.random.default_rng(1).standard_normal(a.shape[0])
+    np.testing.assert_array_equal(op.matvec(v), op(v))
+
+
+def test_operator_validation():
+    topo = Topology(n_nodes=1, ppn=2)
+    a = random_fixed_nnz(16, 3, seed=0)
+    with pytest.raises(ValueError, match="available"):
+        nap.operator(a, topo=topo, backend="no-such-backend")
+    with pytest.raises(ValueError, match="square"):
+        from repro.sparse.csr import CSR
+        nap.operator(CSR.from_dense(np.ones((4, 6))), topo=topo)
+    op = nap.operator(a, topo=topo, backend="simulate")
+    with pytest.raises(ValueError, match="operand"):
+        op @ np.ones(7)
+    with pytest.raises(ValueError, match="precision"):
+        op(np.ones(16), precision="bf16")
+    with pytest.raises(ValueError, match="aligned"):
+        nap.operator(a, topo=topo, backend="shardmap", pairing="balanced")
+    assert op(np.ones(16), precision="float32").dtype == np.float32
+
+
+def test_registry_pluggable():
+    """A new backend registers once and becomes reachable through
+    nap.operator without touching any call site."""
+    from repro.core.executors import _REGISTRY, register_executor
+
+    calls = {}
+
+    @register_executor("dummy", "nap")
+    class DummyExec:
+        def __init__(self, a, part, topo, spec, mesh=None):
+            self.a = a
+
+        def forward(self, v, donate=False):
+            calls["forward"] = True
+            return np.asarray(v) * 2.0
+
+        def transpose(self, u, donate=False):
+            calls["transpose"] = True
+            return np.asarray(u) * 3.0
+
+    try:
+        a = random_fixed_nnz(8, 2, seed=0)
+        op = nap.operator(a, topo=Topology(1, 1), backend="dummy")
+        assert ("dummy", "nap") in nap.available_executors()
+        v = np.ones(8)
+        np.testing.assert_array_equal(op @ v, v * 2.0)
+        np.testing.assert_array_equal(op.T @ v, v * 3.0)
+        assert calls == {"forward": True, "transpose": True}
+    finally:
+        _REGISTRY.pop(("dummy", "nap"), None)
+
+
+def test_amg_vcycle_through_operators():
+    """amg_vcycle(..., operators=...) runs every level through NapOperator."""
+    from repro.amg import (amg_vcycle, cg_solve, level_operators,
+                          smoothed_aggregation_hierarchy)
+
+    a = rotated_anisotropic_2d(16, eps=0.1)
+    topo = Topology(n_nodes=2, ppn=2)
+    levels = smoothed_aggregation_hierarchy(a, theta=0.1, coarse_size=32)
+    ops = level_operators(levels, topo, method="nap", backend="simulate")
+    assert ops[0] is not None
+    rng = np.random.default_rng(0)
+    b = rng.standard_normal(a.shape[0])
+    x, iters, rel = cg_solve(
+        a, b, tol=1e-8, maxiter=200,
+        precond=lambda r: amg_vcycle(levels, r, operators=ops),
+        spmv=ops[0])
+    assert rel < 1e-8, (iters, rel)
+
+
+def test_bicg_uses_transpose_operator():
+    from repro.amg import bicgstab_solve
+    from repro.sparse.csr import CSR
+
+    n = 96
+    a = random_fixed_nnz(n, 5, seed=2)
+    a = CSR.from_dense(a.to_dense() + np.eye(n) * 10.0)
+    op = nap.operator(a, topo=Topology(2, 2), backend="simulate")
+    b = np.random.default_rng(0).standard_normal(n)
+    x, iters, rel = bicgstab_solve(a, b, tol=1e-9, maxiter=200,
+                                   spmv=op, spmv_t=op.T)
+    assert rel < 1e-9
+    np.testing.assert_allclose(a.matvec(x), b, rtol=1e-6, atol=1e-7)
+
+
+def test_check_api_smoke():
+    """scripts/check_api.py — the operator + deprecation-contract smoke —
+    must pass in its own process (it forces the XLA device count)."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(ROOT / "src")
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run(
+        [sys.executable, str(ROOT / "scripts" / "check_api.py")],
+        capture_output=True, text=True, env=env, timeout=600)
+    assert proc.returncode == 0, \
+        f"stdout:\n{proc.stdout}\nstderr:\n{proc.stderr}"
+    assert "API OK" in proc.stdout
+
+
+@pytest.mark.multidev
+def test_operator_shardmap_8dev():
+    """Full shardmap operator sweep (forward+transpose, nap+standard,
+    multi-RHS, donate) on a forced 8-device host platform."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(ROOT / "src")
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run(
+        [sys.executable,
+         str(ROOT / "tests" / "multidev" / "operator_prog.py")],
+        capture_output=True, text=True, env=env, timeout=600)
+    assert proc.returncode == 0, \
+        f"stdout:\n{proc.stdout}\nstderr:\n{proc.stderr}"
+    assert "ALL OK" in proc.stdout
