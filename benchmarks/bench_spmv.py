@@ -20,9 +20,13 @@ Measures, on a forced 8-device host platform (2 nodes x 4 ppn):
   hardware numbers — they track relative regressions across PRs.
   Additionally ``operator_forward_nv*_s`` / ``operator_transpose_nv*_s``
   record the END-TO-END `repro.api` operator wall (pack -> SPMD run ->
-  unpack, and the reversed-plan transpose) — these share the wall dict,
-  so benchmarks/run.py's >1.5x regression gate covers them like every
-  other wall entry.
+  unpack, and the reversed-plan transpose), ``operator_rect_*`` the same
+  for a RECTANGULAR [m, m/2] operator with independent row/col
+  partitions, and ``galerkin_vcycle_s`` / ``galerkin_triple_product_s``
+  a full AMG V-cycle whose every P/R is a rectangular shardmap operator
+  plus the lazily composed ``(R @ A @ P) @ x`` chain — all share the
+  wall dict, so benchmarks/run.py's >1.5x regression gate covers them
+  like every other wall entry.
 * ``modeled_bytes`` — padded vs effective bytes per phase (the quantity
   the paper's T/U balancing minimises) and plan-level message stats.
 
@@ -191,6 +195,46 @@ def bench_spmv_wall(n_rows: int, nnz_per_row: int, quick: bool) -> dict:
             timed(lambda: op @ v), 5)
         walls[f"operator_transpose_nv{nv}_s"] = round(
             timed(lambda: op.T @ v), 5)
+
+    # -- rectangular operator walls (independent row/col partitions) -------
+    # forward packs by the column partition, transpose by the row
+    # partition; the transpose runs the autotuned ell/coo transposed
+    # local compute.  Shares the regression gate with every other wall.
+    from repro.core.partition import contiguous_partition
+    from repro.sparse import CSR
+    m_r, n_r = n_rows, n_rows // 2
+    rng_r = np.random.default_rng(1)
+    rows_r = np.repeat(np.arange(m_r), nnz_per_row)
+    a_rect = CSR.from_coo(rows_r,
+                          rng_r.integers(0, n_r, size=rows_r.size),
+                          rng_r.standard_normal(rows_r.size), (m_r, n_r))
+    op_rect = nap_api.operator(a_rect, topo=topo, mesh=mesh,
+                               row_part=contiguous_partition(m_r, topo.n_procs),
+                               col_part=contiguous_partition(n_r, topo.n_procs),
+                               backend="shardmap", cache=False)
+    v_r = rng.standard_normal(n_r)
+    u_r = rng.standard_normal(m_r)
+    walls["operator_rect_forward_nv1_s"] = round(timed(lambda: op_rect @ v_r), 5)
+    walls["operator_rect_transpose_nv1_s"] = round(
+        timed(lambda: op_rect.T @ u_r), 5)
+
+    # -- distributed AMG: composed Galerkin + full V-cycle ------------------
+    # every restriction/prolongation is a rectangular shardmap operator
+    # (restriction through the node-aware transpose executor); the lazy
+    # (R @ A @ P) chain is timed separately.
+    from repro.amg import (amg_vcycle, level_operators,
+                           smoothed_aggregation_hierarchy)
+    from repro.sparse import rotated_anisotropic_2d
+    a_amg = rotated_anisotropic_2d(16 if quick else 24, eps=0.1)
+    levels = smoothed_aggregation_hierarchy(a_amg, theta=0.1, coarse_size=32)
+    ops = level_operators(levels, topo, backend="shardmap", mesh=mesh)
+    b_amg = rng.standard_normal(a_amg.shape[0])
+    walls["galerkin_vcycle_s"] = round(
+        timed(lambda: amg_vcycle(levels, b_amg, operators=ops)), 5)
+    gal = ops[0].galerkin()
+    if gal is not None:
+        xc = rng.standard_normal(gal.shape[1])
+        walls["galerkin_triple_product_s"] = round(timed(lambda: gal @ xc), 5)
 
     std_plan = build_standard_plan(a.indptr, a.indices, part, topo)
     nap_plan = compiled.plan or build_nap_plan(

@@ -1,15 +1,17 @@
-"""API smoke: the unified NapOperator surface + the deprecation contract.
+"""API smoke: the unified NapOperator surface + the post-deprecation contract.
 
 Run as its own process (it forces the XLA host device count before jax
 initialises); wired into the tier-1 pytest run via tests/test_api.py.
 
-Checks, on a 64-row operator over a (2, 2) machine on CPU:
+Checks, on a (2, 2) machine on CPU:
   * `repro.api` imports and `operator(...)` builds on both backends;
   * forward AND transpose match the dense oracle (1e-9 on simulate,
-    f32 tolerance on shardmap), 1-RHS and multi-RHS;
-  * each deprecation shim (`nap_spmv_shardmap`, `standard_spmv_shardmap`,
-    `DistSpMV.run`) emits DeprecationWarning EXACTLY once per process
-    while remaining fully functional.
+    f32 tolerance on shardmap), 1-RHS and multi-RHS, on a 64-row square
+    operator AND a 64x40 RECTANGULAR operator (row_part != col_part);
+  * `(R @ A @ P)` composes lazily and matches the scipy triple product;
+  * the one-release deprecation shims are GONE: `nap_spmv_shardmap`,
+    `standard_spmv_shardmap` and `DistSpMV.run` no longer exist (their
+    release has passed — migration table: src/repro/kernels/README.md).
 
     PYTHONPATH=src python scripts/check_api.py
 """
@@ -17,20 +19,16 @@ import os
 
 os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=4")
 
-import warnings
-
 import numpy as np
 
 
 def main() -> None:
     import repro.api as nap
-    from repro.compat import make_mesh
+    import repro.core.spmv_jax as spmv_jax_mod
     from repro.core.partition import contiguous_partition
     from repro.core.spmv import DistSpMV
-    from repro.core.spmv_jax import (compile_nap, nap_spmv_shardmap,
-                                     pack_vector, standard_spmv_shardmap)
     from repro.core.topology import Topology
-    from repro.sparse import random_fixed_nnz
+    from repro.sparse import CSR, random_fixed_nnz
 
     n = 64
     topo = Topology(n_nodes=2, ppn=2)
@@ -57,29 +55,44 @@ def main() -> None:
     print("operator forward+transpose OK on simulate + shardmap "
           "(nap & standard, 1-RHS & multi-RHS)")
 
-    # -- deprecation shims: warn exactly once, still functional -------------
-    part = contiguous_partition(n, topo.n_procs)
-    mesh = make_mesh((topo.n_nodes, topo.ppn), ("node", "proc"))
-    compiled = compile_nap(a, part, topo)
-    shards = pack_vector(v, part, topo, compiled.rows_pad)
-    dist = DistSpMV.build(a, part, topo)
-    shims = {
-        "nap_spmv_shardmap": lambda: nap_spmv_shardmap(compiled, mesh)(shards),
-        "standard_spmv_shardmap": lambda: standard_spmv_shardmap(
-            a, part, topo, mesh)[0](shards),
-        "DistSpMV.run": lambda: dist.run(v),
-    }
-    for name, call in shims.items():
-        with warnings.catch_warnings(record=True) as caught:
-            warnings.simplefilter("always")
-            call()
-            call()
-        got = [w for w in caught if issubclass(w.category, DeprecationWarning)]
-        assert len(got) == 1, (
-            f"{name}: expected exactly ONE DeprecationWarning over two "
-            f"calls, saw {len(got)}")
-        assert "repro.api" in str(got[0].message), got[0].message
-    print("deprecation shims warn exactly once each and stay functional")
+    # -- rectangular operator + lazy composition ----------------------------
+    nc = 40
+    pm = (rng.random((n, nc)) < 0.2) * rng.standard_normal((n, nc))
+    p = CSR.from_dense(pm)
+    fine = contiguous_partition(n, topo.n_procs)
+    coarse = contiguous_partition(nc, topo.n_procs)
+    xc = rng.standard_normal(nc)
+    u = rng.standard_normal(n)
+    for backend, rtol, atol in [("simulate", 1e-9, 1e-12),
+                                ("shardmap", 1e-3, 1e-4)]:
+        a_op = nap.operator(a, topo=topo, part=fine, backend=backend)
+        p_op = nap.operator(p, topo=topo, row_part=fine, col_part=coarse,
+                            backend=backend)
+        assert p_op.shape == (n, nc) and p_op.T.shape == (nc, n)
+        np.testing.assert_allclose(p_op @ xc, pm @ xc, rtol=rtol, atol=atol)
+        np.testing.assert_allclose(p_op.T @ u, pm.T @ u, rtol=rtol, atol=atol)
+        gal = p_op.T @ a_op @ p_op
+        want = pm.T @ (a.to_dense() @ (pm @ xc))
+        np.testing.assert_allclose(gal @ xc, want, rtol=5e-3, atol=5e-4)
+        rep = p_op.autotune_report()
+        if backend == "shardmap":
+            assert rep["transpose_resolved"] in ("ell", "coo"), rep
+            assert "transpose" in rep, "compile must record the transpose verdict"
+    print("rectangular operator + (R @ A @ P) composition OK on both backends")
+
+    # -- the deprecation shims are GONE -------------------------------------
+    for mod, name in [(spmv_jax_mod, "nap_spmv_shardmap"),
+                      (spmv_jax_mod, "standard_spmv_shardmap"),
+                      (DistSpMV, "run")]:
+        assert not hasattr(mod, name), \
+            f"{name} must be removed (its deprecation release has passed)"
+    try:
+        import repro.deprecation  # noqa: F401
+        raise AssertionError("repro.deprecation should be gone with the shims")
+    except ImportError:
+        pass
+    print("deprecation shims removed (DistSpMV.run, nap_spmv_shardmap, "
+          "standard_spmv_shardmap)")
     print("API OK")
 
 

@@ -1,7 +1,8 @@
 from repro.amg.hierarchy import Level, smoothed_aggregation_hierarchy
 from repro.amg.matmul import csr_matmul
-from repro.amg.solve import (amg_vcycle, bicgstab_solve, cg_solve,
-                             level_operators)
+from repro.amg.solve import (LevelOperators, amg_vcycle, bicgstab_solve,
+                             cg_solve, level_operators)
 
-__all__ = ["Level", "smoothed_aggregation_hierarchy", "csr_matmul",
-           "amg_vcycle", "bicgstab_solve", "cg_solve", "level_operators"]
+__all__ = ["Level", "LevelOperators", "smoothed_aggregation_hierarchy",
+           "csr_matmul", "amg_vcycle", "bicgstab_solve", "cg_solve",
+           "level_operators"]

@@ -3,42 +3,103 @@
 These exercise the hierarchy end-to-end; the *distributed* SpMV inside
 each level is what the paper optimizes.  Every solver accepts either a
 plain callable or a :class:`repro.api.NapOperator` (operators are
-callable), and :func:`level_operators` builds one operator per hierarchy
-level so AMG cycles run entirely through the unified front-end —
+callable), and :func:`level_operators` builds a **fully distributed
+hierarchy**: one square operator for each level's A *and one rectangular
+operator for each P* (its ``.T`` view is the restriction), so the
+V-cycle's grid transfers run as node-aware SpMVs too — ``P.T @ r``
+through the reversed communication plan instead of a host-side gather.
 ``examples/amg_spmv.py`` wires the NAPSpMV executors into this loop with
 no raw lambdas.
 """
 from __future__ import annotations
 
-from typing import Callable, List, Optional, Sequence
+import dataclasses
+from typing import Callable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.amg.hierarchy import Level
+from repro.core.partition import contiguous_partition
 from repro.sparse.csr import CSR
+
+
+@dataclasses.dataclass
+class LevelOperators:
+    """The distributed operators of one hierarchy level.
+
+    ``a`` — square NapOperator for A_l (row == col partition);
+    ``p`` — RECTANGULAR NapOperator for the prolongation
+    (row_part = level l's partition, col_part = level l+1's);
+    ``r`` — the restriction, ``p.T``: the same compiled plan with
+    send/recv roles reversed (never a second plan build).
+    Any of the three is ``None`` where the level is too small to
+    distribute; :func:`amg_vcycle` falls back to local matvecs there.
+    """
+
+    a: Optional[object] = None
+    p: Optional[object] = None
+    r: Optional[object] = None
+
+    def galerkin(self) -> Optional[object]:
+        """The lazily composed coarse-grid operator ``R @ A @ P`` (a
+        :class:`repro.api.ComposedOperator`; None if any factor is)."""
+        if self.a is None or self.p is None or self.r is None:
+            return None
+        return self.r @ self.a @ self.p
 
 
 def level_operators(levels: Sequence[Level], topo, *, method: str = "nap",
                     backend: str = "simulate", min_rows: Optional[int] = None,
-                    **kwargs) -> List[Optional[object]]:
-    """One :class:`repro.api.NapOperator` per AMG level.
+                    parts: Optional[Sequence] = None,
+                    **kwargs) -> List[LevelOperators]:
+    """One :class:`LevelOperators` (A + rectangular P/R) per AMG level.
 
-    Levels smaller than ``min_rows`` (default: the machine size — a level
-    cannot be distributed over more ranks than it has rows) get ``None``;
-    :func:`amg_vcycle` falls back to the level's local ``a.matvec`` there.
-    Extra ``kwargs`` pass straight to :func:`repro.api.operator`.
+    ``parts`` optionally supplies one partition per level (defaults to
+    ``contiguous_partition`` of each level's row count); level l's P uses
+    ``row_part=parts[l], col_part=parts[l+1]``, so every composition
+    interface in the V-cycle (``P.T @ r``, ``R @ A @ P``) chains with
+    MATCHING partitions.  Levels with fewer rows than ``min_rows``
+    (default: the machine size) get ``a=None``; their grid transfers stay
+    distributed as long as the FINE side is large enough — the coarse
+    partition simply has empty ranks.  Extra ``kwargs`` pass straight to
+    :func:`repro.api.operator`.
     """
     import repro.api as nap  # local import keeps numpy-only users jax-free
 
     floor = topo.n_procs if min_rows is None else min_rows
-    ops: List[Optional[object]] = []
-    for lvl in levels:
-        if lvl.a.shape[0] < floor:
-            ops.append(None)
-            continue
-        ops.append(nap.operator(lvl.a, topo=topo, method=method,
-                                backend=backend, **kwargs))
+    if parts is None:
+        parts = [contiguous_partition(lvl.a.shape[0], topo.n_procs)
+                 for lvl in levels]
+    ops: List[LevelOperators] = []
+    for i, lvl in enumerate(levels):
+        entry = LevelOperators()
+        if lvl.a.shape[0] >= floor:
+            entry.a = nap.operator(lvl.a, topo=topo, part=parts[i],
+                                   method=method, backend=backend, **kwargs)
+            if lvl.p is not None:
+                entry.p = nap.operator(lvl.p, topo=topo,
+                                       row_part=parts[i],
+                                       col_part=parts[i + 1],
+                                       method=method, backend=backend,
+                                       **kwargs)
+                entry.r = entry.p.T
+        ops.append(entry)
     return ops
+
+
+def _level_entry(operators, lvl: int) -> Tuple[Optional[object],
+                                               Optional[object],
+                                               Optional[object]]:
+    """(a_op, p_op, r_op) for one level; tolerates the legacy form where
+    ``operators[lvl]`` is a bare A operator (or None)."""
+    if operators is None or lvl >= len(operators):
+        return None, None, None
+    entry = operators[lvl]
+    if entry is None:
+        return None, None, None
+    if isinstance(entry, LevelOperators):
+        return entry.a, entry.p, entry.r
+    return entry, None, None
 
 
 def _diag(a: CSR) -> np.ndarray:
@@ -67,14 +128,19 @@ def amg_vcycle(levels: List[Level], b: np.ndarray,
                ) -> np.ndarray:
     """One V(2,2)-cycle.
 
-    Per-level SpMV resolution: ``operators[lvl]`` (a NapOperator from
-    :func:`level_operators`; ``None`` entries fall back to the level's
-    ``a.matvec``) or the lower-level ``spmv_at(lvl, v)`` callback.
+    Per-level SpMV resolution: ``operators[lvl]`` — a
+    :class:`LevelOperators` from :func:`level_operators` (A plus the
+    rectangular P/R, so restriction runs as the node-aware ``P.T @ r``
+    and prolongation as ``P @ x_c``; ``None`` members fall back to the
+    level's local matvecs), or legacy bare A operators — or the
+    lower-level ``spmv_at(lvl, v)`` callback.
     """
     a = levels[lvl].a
+    a_op = p_op = r_op = None
     if operators is not None and spmv_at is None:
-        op = operators[lvl] if lvl < len(operators) else None
-        mv = op if op is not None else a.matvec
+        a_op, p_op, r_op = _level_entry(operators, lvl)
+    if a_op is not None:
+        mv = a_op
     elif spmv_at is not None:
         mv = lambda v: spmv_at(lvl, v)
     else:
@@ -86,9 +152,13 @@ def amg_vcycle(levels: List[Level], b: np.ndarray,
         return np.linalg.lstsq(dense, b, rcond=None)[0]
     d = _diag(a)
     x = jacobi(a, x, b, d, spmv=mv)
-    coarse_b = levels[lvl].r.matvec(b - mv(x))
+    res = b - mv(x)
+    # restriction: the node-aware transpose SpMV (P.T against the SAME
+    # compiled plan as prolongation) where distributed, else host matvec
+    coarse_b = (r_op @ res) if r_op is not None else levels[lvl].r.matvec(res)
     coarse_x = amg_vcycle(levels, coarse_b, None, lvl + 1, spmv_at, operators)
-    x = x + levels[lvl].p.matvec(coarse_x)
+    x = x + ((p_op @ coarse_x) if p_op is not None
+             else levels[lvl].p.matvec(coarse_x))
     return jacobi(a, x, b, d, spmv=mv)
 
 

@@ -1,11 +1,9 @@
 """One LinearOperator-style front-end over every NAPSpMV backend.
 
 The paper's NAPSpMV is one kernel inside larger solvers — AMG cycles need
-``A @ x`` *and* the restriction ``A.T @ x`` against the same communication
-plan on every level.  This module collapses the four historical entry
-points (``DistSpMV.run``, ``compile_nap`` + ``nap_spmv_shardmap``
-closures, ``standard_spmv_shardmap``, manual ``pack_vector`` /
-``unpack_vector``) into one object::
+``A @ x`` *and* the restriction ``P.T @ r`` against node-aware
+communication plans on every level.  This module is the single entry
+point over the executor registry::
 
     import repro.api as nap
 
@@ -13,6 +11,23 @@ closures, ``standard_spmv_shardmap``, manual ``pack_vector`` /
     w  = op @ v          # forward SpMV (1-RHS or [n, nv] multi-RHS)
     z  = op.T @ v        # transpose SpMV, same compiled plan reversed
     op.stats(), op.cost(BLUE_WATERS), op.autotune_report()
+
+**Rectangular operators.**  An operator is a genuine ``[m, n]`` linear
+map over TWO partitions: ``row_part`` lays out the m output rows,
+``col_part`` the n input entries.  The communication plan derives its
+send/recv/gather maps from ``col_part`` (who owns the x values a rank
+needs) and its output layout from ``row_part`` (who computes each row);
+``op.T`` swaps the two through the same compiled plan.  ``part=`` stays
+as the square-case sugar that sets both::
+
+    p_op = nap.operator(p, topo=topo, row_part=fine, col_part=coarse)
+    r    = p_op.T @ residual      # node-aware AMG restriction
+
+**Operator algebra.**  ``@`` between operators is LAZY composition:
+``R @ A @ P`` returns a :class:`ComposedOperator` that chains the
+executors right-to-left with compatible-partition checking at compose
+time, and rolls up per-stage ``.stats()`` / ``.cost()`` — the Galerkin
+triple product applied as three node-aware SpMVs, never materialised.
 
 Backends resolve through the pluggable registry in
 :mod:`repro.core.executors` — ``backend="shardmap"`` is the jitted SPMD
@@ -26,7 +41,7 @@ operator costs one plan build; the forward program JITs on first
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import List, Optional, Tuple
 
 import numpy as np
 
@@ -37,34 +52,49 @@ from repro.core.executors import (OperatorSpec, available_executors,
 from repro.core.partition import RowPartition, contiguous_partition
 from repro.core.topology import Topology
 
-__all__ = ["operator", "NapOperator", "available_executors",
-           "register_executor"]
+__all__ = ["operator", "NapOperator", "ComposedOperator",
+           "available_executors", "register_executor"]
 
 
 def operator(a, topo: Optional[Topology] = None,
              part: Optional[RowPartition] = None, *,
+             row_part: Optional[RowPartition] = None,
+             col_part: Optional[RowPartition] = None,
              method: str = "nap", backend: str = "shardmap",
              local_compute: str = "auto", mesh=None,
              pairing: str = "aligned",
              block_shape: Tuple[int, int] = (8, 128), nv_block: int = 128,
              interpret: bool = True, cache: bool = True,
              tuner: LocalComputeParams = TPU_V5E_LOCAL) -> "NapOperator":
-    """Build a :class:`NapOperator` for ``a`` on a (topo, part) layout.
+    """Build a :class:`NapOperator` for ``a`` on a (topo, partitions) layout.
 
     Parameters
     ----------
     a : CSR
-        Square sparse matrix (vector space and row space share ``part``).
+        Sparse ``[m, n]`` matrix — square or rectangular.
     topo : Topology, optional
         Machine shape.  Defaults to a single node with one process —
         pass the real (n_nodes, ppn) for anything distributed.
     part : RowPartition, optional
-        Row ownership; defaults to ``contiguous_partition``.
+        Square-case sugar: sets ``row_part`` AND ``col_part`` to the same
+        partition (requires ``m == n``; mutually exclusive with passing
+        either of the two explicitly).
+    row_part : RowPartition, optional
+        Ownership of the m output rows; defaults to
+        ``contiguous_partition(m, topo.n_procs)``.
+    col_part : RowPartition, optional
+        Ownership of the n input/x entries; defaults to ``row_part``
+        when the matrix is square (the single-partition case, whatever
+        layout ``row_part`` has), else to
+        ``contiguous_partition(n, topo.n_procs)``.  Ranks may own zero
+        entries (coarse AMG levels smaller than the machine).
     method : ``"nap"`` (Algorithms 2+3) or ``"standard"`` (Algorithm 1).
     backend : ``"shardmap"`` (jitted SPMD) | ``"simulate"`` (exact numpy
         oracle) | any backend later added to the executor registry.
     local_compute : shardmap local kernel — ``"auto"`` | ``"bsr"`` |
-        ``"ell"`` | ``"coo"`` (see kernels/README.md).
+        ``"ell"`` | ``"coo"`` (see kernels/README.md).  The transpose
+        direction autotunes independently over ell/coo (no transposed
+        Pallas BSR kernel yet); see ``op.autotune_report()``.
     mesh : optional pre-built jax mesh with axes ("node", "proc");
         shardmap builds one lazily otherwise.
     pairing : inter-node slot pairing for the nap plan ("aligned" is the
@@ -72,14 +102,27 @@ def operator(a, topo: Optional[Topology] = None,
         backend lowers; "balanced" is the paper's text rule, available on
         the simulate backend).
     """
-    if a.shape[0] != a.shape[1]:
-        raise ValueError(
-            f"operator requires a square matrix (row partition doubles as "
-            f"the vector partition); got shape {a.shape}")
+    m, n = a.shape
+    if part is not None:
+        if row_part is not None or col_part is not None:
+            raise ValueError("pass either part= (square sugar) or "
+                             "row_part=/col_part=, not both")
+        if m != n:
+            raise ValueError(
+                f"part= is the square-case sugar (sets row AND col "
+                f"partition); a is {a.shape} — pass row_part=/col_part=")
+        row_part = col_part = part
     if topo is None:
         topo = Topology(n_nodes=1, ppn=1)
-    if part is None:
-        part = contiguous_partition(a.shape[0], topo.n_procs)
+    if row_part is None:
+        row_part = contiguous_partition(m, topo.n_procs)
+    if col_part is None:
+        col_part = (row_part if n == row_part.n_rows
+                    else contiguous_partition(n, topo.n_procs))
+    if row_part.n_rows != m or col_part.n_rows != n:
+        raise ValueError(
+            f"partition/matrix mismatch: a is {a.shape}, row_part has "
+            f"{row_part.n_rows} rows, col_part {col_part.n_rows}")
     if backend == "shardmap" and pairing != "aligned":
         raise ValueError("the shardmap backend lowers pairing='aligned' "
                          "only (the all-to-all slot contract)")
@@ -87,8 +130,14 @@ def operator(a, topo: Optional[Topology] = None,
                         local_compute=local_compute, pairing=pairing,
                         block_shape=tuple(block_shape), nv_block=nv_block,
                         interpret=interpret, cache=cache, tuner=tuner)
-    exec_ = bind_executor(backend, method, a, part, topo, spec, mesh=mesh)
-    return NapOperator(a=a, part=part, topo=topo, spec=spec, executor=exec_)
+    exec_ = bind_executor(backend, method, a, row_part, col_part, topo, spec,
+                         mesh=mesh)
+    return NapOperator(a=a, row_part=row_part, col_part=col_part, topo=topo,
+                       spec=spec, executor=exec_)
+
+
+def _is_operator(x) -> bool:
+    return isinstance(x, (NapOperator, ComposedOperator))
 
 
 @dataclasses.dataclass
@@ -98,11 +147,13 @@ class NapOperator:
     ``op @ x`` / ``op(x)`` apply ``A``; ``op.T @ x`` applies ``A.T``
     through the SAME compiled communication plan with send/recv roles
     reversed.  ``x`` is a global ``[n]`` vector or ``[n, nv]``
-    multivector (numpy or jax); the result matches the input shape.
+    multivector (numpy or jax); the result is ``[m(, nv)]``.  ``op @ other_op``
+    composes lazily into a :class:`ComposedOperator` instead of applying.
     """
 
     a: object
-    part: RowPartition
+    row_part: RowPartition
+    col_part: RowPartition
     topo: Topology
     spec: OperatorSpec
     executor: object
@@ -110,7 +161,7 @@ class NapOperator:
     _parent: Optional["NapOperator"] = dataclasses.field(
         default=None, repr=False)
 
-    # -- application -------------------------------------------------------
+    # -- application / composition ----------------------------------------
     def __call__(self, x, donate: bool = False,
                  precision: Optional[str] = None) -> np.ndarray:
         """Apply the operator.
@@ -136,7 +187,9 @@ class NapOperator:
             out = np.asarray(out, dtype=precision)
         return out
 
-    def __matmul__(self, x) -> np.ndarray:
+    def __matmul__(self, x):
+        if _is_operator(x):
+            return ComposedOperator.of(self, x)
         return self(x)
 
     def matvec(self, x) -> np.ndarray:
@@ -145,8 +198,18 @@ class NapOperator:
     # -- structure ---------------------------------------------------------
     @property
     def shape(self) -> Tuple[int, int]:
-        n, m = self.a.shape
-        return (m, n) if self.transposed else (n, m)
+        m, n = self.a.shape
+        return (n, m) if self.transposed else (m, n)
+
+    @property
+    def range_part(self) -> RowPartition:
+        """Partition laying out THIS view's output (shape[0] entries)."""
+        return self.col_part if self.transposed else self.row_part
+
+    @property
+    def domain_part(self) -> RowPartition:
+        """Partition laying out THIS view's operand (shape[1] entries)."""
+        return self.row_part if self.transposed else self.col_part
 
     @property
     def method(self) -> str:
@@ -159,8 +222,8 @@ class NapOperator:
     @property
     def local_compute(self) -> str:
         """Resolved local-compute format for THIS direction (the transpose
-        programs run the COO/segment_sum path until transposed Pallas
-        kernels land — see the transpose builders in core/spmv_jax.py)."""
+        direction autotunes independently over ell/coo — see
+        ``autotune_report()["transpose_resolved"]``)."""
         if self.transposed:
             return getattr(self.executor, "transpose_local_compute",
                            getattr(self.executor, "local_compute", "unknown"))
@@ -186,11 +249,108 @@ class NapOperator:
 
     def autotune_report(self):
         """Local-compute format decision (chosen format, modeled times,
-        per-rank stats) where the backend runs the adaptive engine."""
+        per-rank stats) where the backend runs the adaptive engine —
+        forward verdict at the top level, transpose verdict under
+        ``"transpose"`` / ``"transpose_resolved"``."""
         return self.executor.autotune_report()
 
     def __repr__(self) -> str:
         t = ".T" if self.transposed else ""
-        return (f"NapOperator{t}(n={self.a.shape[0]}, "
+        m, n = self.shape
+        return (f"NapOperator{t}(shape=({m}, {n}), "
                 f"method={self.spec.method!r}, backend={self.spec.backend!r}, "
                 f"topo=({self.topo.n_nodes}x{self.topo.ppn}))")
+
+
+@dataclasses.dataclass(frozen=True)
+class ComposedOperator:
+    """Lazy right-to-left chain of operators: ``(R @ A @ P) @ x`` runs
+    ``P @ x`` first, then ``A``, then ``R`` — three node-aware SpMVs, the
+    Galerkin product never materialised.
+
+    Compose-time checking: adjacent shapes must chain
+    (``left.shape[1] == right.shape[0]``) and the interface partitions
+    must MATCH (``left.domain_part`` lays out the same entries as
+    ``right.range_part``), so values flow stage to stage without a hidden
+    host-side repartition.  ``.stats()`` / ``.cost()`` /
+    ``.autotune_report()`` report per stage, with ``cost()["total"]``
+    summing the chain (stages are sequential by data dependence).
+    """
+
+    factors: Tuple  # application order: factors[0] @ (... @ (factors[-1] @ x))
+
+    @staticmethod
+    def of(left, right) -> "ComposedOperator":
+        """Compose two operators (either may already be composed)."""
+        lf = left.factors if isinstance(left, ComposedOperator) else (left,)
+        rf = right.factors if isinstance(right, ComposedOperator) else (right,)
+        factors = tuple(lf) + tuple(rf)
+        for l, r in zip(factors[:-1], factors[1:]):
+            if l.shape[1] != r.shape[0]:
+                raise ValueError(
+                    f"operator shapes do not chain: {l.shape} @ {r.shape}")
+            lp, rp = l.domain_part, r.range_part
+            if lp.n_procs != rp.n_procs or \
+                    not np.array_equal(lp.owner, rp.owner):
+                raise ValueError(
+                    "incompatible partitions at a composition interface: "
+                    f"{l!r} consumes a different layout than {r!r} "
+                    "produces — rebuild one side so the interface "
+                    "partitions match (no hidden repartition)")
+        return ComposedOperator(factors=factors)
+
+    # -- application / further composition ---------------------------------
+    def __call__(self, x, donate: bool = False,
+                 precision: Optional[str] = None) -> np.ndarray:
+        for f in reversed(self.factors):
+            x = f(x, donate=donate)
+        if precision is not None:
+            x = np.asarray(x, dtype=precision)
+        return x
+
+    def __matmul__(self, x):
+        if _is_operator(x):
+            return ComposedOperator.of(self, x)
+        return self(x)
+
+    def matvec(self, x) -> np.ndarray:
+        return self(x)
+
+    # -- structure ---------------------------------------------------------
+    @property
+    def shape(self) -> Tuple[int, int]:
+        return (self.factors[0].shape[0], self.factors[-1].shape[1])
+
+    @property
+    def range_part(self) -> RowPartition:
+        return self.factors[0].range_part
+
+    @property
+    def domain_part(self) -> RowPartition:
+        return self.factors[-1].domain_part
+
+    @property
+    def T(self) -> "ComposedOperator":
+        """(ABC).T = C.T B.T A.T — each stage's node-aware transpose."""
+        return ComposedOperator(
+            factors=tuple(f.T for f in reversed(self.factors)))
+
+    # -- per-stage introspection, rolled up --------------------------------
+    def stats(self) -> List[object]:
+        """Per-stage plan statistics, in application (right-to-left) order
+        reversed to match ``factors`` (left-to-right)."""
+        return [f.stats() for f in self.factors]
+
+    def cost(self, machine: MachineParams):
+        """Per-stage modeled comm times + their sum (stages are data-
+        dependent, so the chain is sequential)."""
+        stages = [f.cost(machine) for f in self.factors]
+        return {"stages": stages,
+                "total": float(sum(s["total"] for s in stages))}
+
+    def autotune_report(self) -> List[object]:
+        return [f.autotune_report() for f in self.factors]
+
+    def __repr__(self) -> str:
+        inner = " @ ".join(repr(f) for f in self.factors)
+        return f"ComposedOperator({inner})"

@@ -106,17 +106,25 @@ def _group_sorted(keys: np.ndarray, vals: np.ndarray) -> Dict[int, np.ndarray]:
 # ---------------------------------------------------------------------------
 
 def _offproc_pairs(indptr: np.ndarray, indices: np.ndarray,
-                   part: RowPartition) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
-    """(row_owner t, col_owner r, col j) for every off-process nonzero, deduped."""
+                   row_part: RowPartition, col_part: RowPartition
+                   ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """(row_owner t, col_owner r, col j) for every off-process nonzero, deduped.
+
+    The communication structure of an SpMV is a function of TWO
+    partitions: ``row_part`` says which rank computes row i (and hence
+    *needs* x_j for every nonzero A_ij), ``col_part`` says which rank
+    owns x_j.  For the paper's square systems the two coincide; a
+    rectangular operator (AMG P / R) separates them.
+    """
     n_rows = len(indptr) - 1
     rows = np.repeat(np.arange(n_rows), np.diff(indptr))
     cols = indices
-    t = part.owner[rows]
-    r = part.owner[cols]
+    t = row_part.owner[rows]
+    r = col_part.owner[cols]
     off = t != r
     t, r, j = t[off], r[off], cols[off]
-    # dedupe (t, r, j)
-    key = (t.astype(np.int64) * part.n_procs + r) * part.n_rows + j
+    # dedupe (t, r, j); j indexes the x/column space of size col_part.n_rows
+    key = (t.astype(np.int64) * row_part.n_procs + r) * col_part.n_rows + j
     _, uniq = np.unique(key, return_index=True)
     return t[uniq], r[uniq], j[uniq]
 
@@ -127,12 +135,24 @@ def _offproc_pairs(indptr: np.ndarray, indices: np.ndarray,
 
 @dataclasses.dataclass
 class StandardPlan:
-    """P(r) and D(r, t) realised as message lists per rank."""
+    """P(r) and D(r, t) realised as message lists per rank.
+
+    ``partition`` is the ROW partition (who computes/owns output rows);
+    ``col_partition`` the COLUMN partition (who owns x entries — the
+    values the messages carry).  ``None`` means square single-partition
+    (col == row), the paper's setting.
+    """
 
     topology: Topology
     partition: RowPartition
     sends: List[List[Message]]  # sends[r] = messages rank r sends
     recvs: List[List[Message]]  # recvs[t] = messages rank t receives
+    col_partition: Optional[RowPartition] = None
+
+    @property
+    def col_part(self) -> RowPartition:
+        return self.col_partition if self.col_partition is not None \
+            else self.partition
 
     def P(self, r: int) -> List[int]:
         return [m.dst for m in self.sends[r]]
@@ -150,8 +170,12 @@ class StandardPlan:
 
 
 def build_standard_plan(indptr: np.ndarray, indices: np.ndarray,
-                        part: RowPartition, topo: Topology) -> StandardPlan:
-    t, r, j = _offproc_pairs(indptr, indices, part)
+                        part: RowPartition, topo: Topology,
+                        col_part: Optional[RowPartition] = None) -> StandardPlan:
+    """``part`` is the row partition; ``col_part`` the column/x partition
+    (defaults to ``part`` — the square single-partition case)."""
+    cpart = part if col_part is None else col_part
+    t, r, j = _offproc_pairs(indptr, indices, part, cpart)
     sends: List[List[Message]] = [[] for _ in range(topo.n_procs)]
     recvs: List[List[Message]] = [[] for _ in range(topo.n_procs)]
     # group by sender r then receiver t
@@ -161,7 +185,8 @@ def build_standard_plan(indptr: np.ndarray, indices: np.ndarray,
             msg = Message(src=int(src), dst=int(dst), idx=idx)
             sends[int(src)].append(msg)
             recvs[int(dst)].append(msg)
-    return StandardPlan(topology=topo, partition=part, sends=sends, recvs=recvs)
+    return StandardPlan(topology=topo, partition=part, sends=sends,
+                        recvs=recvs, col_partition=col_part)
 
 
 # ---------------------------------------------------------------------------
@@ -170,6 +195,10 @@ def build_standard_plan(indptr: np.ndarray, indices: np.ndarray,
 
 @dataclasses.dataclass
 class NAPPlan:
+    """Node-aware plan.  ``partition`` is the ROW partition,
+    ``col_partition`` the COLUMN/x partition (``None`` = square,
+    col == row) — see :class:`StandardPlan`."""
+
     topology: Topology
     partition: RowPartition
     # node-level sets
@@ -187,6 +216,12 @@ class NAPPlan:
     local_final_recvs: List[List[Message]]
     local_full_sends: List[List[Message]]           # L/J (on_node → on_node)
     local_full_recvs: List[List[Message]]
+    col_partition: Optional[RowPartition] = None
+
+    @property
+    def col_part(self) -> RowPartition:
+        return self.col_partition if self.col_partition is not None \
+            else self.partition
 
     def N(self, n: int) -> List[int]:
         return self.node_dests[n]
@@ -265,8 +300,12 @@ def _chunk(arr: np.ndarray, k: int, c: int) -> np.ndarray:
 
 
 def build_nap_plan(indptr: np.ndarray, indices: np.ndarray, part: RowPartition,
-                   topo: Topology, pairing: str = "balanced") -> NAPPlan:
+                   topo: Topology, pairing: str = "balanced",
+                   col_part: Optional[RowPartition] = None) -> NAPPlan:
     """Build the full node-aware plan.
+
+    ``part`` is the row partition, ``col_part`` the column/x partition
+    (defaults to ``part``: the paper's square single-partition case).
 
     pairing:
       * ``"balanced"`` — the paper's rule: send slots in descending-data order
@@ -277,8 +316,9 @@ def build_nap_plan(indptr: np.ndarray, indices: np.ndarray, part: RowPartition,
     """
     if pairing not in ("balanced", "aligned"):
         raise ValueError(pairing)
+    cpart = part if col_part is None else col_part
     ppn, n_nodes, n_procs = topo.ppn, topo.n_nodes, topo.n_procs
-    t, r, j = _offproc_pairs(indptr, indices, part)
+    t, r, j = _offproc_pairs(indptr, indices, part, cpart)
     tn = topo.node_of_array(t)  # receiver node m
     rn = topo.node_of_array(r)  # sender node n
     off_node = tn != rn
@@ -370,7 +410,7 @@ def build_nap_plan(indptr: np.ndarray, indices: np.ndarray, part: RowPartition,
             msg = Message(src=src, dst=dst, idx=chunk)
             inter_sends[src].append(msg)
             inter_recvs[dst].append(msg)
-            rh_keys.append(m * np.int64(part.n_rows) + chunk)
+            rh_keys.append(m * np.int64(cpart.n_rows) + chunk)
             rh_home.append(np.full(chunk.size, dst, dtype=np.int64))
 
     def _emit(per_pair: Dict[int, np.ndarray], sends, recvs) -> None:
@@ -386,7 +426,7 @@ def build_nap_plan(indptr: np.ndarray, indices: np.ndarray, part: RowPartition,
     init_src, init_dst, init_j = [], [], []
     for rank in range(n_procs):
         for msg in inter_sends[rank]:
-            owners = part.owner[msg.idx]
+            owners = cpart.owner[msg.idx]
             off = owners != rank
             if off.any():
                 init_src.append(owners[off])
@@ -406,7 +446,7 @@ def build_nap_plan(indptr: np.ndarray, indices: np.ndarray, part: RowPartition,
         rhh = np.concatenate(rh_home)
         order = np.argsort(rhk, kind="stable")
         rhk, rhh = rhk[order], rhh[order]
-        pair_keys = on_tn.astype(np.int64) * part.n_rows + on_j
+        pair_keys = on_tn.astype(np.int64) * cpart.n_rows + on_j
         pos = np.searchsorted(rhk, pair_keys)
         home = rhh[pos]                       # every needed (m, j) has a home
         mask = on_t != home
@@ -431,6 +471,7 @@ def build_nap_plan(indptr: np.ndarray, indices: np.ndarray, part: RowPartition,
         local_init_sends=local_init_sends, local_init_recvs=local_init_recvs,
         local_final_sends=local_final_sends, local_final_recvs=local_final_recvs,
         local_full_sends=local_full_sends, local_full_recvs=local_full_recvs,
+        col_partition=col_part,
     )
 
 

@@ -6,7 +6,16 @@ layout and exposes the four things the operator front-end needs:
 * ``forward(v, donate=False)``  — global ``A @ v`` (1-RHS or multi-RHS)
 * ``transpose(u, donate=False)``— global ``A.T @ u`` against the SAME plan
 * ``stats()`` / ``cost(machine)`` / ``autotune_report()`` — plan-level
-  message statistics, modeled comm time, and the local-format verdict.
+  message statistics, modeled comm time, and the local-format verdict
+  (for BOTH directions — the transpose verdict rides along under
+  ``"transpose"`` / ``"transpose_resolved"``).
+
+Every executor is built over TWO partitions: ``row_part`` (output
+ownership, ``a.shape[0]`` rows) and ``col_part`` (x ownership,
+``a.shape[1]`` entries).  Square single-partition operators pass the same
+object twice; rectangular AMG P / R operators separate them.  The forward
+direction consumes a ``col_part``-owned operand and yields a
+``row_part``-owned result; the transpose swaps the two.
 
 Backends registered here:
 
@@ -48,7 +57,7 @@ from repro.core.topology import Topology
 
 @dataclasses.dataclass(frozen=True)
 class OperatorSpec:
-    """Everything an executor factory needs beyond (a, part, topo)."""
+    """Everything an executor factory needs beyond (a, row/col parts, topo)."""
 
     method: str = "nap"
     backend: str = "shardmap"
@@ -70,7 +79,9 @@ _REGISTRY: Dict[Tuple[str, str], Callable] = {}
 
 def register_executor(backend: str, method: str):
     """Class/factory decorator: makes ``backend``/``method`` constructible
-    through :func:`bind_executor` (and thus ``repro.api.operator``)."""
+    through :func:`bind_executor` (and thus ``repro.api.operator``).  A
+    factory signature is ``factory(a, row_part, col_part, topo, spec,
+    mesh=None)``."""
 
     def deco(factory):
         _REGISTRY[(backend, method)] = factory
@@ -83,8 +94,9 @@ def available_executors() -> List[Tuple[str, str]]:
     return sorted(_REGISTRY)
 
 
-def bind_executor(backend: str, method: str, a, part: RowPartition,
-                  topo: Topology, spec: OperatorSpec, mesh=None):
+def bind_executor(backend: str, method: str, a, row_part: RowPartition,
+                  col_part: RowPartition, topo: Topology, spec: OperatorSpec,
+                  mesh=None):
     """Instantiate the registered executor for (backend, method)."""
     try:
         factory = _REGISTRY[(backend, method)]
@@ -93,7 +105,7 @@ def bind_executor(backend: str, method: str, a, part: RowPartition,
         raise ValueError(
             f"no executor registered for backend={backend!r} "
             f"method={method!r}; available: {avail}") from None
-    return factory(a, part, topo, spec, mesh=mesh)
+    return factory(a, row_part, col_part, topo, spec, mesh=mesh)
 
 
 def check_operand(n: int, v: np.ndarray) -> np.ndarray:
@@ -111,13 +123,15 @@ def check_operand(n: int, v: np.ndarray) -> np.ndarray:
 class _ShardmapExecutor:
     """Common shard_map plumbing: one pack/unpack path for every method
     and direction; the forward/transpose programs build lazily and are
-    memoized per direction."""
+    memoized per direction.  Forward packs the operand by ``col_part``
+    (cols_pad) and unpacks by ``row_part``; transpose swaps both."""
 
     backend = "shardmap"
 
-    def __init__(self, a, part: RowPartition, topo: Topology,
-                 spec: OperatorSpec, mesh=None):
-        self.a, self.part, self.topo, self.spec = a, part, topo, spec
+    def __init__(self, a, row_part: RowPartition, col_part: RowPartition,
+                 topo: Topology, spec: OperatorSpec, mesh=None):
+        self.a, self.topo, self.spec = a, topo, spec
+        self.row_part, self.col_part = row_part, col_part
         self._mesh = mesh
         self._compiled = None
         self._runs: Dict[str, Callable] = {}
@@ -146,10 +160,16 @@ class _ShardmapExecutor:
     def _apply(self, direction: str, v: np.ndarray, donate: bool) -> np.ndarray:
         from repro.core.spmv_jax import pack_vector, unpack_vector
 
-        v = check_operand(self.a.shape[0], v)
-        shards = pack_vector(v, self.part, self.topo, self.compiled.rows_pad)
+        c = self.compiled
+        if direction == "forward":
+            in_part, in_pad, out_part = self.col_part, c.cols_pad, self.row_part
+            v = check_operand(self.a.shape[1], v)
+        else:
+            in_part, in_pad, out_part = self.row_part, c.rows_pad, self.col_part
+            v = check_operand(self.a.shape[0], v)
+        shards = pack_vector(v, in_part, self.topo, in_pad)
         w = self._run(direction)(shards, donate=donate)
-        return unpack_vector(np.asarray(w), self.part, self.topo)
+        return unpack_vector(np.asarray(w), out_part, self.topo)
 
     def forward(self, v: np.ndarray, donate: bool = False) -> np.ndarray:
         return self._apply("forward", v, donate)
@@ -157,14 +177,17 @@ class _ShardmapExecutor:
     def transpose(self, u: np.ndarray, donate: bool = False) -> np.ndarray:
         return self._apply("transpose", u, donate)
 
-    # the transpose programs hardcode the COO/segment_sum path (transposed
-    # Pallas kernels are a roadmap item) — surfaced so op.T.local_compute
-    # reports what actually runs, not the forward's format.
-    transpose_local_compute = "coo"
-
     @property
     def local_compute(self) -> str:
         return self.compiled.resolve_local_compute(self.spec.local_compute)
+
+    @property
+    def transpose_local_compute(self) -> str:
+        """Resolved transpose-direction format (the argmin of ell/coo from
+        the compile-time transpose autotuner unless explicitly pinned —
+        transposed Pallas BSR kernels remain a roadmap item)."""
+        return self.compiled.resolve_transpose_local_compute(
+            self.spec.local_compute)
 
     def autotune_report(self) -> Dict[str, object]:
         return dict(self.compiled.autotune,
@@ -179,11 +202,11 @@ class NapShardmapExecutor(_ShardmapExecutor):
 
     def _compile(self):
         from repro.core.spmv_jax import compile_nap
-        return compile_nap(self.a, self.part, self.topo,
+        return compile_nap(self.a, self.row_part, self.topo,
                            block_shape=self.spec.block_shape,
                            cache=self.spec.cache,
                            local_compute=self.spec.local_compute,
-                           tuner=self.spec.tuner)
+                           tuner=self.spec.tuner, col_part=self.col_part)
 
     def _build(self, direction: str):
         from repro.core.spmv_jax import (nap_forward_shardmap,
@@ -194,6 +217,7 @@ class NapShardmapExecutor(_ShardmapExecutor):
                 local_compute=self.spec.local_compute,
                 nv_block=self.spec.nv_block, interpret=self.spec.interpret)
         return nap_transpose_shardmap(self.compiled, self.mesh,
+                                      local_compute=self.spec.local_compute,
                                       nv_block=self.spec.nv_block,
                                       interpret=self.spec.interpret)
 
@@ -214,11 +238,11 @@ class StandardShardmapExecutor(_ShardmapExecutor):
 
     def _compile(self):
         from repro.core.spmv_jax import compile_standard
-        return compile_standard(self.a, self.part, self.topo,
+        return compile_standard(self.a, self.row_part, self.topo,
                                 block_shape=self.spec.block_shape,
                                 cache=self.spec.cache,
                                 local_compute=self.spec.local_compute,
-                                tuner=self.spec.tuner)
+                                tuner=self.spec.tuner, col_part=self.col_part)
 
     def _build(self, direction: str):
         from repro.core.spmv_jax import (standard_forward_shardmap,
@@ -228,9 +252,9 @@ class StandardShardmapExecutor(_ShardmapExecutor):
                 self.compiled, self.mesh,
                 local_compute=self.spec.local_compute,
                 nv_block=self.spec.nv_block, interpret=self.spec.interpret)
-        return standard_transpose_shardmap(self.compiled, self.mesh,
-                                           nv_block=self.spec.nv_block,
-                                           interpret=self.spec.interpret)
+        return standard_transpose_shardmap(
+            self.compiled, self.mesh, local_compute=self.spec.local_compute,
+            nv_block=self.spec.nv_block, interpret=self.spec.interpret)
 
     def stats(self) -> Dict[str, object]:
         return {f"messages_{k}": v for k, v in
@@ -249,10 +273,12 @@ class _SimulateExecutor:
 
     backend = "simulate"
     local_compute = "numpy"
+    transpose_local_compute = "numpy"
 
-    def __init__(self, a, part: RowPartition, topo: Topology,
-                 spec: OperatorSpec, mesh=None):
-        self.a, self.part, self.topo, self.spec = a, part, topo, spec
+    def __init__(self, a, row_part: RowPartition, col_part: RowPartition,
+                 topo: Topology, spec: OperatorSpec, mesh=None):
+        self.a, self.topo, self.spec = a, topo, spec
+        self.row_part, self.col_part = row_part, col_part
         self._plan = None
 
     @property
@@ -261,22 +287,26 @@ class _SimulateExecutor:
             self._plan = self._build_plan()
         return self._plan
 
-    def _columnwise(self, fn, v: np.ndarray) -> np.ndarray:
-        v = np.asarray(check_operand(self.a.shape[0], v), dtype=np.float64)
+    def _columnwise(self, fn, v: np.ndarray, n: int) -> np.ndarray:
+        v = np.asarray(check_operand(n, v), dtype=np.float64)
         if v.ndim == 1:
             return fn(v)
         return np.stack([fn(v[:, i]) for i in range(v.shape[1])], axis=1)
 
     def forward(self, v: np.ndarray, donate: bool = False) -> np.ndarray:
-        return self._columnwise(lambda col: self._forward(col), v)
+        return self._columnwise(lambda col: self._forward(col), v,
+                                self.a.shape[1])
 
     def transpose(self, u: np.ndarray, donate: bool = False) -> np.ndarray:
-        return self._columnwise(lambda col: self._transpose(col), u)
+        return self._columnwise(lambda col: self._transpose(col), u,
+                                self.a.shape[0])
 
     def autotune_report(self) -> Dict[str, object]:
         return {"resolved": self.local_compute,
-                "note": "simulate backend runs exact numpy local compute; "
-                        "the format autotuner applies to shardmap only"}
+                "transpose_resolved": self.transpose_local_compute,
+                "note": "simulate backend runs exact numpy local compute in "
+                        "both directions; the format autotuner applies to "
+                        "shardmap only"}
 
 
 @register_executor("simulate", "nap")
@@ -284,8 +314,9 @@ class NapSimulateExecutor(_SimulateExecutor):
     method = "nap"
 
     def _build_plan(self):
-        return build_nap_plan(self.a.indptr, self.a.indices, self.part,
-                              self.topo, pairing=self.spec.pairing)
+        return build_nap_plan(self.a.indptr, self.a.indices, self.row_part,
+                              self.topo, pairing=self.spec.pairing,
+                              col_part=self.col_part)
 
     def _forward(self, v):
         return simulate_nap_spmv(self.a, v, self.plan)
@@ -305,8 +336,9 @@ class StandardSimulateExecutor(_SimulateExecutor):
     method = "standard"
 
     def _build_plan(self):
-        return build_standard_plan(self.a.indptr, self.a.indices, self.part,
-                                   self.topo)
+        return build_standard_plan(self.a.indptr, self.a.indices,
+                                   self.row_part, self.topo,
+                                   col_part=self.col_part)
 
     def _forward(self, v):
         return simulate_standard_spmv(self.a, v, self.plan)

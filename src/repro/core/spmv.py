@@ -24,7 +24,6 @@ from repro.core.comm_graph import (Message, NAPPlan, StandardPlan,
                                    build_nap_plan, build_standard_plan)
 from repro.core.partition import RowPartition
 from repro.core.topology import Topology
-from repro.deprecation import warn_once
 from repro.sparse.csr import CSR
 
 
@@ -34,22 +33,38 @@ from repro.sparse.csr import CSR
 
 @dataclasses.dataclass
 class LocalBlocks:
-    """Rank-local matrix split by column class, with buffer-slot column maps."""
+    """Rank-local matrix split by column class, with buffer-slot column maps.
+
+    ``rows`` come from the ROW partition (output ownership); ``x_rows``
+    from the COLUMN partition (x ownership) — identical for the paper's
+    square single-partition case, distinct for rectangular operators.
+    """
 
     rank: int
     rows: np.ndarray                 # global rows R(r), ascending
-    on_proc: CSR                     # cols -> local row index of owner (== this rank)
+    on_proc: CSR                     # cols -> local x index on this rank
     on_node: CSR                     # cols -> slot in the on-node buffer
     off_node: CSR                    # cols -> slot in the off-node buffer
     on_node_cols: np.ndarray         # global col ids, buffer order (ascending)
     off_node_cols: np.ndarray
+    # global x/col indices owned here, ascending; defaults to ``rows``
+    # (the square single-partition case — also keeps pre-rectangular
+    # constructors like benchmarks/_legacy_plan.py valid verbatim)
+    x_rows: Optional[np.ndarray] = None
+
+    def __post_init__(self) -> None:
+        if self.x_rows is None:
+            self.x_rows = self.rows
 
 
-def split_local_blocks(a: CSR, part: RowPartition, topo: Topology, rank: int) -> LocalBlocks:
+def split_local_blocks(a: CSR, part: RowPartition, topo: Topology, rank: int,
+                       col_part: Optional[RowPartition] = None) -> LocalBlocks:
+    cpart = part if col_part is None else col_part
     rows = part.rows_of(rank)
+    x_rows = cpart.rows_of(rank)
     local = a.select_rows(rows)
     g_rows, g_cols, vals = local.to_coo()  # g_rows are positions within `rows`
-    col_owner = part.owner[g_cols]
+    col_owner = cpart.owner[g_cols]
     col_node = topo.node_of_array(col_owner)
     me_node = topo.node_of(rank)
 
@@ -57,12 +72,12 @@ def split_local_blocks(a: CSR, part: RowPartition, topo: Topology, rank: int) ->
     on_node_m = (col_owner != rank) & (col_node == me_node)
     off_node_m = col_node != me_node
 
-    # on-process: remap columns to local index within R(r).  ``rows`` is
-    # ascending, so the remap is one bulk searchsorted.
-    op_cols = np.searchsorted(rows, g_cols[on_proc_m])
+    # on-process: remap columns to local index within the rank's x rows.
+    # ``x_rows`` is ascending, so the remap is one bulk searchsorted.
+    op_cols = np.searchsorted(x_rows, g_cols[on_proc_m])
     # masked subsets of a row-major COO stay row-major: skip the re-sort
     on_proc = CSR.from_coo(g_rows[on_proc_m], op_cols, vals[on_proc_m],
-                           (rows.size, rows.size), sum_duplicates=False,
+                           (rows.size, x_rows.size), sum_duplicates=False,
                            assume_sorted=True)
 
     def buffer_block(mask: np.ndarray) -> Tuple[CSR, np.ndarray]:
@@ -77,11 +92,13 @@ def split_local_blocks(a: CSR, part: RowPartition, topo: Topology, rank: int) ->
     off_node, off_node_cols = buffer_block(off_node_m)
     return LocalBlocks(rank=rank, rows=rows, on_proc=on_proc, on_node=on_node,
                        off_node=off_node, on_node_cols=on_node_cols,
-                       off_node_cols=off_node_cols)
+                       off_node_cols=off_node_cols, x_rows=x_rows)
 
 
-def split_all_blocks(a: CSR, part: RowPartition, topo: Topology) -> List[LocalBlocks]:
-    return [split_local_blocks(a, part, topo, r) for r in range(topo.n_procs)]
+def split_all_blocks(a: CSR, part: RowPartition, topo: Topology,
+                     col_part: Optional[RowPartition] = None) -> List[LocalBlocks]:
+    return [split_local_blocks(a, part, topo, r, col_part=col_part)
+            for r in range(topo.n_procs)]
 
 
 # ---------------------------------------------------------------------------
@@ -121,21 +138,28 @@ def _gather_from(available: Dict[int, float], idx: np.ndarray) -> np.ndarray:
 
 
 def simulate_standard_spmv(a: CSR, v: np.ndarray, plan: StandardPlan) -> np.ndarray:
-    """Algorithm 1 with explicit message passing (numpy)."""
+    """Algorithm 1 with explicit message passing (numpy).
+
+    ``v`` has length ``a.shape[1]`` and is owned by the plan's column
+    partition; the output has length ``a.shape[0]`` laid out by the row
+    partition (the two coincide for square single-partition systems).
+    """
     part, topo = plan.partition, plan.topology
-    blocks = split_all_blocks(a, part, topo)
+    cpart = plan.col_part
+    blocks = split_all_blocks(a, part, topo, col_part=cpart)
     w = np.zeros(a.shape[0])
     # post all sends (Isend)
     box = _MailBox()
     for r in range(topo.n_procs):
-        mine = {int(j): float(v[j]) for j in part.rows_of(r)}
+        mine = {int(j): float(v[j]) for j in cpart.rows_of(r)}
         for msg in plan.sends[r]:
             box.post(msg, _gather_from(mine, msg.idx))
     # receive + compute
     for r in range(topo.n_procs):
         blk = blocks[r]
-        mine = {int(j): float(v[j]) for j in blk.rows}
-        w_local = blk.on_proc.matvec(np.array([mine[int(j)] for j in blk.rows]))
+        mine = {int(j): float(v[j]) for j in blk.x_rows}
+        w_local = blk.on_proc.matvec(
+            np.array([mine[int(j)] for j in blk.x_rows]))
         recvd: Dict[int, float] = {}
         for msg in plan.recvs[r]:
             for jj, val in zip(msg.idx, box.fetch(msg)):
@@ -156,12 +180,16 @@ def simulate_nap_spmv(a: CSR, v: np.ndarray, plan: NAPPlan) -> np.ndarray:
 
     Phase order follows Algorithm 3: local full + local init first, then
     inter-node Isend, local SpMVs overlap, then the final local scatter.
+    ``v`` is owned by the plan's column partition, the output by the row
+    partition (identical for square single-partition systems).
     """
     part, topo = plan.partition, plan.topology
-    blocks = split_all_blocks(a, part, topo)
+    cpart = plan.col_part
+    blocks = split_all_blocks(a, part, topo, col_part=cpart)
     w = np.zeros(a.shape[0])
 
-    owned = [{int(j): float(v[j]) for j in part.rows_of(r)} for r in range(topo.n_procs)]
+    owned = [{int(j): float(v[j]) for j in cpart.rows_of(r)}
+             for r in range(topo.n_procs)]
 
     # -- phase A: fully-local exchange (on_node -> on_node) ------------------
     box_full = _MailBox()
@@ -208,8 +236,9 @@ def simulate_nap_spmv(a: CSR, v: np.ndarray, plan: NAPPlan) -> np.ndarray:
     # -- compute: the three local_spmv calls of Algorithm 3 ------------------
     for r in range(topo.n_procs):
         blk = blocks[r]
-        w_local = blk.on_proc.matvec(np.array([owned[r][int(j)] for j in blk.rows])
-                                     if blk.rows.size else np.zeros(0))
+        w_local = blk.on_proc.matvec(
+            np.array([owned[r][int(j)] for j in blk.x_rows])
+            if blk.x_rows.size else np.zeros(0))
         if blk.on_node_cols.size:
             b_ll: Dict[int, float] = {}
             for msg in plan.local_full_recvs[r]:
@@ -235,8 +264,10 @@ def simulate_nap_spmv(a: CSR, v: np.ndarray, plan: NAPPlan) -> np.ndarray:
 # mirror of the adjoint shard_map program in :mod:`repro.core.spmv_jax`.
 
 def _block_transpose_contrib(blk: LocalBlocks, u: np.ndarray):
-    """Per-rank transposed local products: (z-contribution on own rows,
-    on-node buffer contributions, off-node buffer contributions)."""
+    """Per-rank transposed local products: (z-contribution on the rank's
+    own x rows, on-node buffer contributions, off-node buffer
+    contributions).  ``u`` is row-partition laid out; z lives in the
+    column/x space."""
     u_r = u[blk.rows] if blk.rows.size else np.zeros(0)
     z_own = blk.on_proc.transpose().matvec(u_r)
     c_node = blk.on_node.transpose().matvec(u_r) if blk.on_node_cols.size \
@@ -266,15 +297,20 @@ def _reverse_phase(fwd_sends: List[List[Message]],
 
 def simulate_standard_spmv_transpose(a: CSR, u: np.ndarray,
                                      plan: StandardPlan) -> np.ndarray:
-    """Algorithm 1 reversed: z = A.T u with explicit message passing."""
+    """Algorithm 1 reversed: z = A.T u with explicit message passing.
+
+    ``u`` has length ``a.shape[0]`` (row partition); the output has
+    length ``a.shape[1]`` and is owned by the column partition.
+    """
     part, topo = plan.partition, plan.topology
-    blocks = split_all_blocks(a, part, topo)
-    z = np.zeros(a.shape[0])
+    cpart = plan.col_part
+    blocks = split_all_blocks(a, part, topo, col_part=cpart)
+    z = np.zeros(a.shape[1])
     pending: List[Dict[int, float]] = [dict() for _ in range(topo.n_procs)]
     for r in range(topo.n_procs):
         blk = blocks[r]
         z_own, c_node, c_off = _block_transpose_contrib(blk, u)
-        z[blk.rows] += z_own[: blk.rows.size]
+        z[blk.x_rows] += z_own[: blk.x_rows.size]
         for j, val in zip(blk.on_node_cols, c_node[: blk.on_node_cols.size]):
             pending[r][int(j)] = float(val)
         for j, val in zip(blk.off_node_cols, c_off[: blk.off_node_cols.size]):
@@ -282,7 +318,7 @@ def simulate_standard_spmv_transpose(a: CSR, u: np.ndarray,
 
     # the standard algorithm has ONE phase: reverse it straight to owners.
     def to_owner(rank: int, j: int, val: float) -> None:
-        assert part.owner[j] == rank, "reversed message missed the owner"
+        assert cpart.owner[j] == rank, "reversed message missed the owner"
         z[j] += val
 
     _reverse_phase(plan.sends, pending, to_owner)
@@ -297,11 +333,13 @@ def simulate_nap_spmv_transpose(a: CSR, u: np.ndarray,
     Reverse order of Algorithm 3: final scatter first (consumers -> home
     ranks), then the inter-node exchange (home -> staging rank), then the
     init redistribution (staging rank -> owner); the fully-local phase
-    reverses independently (on-node consumers -> owners).
+    reverses independently (on-node consumers -> owners).  ``u`` is
+    row-partition laid out; z is column-partition laid out.
     """
     part, topo = plan.partition, plan.topology
-    blocks = split_all_blocks(a, part, topo)
-    z = np.zeros(a.shape[0])
+    cpart = plan.col_part
+    blocks = split_all_blocks(a, part, topo, col_part=cpart)
+    z = np.zeros(a.shape[1])
     # contributions awaiting reverse routing toward the owner (off-node
     # path) and via the fully-local path (on-node buffer).
     pending: List[Dict[int, float]] = [dict() for _ in range(topo.n_procs)]
@@ -309,7 +347,7 @@ def simulate_nap_spmv_transpose(a: CSR, u: np.ndarray,
     for r in range(topo.n_procs):
         blk = blocks[r]
         z_own, c_node, c_off = _block_transpose_contrib(blk, u)
-        z[blk.rows] += z_own[: blk.rows.size]
+        z[blk.x_rows] += z_own[: blk.x_rows.size]
         for j, val in zip(blk.on_node_cols, c_node[: blk.on_node_cols.size]):
             node_pending[r][int(j)] = float(val)
         for j, val in zip(blk.off_node_cols, c_off[: blk.off_node_cols.size]):
@@ -325,14 +363,14 @@ def simulate_nap_spmv_transpose(a: CSR, u: np.ndarray,
 
     # -- reverse phase B: staging ranks return contributions to the owners --
     def to_owner(rank: int, j: int, val: float) -> None:
-        assert part.owner[j] == rank, "reversed init message missed the owner"
+        assert cpart.owner[j] == rank, "reversed init message missed the owner"
         z[j] += val
 
     _reverse_phase(plan.local_init_sends, pending, to_owner)
     # whatever remains was staged from the rank's own values: fold into z.
     for r in range(topo.n_procs):
         for j, val in pending[r].items():
-            assert part.owner[j] == r, "unrouted transpose contribution"
+            assert cpart.owner[j] == r, "unrouted transpose contribution"
             z[j] += val
 
     # -- reverse phase A: on-node consumers return directly to the owners --
@@ -347,32 +385,28 @@ def simulate_nap_spmv_transpose(a: CSR, u: np.ndarray,
 
 @dataclasses.dataclass
 class DistSpMV:
-    """A distributed SpMV problem: matrix + layout + both plans."""
+    """A distributed SpMV problem: matrix + layout + both plans.
+
+    (The historical ``.run`` shim is gone — apply through
+    ``repro.api.operator(a, backend="simulate")`` or call the
+    ``simulate_*`` oracles directly with ``.standard`` / ``.nap``.)
+    """
 
     a: CSR
     partition: RowPartition
     topology: Topology
     standard: StandardPlan
     nap: NAPPlan
+    col_partition: Optional[RowPartition] = None
 
     @staticmethod
     def build(a: CSR, part: RowPartition, topo: Topology,
-              pairing: str = "balanced") -> "DistSpMV":
-        std = build_standard_plan(a.indptr, a.indices, part, topo)
-        nap = build_nap_plan(a.indptr, a.indices, part, topo, pairing=pairing)
-        return DistSpMV(a=a, partition=part, topology=topo, standard=std, nap=nap)
-
-    def run(self, v: np.ndarray, algorithm: str = "nap") -> np.ndarray:
-        """Deprecated: use ``repro.api.operator(a, backend="simulate")`` (the
-        simulate functions themselves remain the canonical oracles)."""
-        warn_once("repro.core.spmv.DistSpMV.run",
-                  "repro.api.operator(a, backend='simulate') @ v")
-        return self._run(v, algorithm)
-
-    def _run(self, v: np.ndarray, algorithm: str = "nap") -> np.ndarray:
-        if algorithm == "standard":
-            return simulate_standard_spmv(self.a, v, self.standard)
-        if algorithm == "nap":
-            return simulate_nap_spmv(self.a, v, self.nap)
-        raise ValueError(algorithm)
+              pairing: str = "balanced",
+              col_part: Optional[RowPartition] = None) -> "DistSpMV":
+        std = build_standard_plan(a.indptr, a.indices, part, topo,
+                                  col_part=col_part)
+        nap = build_nap_plan(a.indptr, a.indices, part, topo, pairing=pairing,
+                             col_part=col_part)
+        return DistSpMV(a=a, partition=part, topology=topo, standard=std,
+                        nap=nap, col_partition=col_part)
 

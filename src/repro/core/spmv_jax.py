@@ -9,8 +9,17 @@ module holds the compiled-plan containers (:class:`CompiledNAP`,
 * :func:`nap_forward_shardmap` / :func:`nap_transpose_shardmap`
 * :func:`standard_forward_shardmap` / :func:`standard_transpose_shardmap`
 
-(``nap_spmv_shardmap`` / ``standard_spmv_shardmap`` remain as one-release
-deprecation shims over these.)
+(The one-release deprecation shims ``nap_spmv_shardmap`` /
+``standard_spmv_shardmap`` are GONE — the migration table survives in
+``src/repro/kernels/README.md``.)
+
+**Rectangular operators**: every compiled plan carries TWO partitions —
+``part`` (rows: who owns the output) and ``col_part`` (columns: who owns
+the x entries).  Send/recv/gather maps derive from ``col_part`` and the
+output layout from ``part``; the transpose direction simply swaps the
+two.  A square single-partition operator (``col_part=None``) behaves
+exactly as before; AMG restriction/prolongation pass a genuine ``[m, n]``
+matrix with independent partitions.
 
 **Transpose SpMV**: ``A.T @ x`` against the SAME compiled plan, with the
 send/recv roles reversed — every forward gather ``buf = recv[idx_map]``
@@ -90,7 +99,6 @@ from repro.compat import shard_map
 from repro.core.comm_graph import (Message, NAPPlan, StandardPlan,
                                    build_nap_plan, build_standard_plan,
                                    lookup_slots)
-from repro.deprecation import warn_once
 from repro.core.cost_model import (LOCAL_FORMATS, LocalComputeParams,
                                    TPU_V5E_LOCAL, choose_local_format,
                                    local_format_times)
@@ -132,6 +140,24 @@ def _resolve_local_compute(requested: str, compile_requested: str,
     return requested
 
 
+def _resolve_transpose_local_compute(requested: str, compile_requested: str,
+                                     autotune: Dict[str, object]) -> str:
+    """Transpose-direction analogue of :func:`_resolve_local_compute`.
+
+    Only ``ell`` and ``coo`` have transposed programs (transposed Pallas
+    BSR is a roadmap item), so an explicit ``ell``/``coo`` request wins,
+    while ``auto`` — and ``bsr``, which cannot be honoured — defer to the
+    transpose autotuner verdict recorded under ``autotune["transpose"]``.
+    """
+    if requested not in ("auto",) + LOCAL_FORMATS:
+        raise ValueError(requested)
+    for cand in (requested, compile_requested):
+        if cand in ("ell", "coo"):
+            return cand
+    t = autotune.get("transpose", {})
+    return str(t.get("chosen", "coo")) if isinstance(t, dict) else "coo"
+
+
 def _memo_device_arrays(topo: Topology, arrays: Dict[str, np.ndarray],
                         cache: Dict[str, jnp.ndarray]) -> Dict[str, jnp.ndarray]:
     """Mesh-shaped ((n_nodes, ppn, ...)) device copies of the host arrays.
@@ -150,13 +176,22 @@ def _memo_device_arrays(topo: Topology, arrays: Dict[str, np.ndarray],
 
 @dataclasses.dataclass
 class CompiledNAP:
-    """Static arrays for the shard_map NAPSpMV, stacked over ranks."""
+    """Static arrays for the shard_map NAPSpMV, stacked over ranks.
+
+    Rectangular contract: ``part`` is the ROW partition (output layout,
+    ``rows_pad`` rows per shard) and ``col_part`` the COLUMN partition
+    (input x layout, ``cols_pad`` entries per shard).  They coincide for
+    square single-partition operators; an AMG P / R separates them.  The
+    packed x domain is ``[v_loc(cols_pad) | b_on_node | b_off_node]``.
+    """
 
     topo: Topology
     part: RowPartition
     rows_pad: int
     pads: Dict[str, int]          # full/init/inter/final/bnode/boff/nnz pads
     arrays: Dict[str, np.ndarray]  # stacked [n_procs, ...] index/value arrays
+    col_part: Optional[RowPartition] = None  # None = square (col == row)
+    cols_pad: int = 0                        # 0 = square (== rows_pad)
     plan: Optional[NAPPlan] = None          # kept for traffic accounting
     block_shape: Tuple[int, int] = (8, 128)  # fused BSR (bm, bn)
     # element column offsets of the packed fused x operand, all multiples
@@ -166,13 +201,21 @@ class CompiledNAP:
     # rank-local blocks retained for lazy fused-BSR / ELL emission
     local_blocks: Optional[List[LocalBlocks]] = None
     # format autotuner verdict + inputs (chosen format, per-rank stats,
-    # modeled per-format times) — filled by compile_nap
+    # modeled per-format times) — filled by compile_nap for BOTH
+    # directions (the transpose verdict lives under autotune["transpose"])
     autotune: Dict[str, object] = dataclasses.field(default_factory=dict)
     requested_local_compute: str = "auto"
     ell_kmax: int = 0
+    ell_t_kmax: int = 0
     # per-name device-array memo (see _memo_device_arrays)
     _dev_cache: Dict[str, jnp.ndarray] = dataclasses.field(
         default_factory=dict, repr=False, compare=False)
+
+    def __post_init__(self) -> None:
+        if self.col_part is None:
+            self.col_part = self.part
+        if not self.cols_pad:
+            self.cols_pad = self.rows_pad
 
     @property
     def chosen_local_compute(self) -> str:
@@ -183,10 +226,18 @@ class CompiledNAP:
         return _resolve_local_compute(requested, self.requested_local_compute,
                                       self.chosen_local_compute)
 
+    def resolve_transpose_local_compute(self, requested: str) -> str:
+        """Transpose-direction format: honours an explicit ``ell``/``coo``
+        request; ``auto`` (and ``bsr``, which has no transposed Pallas
+        kernel) defer to the transpose autotuner verdict recorded at
+        compile time under ``autotune["transpose"]``."""
+        return _resolve_transpose_local_compute(
+            requested, self.requested_local_compute, self.autotune)
+
     @property
     def packed_x_len(self) -> int:
         """Element length of the packed [v_loc | b_on_node | b_off_node] x."""
-        return self.rows_pad + self.pads["bnode"] + self.pads["boff"]
+        return self.cols_pad + self.pads["bnode"] + self.pads["boff"]
 
     def ensure_ell(self) -> None:
         """Materialise the packed ELL arrays (lazily, once) — the
@@ -195,11 +246,38 @@ class CompiledNAP:
             return
         assert self.local_blocks is not None, "compiled plan lost its blocks"
         cols, vals, kmax = _fused_ell_arrays(
-            self.local_blocks, self.rows_pad, self.pads["bnode"],
-            self.pads["boff"])
+            self.local_blocks, self.rows_pad, self.cols_pad,
+            self.pads["bnode"], self.pads["boff"])
         self.arrays["ell_cols"] = cols
         self.arrays["ell_vals"] = vals
         self.ell_kmax = kmax
+
+    def ensure_ell_t(self) -> None:
+        """Materialise the TRANSPOSED packed ELL arrays (lazily, once):
+        A_r^T over the packed contribution domain
+        ``[z(cols_pad) | c_on_node | c_off_node]`` with x = u_loc — the
+        vectorised alternative to the transpose COO scatter path."""
+        if "ell_t_cols" in self.arrays:
+            return
+        assert self.local_blocks is not None, "compiled plan lost its blocks"
+        cols_pad, bnode_pad = self.cols_pad, self.pads["bnode"]
+        out_len = self.packed_x_len
+        per_rank: List[ELL] = []
+        for blk in self.local_blocks:
+            op_r, op_c, op_v = blk.on_proc.to_coo()
+            on_r, on_c, on_v = blk.on_node.to_coo()
+            off_r, off_c, off_v = blk.off_node.to_coo()
+            rows_t = np.concatenate([op_c, cols_pad + on_c,
+                                     cols_pad + bnode_pad + off_c])
+            cols_t = np.concatenate([op_r, on_r, off_r])
+            vals = np.concatenate([op_v, on_v, off_v])
+            per_rank.append(ELL.from_coo(rows_t, cols_t, vals,
+                                         (out_len, self.rows_pad),
+                                         n_rows_pad=out_len))
+        cols, vals, kmax = stack_ell(per_rank)
+        self.arrays["ell_t_cols"] = cols
+        self.arrays["ell_t_vals"] = vals
+        self.ell_t_kmax = kmax
 
     def ensure_fused(self) -> None:
         """Materialise the fused Pallas BSR arrays (lazily, once).
@@ -214,8 +292,8 @@ class CompiledNAP:
         assert self.local_blocks is not None, "compiled plan lost its blocks"
         bm, bn = self.block_shape
         fc, fb, layout = _fused_bsr_arrays(
-            self.local_blocks, self.rows_pad, self.pads["bnode"],
-            self.pads["boff"], bm, bn)
+            self.local_blocks, self.rows_pad, self.cols_pad,
+            self.pads["bnode"], self.pads["boff"], bm, bn)
         self.arrays["fused_cols"] = fc
         self.arrays["fused_blocks"] = fb
         self.bsr_layout.update(layout)
@@ -252,9 +330,13 @@ def _cache_get(key: tuple) -> Optional[CompiledNAP]:
 
 def _cache_key(a: CSR, part: RowPartition, topo: Topology,
                block_shape: Tuple[int, int], local_compute: str,
-               tuner: LocalComputeParams, tag: str) -> tuple:
+               tuner: LocalComputeParams, tag: str,
+               col_part: Optional[RowPartition] = None) -> tuple:
     h = hashlib.sha1()
-    for arr in (a.indptr, a.indices, a.data, part.owner):
+    arrs = [a.indptr, a.indices, a.data, part.owner]
+    if col_part is not None:
+        arrs.append(col_part.owner)
+    for arr in arrs:
         h.update(np.ascontiguousarray(arr).tobytes())
     # block_shape and the tuner signature cover every autotuner input that
     # is not a function of the hashed matrix (fill density etc. derive from
@@ -265,19 +347,21 @@ def _cache_key(a: CSR, part: RowPartition, topo: Topology,
             tuple(block_shape), str(local_compute), tuner.signature())
 
 
-def _fused_bsr_arrays(blocks: List[LocalBlocks], rows_pad: int,
+def _fused_bsr_arrays(blocks: List[LocalBlocks], rows_pad: int, cols_pad: int,
                       bnode_pad: int, boff_pad: int,
                       bm: int, bn: int) -> Tuple[np.ndarray, np.ndarray, Dict[str, int]]:
     """Fuse each rank's three column blocks into one padded-uniform BSR.
 
     The element column domain is the concatenated x operand
-    ``[v_loc | b_on_node | b_off_node]`` with every segment padded to a
-    multiple of bn, so segment boundaries land on block boundaries and a
-    block column never straddles two buffers.  Block columns sort ascending
-    within each block row, which orders slots on-process → on-node →
-    off-node — the overlap-friendly streaming order.
+    ``[v_loc(cols_pad) | b_on_node | b_off_node]`` with every segment
+    padded to a multiple of bn, so segment boundaries land on block
+    boundaries and a block column never straddles two buffers.  Block
+    columns sort ascending within each block row, which orders slots
+    on-process → on-node → off-node — the overlap-friendly streaming
+    order.  ``rows_pad`` (the row-partition output pad) and ``cols_pad``
+    (the column-partition v_loc pad) coincide only in the square case.
     """
-    vblk = _ceil_to(max(rows_pad, 1), bn)
+    vblk = _ceil_to(max(cols_pad, 1), bn)
     nblk = _ceil_to(max(bnode_pad, 1), bn)
     oblk = _ceil_to(max(boff_pad, 1), bn)
     n_cols = vblk + nblk + oblk
@@ -297,21 +381,21 @@ def _fused_bsr_arrays(blocks: List[LocalBlocks], rows_pad: int,
     return cols, data, layout
 
 
-def _fused_ell_arrays(blocks: List[LocalBlocks], rows_pad: int,
+def _fused_ell_arrays(blocks: List[LocalBlocks], rows_pad: int, cols_pad: int,
                       bnode_pad: int, boff_pad: int
                       ) -> Tuple[np.ndarray, np.ndarray, int]:
     """Emit each rank's three column blocks as one ELL over the packed x
-    domain ``[v_loc | b_on_node | b_off_node]`` (offsets rows_pad and
-    rows_pad + bnode_pad), stacked to a shared kmax across ranks."""
-    n_x = rows_pad + bnode_pad + boff_pad
+    domain ``[v_loc(cols_pad) | b_on_node | b_off_node]`` (offsets
+    cols_pad and cols_pad + bnode_pad), stacked to a shared kmax."""
+    n_x = cols_pad + bnode_pad + boff_pad
     per_rank: List[ELL] = []
     for blk in blocks:
         op_r, op_c, op_v = blk.on_proc.to_coo()
         on_r, on_c, on_v = blk.on_node.to_coo()
         off_r, off_c, off_v = blk.off_node.to_coo()
         rows = np.concatenate([op_r, on_r, off_r])
-        cols = np.concatenate([op_c, rows_pad + on_c,
-                               rows_pad + bnode_pad + off_c])
+        cols = np.concatenate([op_c, cols_pad + on_c,
+                               cols_pad + bnode_pad + off_c])
         vals = np.concatenate([op_v, on_v, off_v])
         per_rank.append(ELL.from_coo(rows, cols, vals, (rows_pad, n_x),
                                      n_rows_pad=rows_pad))
@@ -371,22 +455,49 @@ def _format_stats_from_coo(per_rank_rc: List[Tuple[np.ndarray, np.ndarray]],
     }
 
 
-def _autotune_stats(blocks: List[LocalBlocks], rows_pad: int, bnode_pad: int,
-                    boff_pad: int, nnz_pad_total: int,
+def _autotune_stats(blocks: List[LocalBlocks], rows_pad: int, cols_pad: int,
+                    bnode_pad: int, boff_pad: int, nnz_pad_total: int,
                     block_shape: Tuple[int, int],
                     tuner: LocalComputeParams) -> Dict[str, object]:
-    """NAP three-segment packed domain -> format stats + decision."""
+    """NAP three-segment packed domain -> format stats + decision,
+    for BOTH directions: the forward verdict at the top level and the
+    transpose verdict (over the reversed domain) under ``"transpose"``."""
     per_rank_rc = []
     for blk in blocks:
         parts = [blk.on_proc.to_coo(), blk.on_node.to_coo(),
                  blk.off_node.to_coo()]
-        offs = [0, rows_pad, rows_pad + bnode_pad]
+        offs = [0, cols_pad, cols_pad + bnode_pad]
         rows = np.concatenate([p[0] for p in parts])
         cols = np.concatenate([p[1] + o for p, o in zip(parts, offs)])
         per_rank_rc.append((rows, cols))
-    return _format_stats_from_coo(per_rank_rc, rows_pad,
-                                  rows_pad + bnode_pad + boff_pad,
-                                  nnz_pad_total, block_shape, tuner)
+    n_x = cols_pad + bnode_pad + boff_pad
+    out = _format_stats_from_coo(per_rank_rc, rows_pad, n_x,
+                                 nnz_pad_total, block_shape, tuner)
+    out["transpose"] = _transpose_format_stats(
+        [(c, r) for r, c in per_rank_rc], n_x, rows_pad, nnz_pad_total,
+        block_shape, tuner)
+    return out
+
+
+def _transpose_format_stats(per_rank_rc_t: List[Tuple[np.ndarray, np.ndarray]],
+                            out_len: int, n_x: int, nnz_pad_total: int,
+                            block_shape: Tuple[int, int],
+                            tuner: LocalComputeParams) -> Dict[str, object]:
+    """Format stats + verdict for the TRANSPOSED local compute.
+
+    The transpose program multiplies A_r^T (shape [packed contribution
+    domain, rows_pad]) against u_loc, so the roofline runs with the roles
+    swapped: output rows = the packed domain, x = the row-partition
+    shard.  Only ``ell`` and ``coo`` are candidates — there is no
+    transposed Pallas BSR kernel — so the verdict is the argmin of those
+    two (this is what ``op.T`` resolves ``local_compute="auto"`` to).
+    """
+    at = _format_stats_from_coo(per_rank_rc_t, out_len, n_x, nnz_pad_total,
+                                block_shape, tuner)
+    times = {f: at["times"][f] for f in ("ell", "coo")}
+    return {"chosen": min(times, key=lambda f: times[f]), "times": times,
+            "stats": at["stats"], "per_rank": at["per_rank"],
+            "tuner": tuner.name}
 
 
 def _stack_padded_bsr(per_rank: List[BSR]) -> Tuple[np.ndarray, np.ndarray, int]:
@@ -406,20 +517,34 @@ def compile_nap(a: CSR, part: RowPartition, topo: Topology,
                 plan: Optional[NAPPlan] = None,
                 block_shape: Tuple[int, int] = (8, 128),
                 cache: bool = True, local_compute: str = "auto",
-                tuner: LocalComputeParams = TPU_V5E_LOCAL) -> CompiledNAP:
+                tuner: LocalComputeParams = TPU_V5E_LOCAL,
+                col_part: Optional[RowPartition] = None) -> CompiledNAP:
+    """Compile the node-aware plan to static shard_map arrays.
+
+    ``part`` is the ROW partition (output layout); ``col_part`` the
+    COLUMN/x partition — defaults to ``part``, the square case.  A
+    rectangular ``a`` REQUIRES ``col_part`` (shapes are validated).
+    """
     if local_compute not in ("auto",) + LOCAL_FORMATS:
         raise ValueError(local_compute)
+    cpart = part if col_part is None else col_part
+    if part.n_rows != a.shape[0] or cpart.n_rows != a.shape[1]:
+        raise ValueError(
+            f"partition/matrix mismatch: a is {a.shape}, row partition has "
+            f"{part.n_rows} rows, column partition {cpart.n_rows}")
     key = None
     if plan is None and cache:
-        key = _cache_key(a, part, topo, block_shape, local_compute, tuner, "nap")
+        key = _cache_key(a, part, topo, block_shape, local_compute, tuner,
+                         "nap", col_part=col_part)
         hit = _cache_get(key)
         if hit is not None:
             return hit
     if plan is None:
-        plan = build_nap_plan(a.indptr, a.indices, part, topo, pairing="aligned")
+        plan = build_nap_plan(a.indptr, a.indices, part, topo,
+                              pairing="aligned", col_part=col_part)
     n_procs, ppn, n_nodes = topo.n_procs, topo.ppn, topo.n_nodes
-    blocks = split_all_blocks(a, part, topo)
-    local_index = part.local_index()
+    blocks = split_all_blocks(a, part, topo, col_part=cpart)
+    local_index = cpart.local_index()
     bn = block_shape[1]
     if bn % 8 != 0:
         raise ValueError(f"bn must be a multiple of the 8-wide sublane "
@@ -429,8 +554,11 @@ def compile_nap(a: CSR, part: RowPartition, topo: Topology,
     # one packed domain and the Pallas kernels gather them zero-copy (no
     # HBM pad/concat per call).  Padding slots beyond the true sizes are
     # never referenced by a nonzero, so the rounding is mathematically
-    # inert everywhere (incl. the COO path's segment_sum).
+    # inert everywhere (incl. the COO path's segment_sum).  rows_pad is
+    # the row-partition output pad, cols_pad the column-partition v_loc
+    # pad (identical in the square single-partition case).
     rows_pad = _ceil_to(max(1, int(part.counts().max())), bn)
+    cols_pad = _ceil_to(max(1, int(cpart.counts().max())), bn)
     bnode_pad = _ceil_to(max(1, max(b.on_node_cols.size for b in blocks)), bn)
     boff_pad = _ceil_to(max(1, max(b.off_node_cols.size for b in blocks)), bn)
 
@@ -480,12 +608,12 @@ def compile_nap(a: CSR, part: RowPartition, topo: Topology,
         init_map = plan.recv_slot_map(r, "init", init_pad)
         ig = np.zeros((n_nodes, inter_pad), dtype=np.int32)
         for m in plan.inter_sends[r]:
-            owners = part.owner[m.idx]
+            owners = cpart.owner[m.idx]
             own = owners == r
             pos = np.empty(m.size, dtype=np.int64)
             pos[own] = local_index[m.idx[own]]
             if not own.all():
-                pos[~own] = rows_pad + lookup_slots(init_map, m.idx[~own])
+                pos[~own] = cols_pad + lookup_slots(init_map, m.idx[~own])
             ig[topo.node_of(m.dst), : m.size] = pos
         inter_gather.append(ig)
 
@@ -535,10 +663,11 @@ def compile_nap(a: CSR, part: RowPartition, topo: Topology,
 
     pads = dict(full=full_pad, init=init_pad, inter=inter_pad, final=final_pad,
                 bnode=bnode_pad, boff=boff_pad, **{f"nnz_{k}": v for k, v in nnz_pads.items()})
-    autotune = _autotune_stats(blocks, rows_pad, bnode_pad, boff_pad,
+    autotune = _autotune_stats(blocks, rows_pad, cols_pad, bnode_pad, boff_pad,
                                sum(nnz_pads.values()), tuple(block_shape),
                                tuner)
-    compiled = CompiledNAP(topo=topo, part=part, rows_pad=rows_pad, pads=pads,
+    compiled = CompiledNAP(topo=topo, part=part, col_part=cpart,
+                           rows_pad=rows_pad, cols_pad=cols_pad, pads=pads,
                            arrays=arrays, plan=plan,
                            block_shape=tuple(block_shape),
                            local_blocks=blocks, autotune=autotune,
@@ -553,7 +682,13 @@ def compile_nap(a: CSR, part: RowPartition, topo: Topology,
 # ---------------------------------------------------------------------------
 
 def pack_vector(v: np.ndarray, part: RowPartition, topo: Topology, rows_pad: int) -> np.ndarray:
-    """Global vector/multivector -> [n_nodes, ppn, rows_pad(, nv)] shards."""
+    """Global vector/multivector -> [n_nodes, ppn, rows_pad(, nv)] shards.
+
+    ``part`` is whichever partition owns ``v``: the COLUMN partition with
+    ``rows_pad=compiled.cols_pad`` for a forward operand, the ROW
+    partition with ``compiled.rows_pad`` for a transpose operand.  Empty
+    ranks simply contribute all-zero shards.
+    """
     v = np.asarray(v)
     out = np.zeros((topo.n_procs, rows_pad) + v.shape[1:], dtype=np.float32)
     for r in range(topo.n_procs):
@@ -563,7 +698,14 @@ def pack_vector(v: np.ndarray, part: RowPartition, topo: Topology, rows_pad: int
 
 
 def unpack_vector(w: np.ndarray, part: RowPartition, topo: Topology) -> np.ndarray:
-    """[n_nodes, ppn, rows_pad(, nv)] -> global vector/multivector."""
+    """[n_nodes, ppn, pad(, nv)] -> global vector/multivector.
+
+    ``part`` is whichever partition owns the RESULT (row partition after
+    a forward apply, column partition after a transpose); per-rank slots
+    beyond the rank's count are padding and ignored.  Exact inverse of
+    :func:`pack_vector` under the same partition, for any pad ≥ the max
+    rank count — empty ranks and uneven m≠n tails round-trip bit-for-bit.
+    """
     w = np.asarray(w)
     w = w.reshape((topo.n_procs, -1) + w.shape[3:] if w.ndim == 4
                   else (topo.n_procs, -1))
@@ -612,8 +754,10 @@ def nap_forward_shardmap(compiled: CompiledNAP, mesh: Mesh,
                          interpret: bool = True, materialize_x: bool = False):
     """Build the jitted shard_map NAPSpMV: f(v_shards) -> w_shards.
 
-    ``v_shards`` is [n_nodes, ppn, rows_pad] or [n_nodes, ppn, rows_pad, nv]
-    (multi-RHS SpMM); the output matches.  ``local_compute`` selects the
+    ``v_shards`` is [n_nodes, ppn, cols_pad] or [n_nodes, ppn, cols_pad, nv]
+    (multi-RHS SpMM) — COLUMN-partition packed; the output is ROW-partition
+    packed [n_nodes, ppn, rows_pad(, nv)] (identical shapes in the square
+    single-partition case).  ``local_compute`` selects the
     local kernel: ``"auto"`` (default) defers to the compile-time format
     autotuner, ``"bsr"`` / ``"ell"`` force the fused Pallas kernels and
     ``"coo"`` the scalar segment_sum reference.  The resolved format is
@@ -719,24 +863,35 @@ def nap_forward_shardmap(compiled: CompiledNAP, mesh: Mesh,
 
 
 def nap_transpose_shardmap(compiled: CompiledNAP, mesh: Mesh,
-                           nv_block: int = 128, interpret: bool = True):
+                           local_compute: str = "auto", nv_block: int = 128,
+                           interpret: bool = True):
     """Build the jitted shard_map transpose NAPSpMV: f(u_shards) -> z_shards
     with ``z = A.T u`` — the exact adjoint of :func:`nap_forward_shardmap`.
 
+    ``u_shards`` is ROW-partition packed ([.., rows_pad(, nv)]); the
+    output is COLUMN-partition packed ([.., cols_pad(, nv)]) — for the
+    square single-partition case the two coincide and this is invisible.
+
     The forward program is reversed operation by operation: the three
     local_spmv blocks run transposed first (producing per-buffer
-    contribution vectors via ``segment_sum`` over the COO column maps),
-    then each communication phase runs backwards — final, inter, init,
-    full — with every forward gather map reused as a scatter-add map and
-    every ``all_to_all`` re-applied (a tiled all_to_all is an involution
-    and its own adjoint).  Local compute is the COO/segment_sum reference
-    path; transposed Pallas kernels are future work (the open roadmap
-    item), so ``run.local_compute == "coo"`` always and ``nv_block`` /
-    ``interpret`` are accepted only for signature parity with the forward
-    builder — reserved for those kernels, ignored today.
+    contribution vectors), then each communication phase runs backwards —
+    final, inter, init, full — with every forward gather map reused as a
+    scatter-add map and every ``all_to_all`` re-applied (a tiled
+    all_to_all is an involution and its own adjoint).
+
+    Transposed local compute runs through the adaptive engine like the
+    forward direction: ``"auto"`` resolves against the transpose verdict
+    recorded on ``compiled.autotune["transpose"]`` (argmin of ell/coo —
+    there is no transposed Pallas BSR kernel, so a ``"bsr"`` request also
+    defers to that verdict).  ``"ell"`` runs A_r^T as ONE Pallas ELL SpMM
+    over the packed contribution domain ``[z | c_on_node | c_off_node]``;
+    ``"coo"`` is the scalar segment_sum scatter reference.
     """
+    fmt = compiled.resolve_transpose_local_compute(local_compute)
+    if fmt == "ell":
+        compiled.ensure_ell_t()
     topo = compiled.topo
-    rows_pad = compiled.rows_pad
+    rows_pad, cols_pad = compiled.rows_pad, compiled.cols_pad
     pads = compiled.pads
     nn, ppn = topo.n_nodes, topo.ppn
     full_pad, init_pad = pads["full"], pads["init"]
@@ -744,30 +899,34 @@ def nap_transpose_shardmap(compiled: CompiledNAP, mesh: Mesh,
     bnode_pad, boff_pad = pads["bnode"], pads["boff"]
 
     def per_device(u_loc, full_send, init_send, final_send, inter_gather,
-                   bnode_gather, boff_gather,
-                   on_proc_rows, on_proc_cols, on_proc_vals,
-                   on_node_rows, on_node_cols, on_node_vals,
-                   off_node_rows, off_node_cols, off_node_vals):
+                   bnode_gather, boff_gather, *tail):
         squeeze = lambda x: x.reshape(x.shape[2:])
-        args = map(squeeze, (u_loc, full_send, init_send, final_send,
-                             inter_gather, bnode_gather, boff_gather,
-                             on_proc_rows, on_proc_cols, on_proc_vals,
-                             on_node_rows, on_node_cols, on_node_vals,
-                             off_node_rows, off_node_cols, off_node_vals))
-        (u_loc, full_send, init_send, final_send, inter_gather, bnode_gather,
-         boff_gather, on_proc_rows, on_proc_cols, on_proc_vals, on_node_rows,
-         on_node_cols, on_node_vals, off_node_rows, off_node_cols,
-         off_node_vals) = args
+        u_loc = squeeze(u_loc)                              # [rows_pad, nv]
+        (full_send, init_send, final_send, inter_gather, bnode_gather,
+         boff_gather) = map(squeeze, (full_send, init_send, final_send,
+                                      inter_gather, bnode_gather, boff_gather))
+        tail = tuple(map(squeeze, tail))
         nv = u_loc.shape[-1]
 
         # -- transposed local_spmv blocks: rows index u, cols index the
-        #    output domain of each block (local rows / buffer slots).
-        z = segment_sum(on_proc_vals[:, None] * u_loc[on_proc_rows],
-                        on_proc_cols, num_segments=rows_pad)
-        c_node = segment_sum(on_node_vals[:, None] * u_loc[on_node_rows],
-                             on_node_cols, num_segments=bnode_pad)
-        c_off = segment_sum(off_node_vals[:, None] * u_loc[off_node_rows],
-                            off_node_cols, num_segments=boff_pad)
+        #    output domain of each block (local x rows / buffer slots).
+        if fmt == "ell":
+            ell_t_cols, ell_t_vals = tail
+            contrib = ell_spmm_packed(ell_t_cols, ell_t_vals, (u_loc,),
+                                      nv_block=nv_block, interpret=interpret)
+            z = contrib[:cols_pad]
+            c_node = contrib[cols_pad: cols_pad + bnode_pad]
+            c_off = contrib[cols_pad + bnode_pad:]
+        else:
+            (on_proc_rows, on_proc_cols, on_proc_vals,
+             on_node_rows, on_node_cols, on_node_vals,
+             off_node_rows, off_node_cols, off_node_vals) = tail
+            z = segment_sum(on_proc_vals[:, None] * u_loc[on_proc_rows],
+                            on_proc_cols, num_segments=cols_pad)
+            c_node = segment_sum(on_node_vals[:, None] * u_loc[on_node_rows],
+                                 on_node_cols, num_segments=bnode_pad)
+            c_off = segment_sum(off_node_vals[:, None] * u_loc[off_node_rows],
+                                off_node_cols, num_segments=boff_pad)
 
         # -- reverse of boff = concat(inter_flat, final_recv_flat)[boff_gather]
         comb = segment_sum(c_off, boff_gather,
@@ -787,14 +946,14 @@ def nap_transpose_shardmap(compiled: CompiledNAP, mesh: Mesh,
                                          "node", 0, 0, tiled=True)
         staged_c = segment_sum(inter_out_c.reshape(-1, nv),
                                inter_gather.reshape(-1),
-                               num_segments=rows_pad + ppn * init_pad)
-        z = z + staged_c[:rows_pad]
+                               num_segments=cols_pad + ppn * init_pad)
+        z = z + staged_c[:cols_pad]
 
         # -- reverse phase B: init redistribution back to the owners
-        init_recv_c = staged_c[rows_pad:].reshape(ppn, init_pad, nv)
+        init_recv_c = staged_c[cols_pad:].reshape(ppn, init_pad, nv)
         init_out_c = jax.lax.all_to_all(init_recv_c, "proc", 0, 0, tiled=True)
         z = z + segment_sum(init_out_c.reshape(-1, nv),
-                            init_send.reshape(-1), num_segments=rows_pad)
+                            init_send.reshape(-1), num_segments=cols_pad)
 
         # -- reverse phase A: on-node buffer contributions back to owners
         full_recv_c = segment_sum(c_node, bnode_gather,
@@ -802,15 +961,18 @@ def nap_transpose_shardmap(compiled: CompiledNAP, mesh: Mesh,
         full_out_c = jax.lax.all_to_all(full_recv_c.reshape(ppn, full_pad, nv),
                                         "proc", 0, 0, tiled=True)
         z = z + segment_sum(full_out_c.reshape(-1, nv),
-                            full_send.reshape(-1), num_segments=rows_pad)
-        return z.reshape(1, 1, rows_pad, -1)
+                            full_send.reshape(-1), num_segments=cols_pad)
+        return z.reshape(1, 1, cols_pad, -1)
 
     dev = compiled.device_arrays()
     names = ["full_send", "init_send", "final_send", "inter_gather",
-             "bnode_gather", "boff_gather",
-             "on_proc_rows", "on_proc_cols", "on_proc_vals",
-             "on_node_rows", "on_node_cols", "on_node_vals",
-             "off_node_rows", "off_node_cols", "off_node_vals"]
+             "bnode_gather", "boff_gather"]
+    if fmt == "ell":
+        names += ["ell_t_cols", "ell_t_vals"]
+    else:
+        names += ["on_proc_rows", "on_proc_cols", "on_proc_vals",
+                  "on_node_rows", "on_node_cols", "on_node_vals",
+                  "off_node_rows", "off_node_cols", "off_node_vals"]
     spec = P("node", "proc")
     smapped = shard_map(per_device, mesh=mesh,
                         in_specs=(spec,) * (1 + len(names)), out_specs=spec,
@@ -819,7 +981,7 @@ def nap_transpose_shardmap(compiled: CompiledNAP, mesh: Mesh,
     def call4(u_shards):
         return smapped(u_shards, *[dev[k] for k in names])
 
-    return _make_run(call4, "coo")
+    return _make_run(call4, fmt)
 
 
 # ---------------------------------------------------------------------------
@@ -830,11 +992,12 @@ def nap_transpose_shardmap(compiled: CompiledNAP, mesh: Mesh,
 class CompiledStandard:
     """Static arrays for the shard_map standard (Alg. 1) SpMV.
 
-    The packed x domain is two-segment: ``[0, rows_pad) = v_loc`` and
-    ``[rows_pad, rows_pad + buf_pad)`` the single off-process recv buffer,
-    both bn-aligned (zero-copy kernel domain).  Format arrays (COO / ELL /
-    fused BSR over that domain) emit lazily from ``per_rank_coo``, exactly
-    like :class:`CompiledNAP`'s.
+    The packed x domain is two-segment: ``[0, cols_pad) = v_loc`` (the
+    COLUMN-partition shard) and ``[cols_pad, cols_pad + buf_pad)`` the
+    single off-process recv buffer, both bn-aligned (zero-copy kernel
+    domain); the output is ``rows_pad`` ROW-partition rows.  Format
+    arrays (COO / ELL / fused BSR over that domain) emit lazily from
+    ``per_rank_coo``, exactly like :class:`CompiledNAP`'s.
     """
 
     topo: Topology
@@ -846,15 +1009,24 @@ class CompiledStandard:
     block_shape: Tuple[int, int]
     arrays: Dict[str, np.ndarray]          # send_idx, buf_gather + lazy fmts
     per_rank_coo: List[Tuple[np.ndarray, np.ndarray, np.ndarray]]
+    col_part: Optional[RowPartition] = None  # None = square (col == row)
+    cols_pad: int = 0                        # 0 = square (== rows_pad)
     plan: Optional[StandardPlan] = None
     autotune: Dict[str, object] = dataclasses.field(default_factory=dict)
     requested_local_compute: str = "auto"
+    ell_t_kmax: int = 0
     _dev_cache: Dict[str, jnp.ndarray] = dataclasses.field(
         default_factory=dict, repr=False, compare=False)
 
+    def __post_init__(self) -> None:
+        if self.col_part is None:
+            self.col_part = self.part
+        if not self.cols_pad:
+            self.cols_pad = self.rows_pad
+
     @property
     def n_x(self) -> int:
-        return self.rows_pad + self.buf_pad
+        return self.cols_pad + self.buf_pad
 
     @property
     def packed_x_len(self) -> int:
@@ -867,6 +1039,11 @@ class CompiledStandard:
     def resolve_local_compute(self, requested: str) -> str:
         return _resolve_local_compute(requested, self.requested_local_compute,
                                       self.chosen_local_compute)
+
+    def resolve_transpose_local_compute(self, requested: str) -> str:
+        """See :meth:`CompiledNAP.resolve_transpose_local_compute`."""
+        return _resolve_transpose_local_compute(
+            requested, self.requested_local_compute, self.autotune)
 
     def ensure_coo(self) -> None:
         if "A_rows" in self.arrays:
@@ -891,6 +1068,19 @@ class CompiledStandard:
         self.arrays["ell_cols"] = e_cols
         self.arrays["ell_vals"] = e_vals
 
+    def ensure_ell_t(self) -> None:
+        """Transposed ELL over the packed contribution domain
+        ``[z(cols_pad) | buf]`` with x = u_loc (rows_pad)."""
+        if "ell_t_cols" in self.arrays:
+            return
+        e_cols, e_vals, kmax = stack_ell([
+            ELL.from_coo(cc, rr, vv, (self.n_x, self.rows_pad),
+                         n_rows_pad=self.n_x)
+            for rr, cc, vv in self.per_rank_coo])
+        self.arrays["ell_t_cols"] = e_cols
+        self.arrays["ell_t_vals"] = e_vals
+        self.ell_t_kmax = kmax
+
     def ensure_fused(self) -> None:
         if "fused_cols" in self.arrays:
             return
@@ -910,29 +1100,42 @@ def compile_standard(a: CSR, part: RowPartition, topo: Topology,
                      plan: Optional[StandardPlan] = None,
                      block_shape: Tuple[int, int] = (8, 128),
                      cache: bool = True, local_compute: str = "auto",
-                     tuner: LocalComputeParams = TPU_V5E_LOCAL) -> CompiledStandard:
-    """Compile Algorithm 1's flat plan into static shard_map arrays."""
+                     tuner: LocalComputeParams = TPU_V5E_LOCAL,
+                     col_part: Optional[RowPartition] = None) -> CompiledStandard:
+    """Compile Algorithm 1's flat plan into static shard_map arrays.
+
+    ``part`` is the ROW partition, ``col_part`` the COLUMN/x partition
+    (defaults to ``part`` — the square case; see :func:`compile_nap`).
+    """
     if local_compute not in ("auto",) + LOCAL_FORMATS:
         raise ValueError(local_compute)
+    cpart = part if col_part is None else col_part
+    if part.n_rows != a.shape[0] or cpart.n_rows != a.shape[1]:
+        raise ValueError(
+            f"partition/matrix mismatch: a is {a.shape}, row partition has "
+            f"{part.n_rows} rows, column partition {cpart.n_rows}")
     key = None
     if plan is None and cache:
         key = _cache_key(a, part, topo, block_shape, local_compute, tuner,
-                         "standard")
+                         "standard", col_part=col_part)
         hit = _cache_get(key)
         if hit is not None:
             return hit
     if plan is None:
-        plan = build_standard_plan(a.indptr, a.indices, part, topo)
+        plan = build_standard_plan(a.indptr, a.indices, part, topo,
+                                   col_part=col_part)
     n_procs = topo.n_procs
-    blocks = split_all_blocks(a, part, topo)
-    local_index = part.local_index()
+    blocks = split_all_blocks(a, part, topo, col_part=cpart)
+    local_index = cpart.local_index()
     bm, bn = block_shape
     if bn % 8 != 0:
         raise ValueError(f"bn must be a multiple of the 8-wide sublane "
                          f"tile, got {bn}")
-    # bn-aligned segments: [0, rows_pad) = v_loc, [rows_pad, rows_pad+buf_pad)
-    # = the single off-process recv buffer (zero-copy kernel domain).
+    # bn-aligned segments: [0, cols_pad) = v_loc (column-partition shard),
+    # [cols_pad, cols_pad+buf_pad) = the single off-process recv buffer
+    # (zero-copy kernel domain); rows_pad is the row-partition output pad.
     rows_pad = _ceil_to(max(1, int(part.counts().max())), bn)
+    cols_pad = _ceil_to(max(1, int(cpart.counts().max())), bn)
     buf_pad = _ceil_to(
         max(1, max(b.on_node_cols.size + b.off_node_cols.size for b in blocks)),
         bn)
@@ -947,7 +1150,7 @@ def compile_standard(a: CSR, part: RowPartition, topo: Topology,
                          for b in blocks))
 
     # --- packed two-segment domain [v_loc | buf] + format decision --------
-    n_x = rows_pad + buf_pad
+    n_x = cols_pad + buf_pad
     per_rank_coo = []
     buf_gather = np.zeros((n_procs, buf_pad), dtype=np.int32)
     for r in range(n_procs):
@@ -959,15 +1162,19 @@ def compile_standard(a: CSR, part: RowPartition, topo: Topology,
         rr1, cc1, vv1 = blk.on_node.to_coo()
         rr2, cc2, vv2 = blk.off_node.to_coo()
         rr = np.concatenate([rr0, rr1, rr2])
-        cc = np.concatenate([cc0, rows_pad + cc1,
-                             rows_pad + blk.on_node_cols.size + cc2])
+        cc = np.concatenate([cc0, cols_pad + cc1,
+                             cols_pad + blk.on_node_cols.size + cc2])
         vv = np.concatenate([vv0, vv1, vv2])
         per_rank_coo.append((rr, cc, vv))
     autotune = _format_stats_from_coo(
         [(rr, cc) for rr, cc, _ in per_rank_coo], rows_pad, n_x,
         nnz_pad, (bm, bn), tuner)
+    autotune["transpose"] = _transpose_format_stats(
+        [(cc, rr) for rr, cc, _ in per_rank_coo], n_x, rows_pad,
+        nnz_pad, (bm, bn), tuner)
     compiled = CompiledStandard(
-        topo=topo, part=part, rows_pad=rows_pad, buf_pad=buf_pad,
+        topo=topo, part=part, col_part=cpart, rows_pad=rows_pad,
+        cols_pad=cols_pad, buf_pad=buf_pad,
         pair_pad=pair_pad, nnz_pad=nnz_pad, block_shape=tuple(block_shape),
         arrays=dict(send_idx=send_idx, buf_gather=buf_gather),
         per_rank_coo=per_rank_coo, plan=plan, autotune=autotune,
@@ -1046,45 +1253,61 @@ def standard_forward_shardmap(compiled: CompiledStandard, mesh: Mesh,
 
 
 def standard_transpose_shardmap(compiled: CompiledStandard, mesh: Mesh,
+                                local_compute: str = "auto",
                                 nv_block: int = 128, interpret: bool = True):
     """Transpose of Algorithm 1 against the same compiled plan:
     f(u_shards) -> z_shards with ``z = A.T u``.
 
-    Reverse of :func:`standard_forward_shardmap`: the local SpMV runs
-    transposed over the packed two-segment domain, buffer contributions
-    scatter back through ``buf_gather`` into the recv layout, the flat
-    all_to_all re-applies (its own adjoint), and ``send_idx`` scatters the
-    returned contributions into the owners' rows.  COO local compute;
-    ``nv_block`` / ``interpret`` are reserved for future transposed Pallas
-    kernels and ignored today (signature parity with the forward builder).
+    ``u_shards`` is ROW-partition packed; the output COLUMN-partition
+    packed ([.., cols_pad(, nv)]).  Reverse of
+    :func:`standard_forward_shardmap`: the local SpMV runs transposed
+    over the packed two-segment domain, buffer contributions scatter back
+    through ``buf_gather`` into the recv layout, the flat all_to_all
+    re-applies (its own adjoint), and ``send_idx`` scatters the returned
+    contributions into the owners' rows.  Transposed local compute runs
+    the adaptive engine restricted to ell/coo — ``"auto"`` resolves
+    against ``compiled.autotune["transpose"]``, ``"ell"`` runs one Pallas
+    ELL SpMM of A_r^T over the packed contribution domain.
     """
-    compiled.ensure_coo()
+    fmt = compiled.resolve_transpose_local_compute(local_compute)
+    if fmt == "ell":
+        compiled.ensure_ell_t()
+    else:
+        compiled.ensure_coo()
     topo = compiled.topo
-    rows_pad, buf_pad = compiled.rows_pad, compiled.buf_pad
+    rows_pad, cols_pad = compiled.rows_pad, compiled.cols_pad
     pair_pad, n_x = compiled.pair_pad, compiled.n_x
     n_procs = topo.n_procs
 
-    def per_device(u_loc, send_idx, buf_gather, A_rows, A_cols, A_vals):
+    def per_device(u_loc, send_idx, buf_gather, *tail):
         squeeze = lambda x: x.reshape(x.shape[2:])
-        (u_loc, send_idx, buf_gather, A_rows, A_cols, A_vals) = map(
-            squeeze, (u_loc, send_idx, buf_gather, A_rows, A_cols, A_vals))
+        u_loc, send_idx, buf_gather = map(squeeze, (u_loc, send_idx, buf_gather))
+        tail = tuple(map(squeeze, tail))
         nv = u_loc.shape[-1]
         # transposed local SpMV over the packed domain [v_loc | buf]
-        c = segment_sum(A_vals[:, None] * u_loc[A_rows], A_cols,
-                        num_segments=n_x)
-        z = c[:rows_pad]
+        if fmt == "ell":
+            ell_t_cols, ell_t_vals = tail
+            c = ell_spmm_packed(ell_t_cols, ell_t_vals, (u_loc,),
+                                nv_block=nv_block, interpret=interpret)
+        else:
+            A_rows, A_cols, A_vals = tail
+            c = segment_sum(A_vals[:, None] * u_loc[A_rows], A_cols,
+                            num_segments=n_x)
+        z = c[:cols_pad]
         # reverse of buf = recv.reshape(-1)[buf_gather]
-        recv_c = segment_sum(c[rows_pad:], buf_gather,
+        recv_c = segment_sum(c[cols_pad:], buf_gather,
                              num_segments=n_procs * pair_pad)
         out_c = jax.lax.all_to_all(recv_c.reshape(n_procs, pair_pad, nv),
                                    ("node", "proc"), 0, 0, tiled=True)
         # reverse of out = v_loc[send_idx]
         z = z + segment_sum(out_c.reshape(-1, nv), send_idx.reshape(-1),
-                            num_segments=rows_pad)
-        return z.reshape(1, 1, rows_pad, -1)
+                            num_segments=cols_pad)
+        return z.reshape(1, 1, cols_pad, -1)
 
     dev = compiled.device_arrays()
-    names = ["send_idx", "buf_gather", "A_rows", "A_cols", "A_vals"]
+    names = ["send_idx", "buf_gather"]
+    names += (["ell_t_cols", "ell_t_vals"] if fmt == "ell"
+              else ["A_rows", "A_cols", "A_vals"])
     spec = P("node", "proc")
     smapped = shard_map(per_device, mesh=mesh,
                         in_specs=(spec,) * (1 + len(names)), out_specs=spec,
@@ -1093,47 +1316,7 @@ def standard_transpose_shardmap(compiled: CompiledStandard, mesh: Mesh,
     def call4(u_shards):
         return smapped(u_shards, *[dev[k] for k in names])
 
-    return _make_run(call4, "coo")
-
-
-# ---------------------------------------------------------------------------
-# Deprecation shims (one release; see kernels/README.md migration table)
-# ---------------------------------------------------------------------------
-
-def nap_spmv_shardmap(compiled: CompiledNAP, mesh: Mesh,
-                      local_compute: str = "auto", nv_block: int = 128,
-                      interpret: bool = True, materialize_x: bool = False):
-    """Deprecated alias of :func:`nap_forward_shardmap`."""
-    warn_once("repro.core.spmv_jax.nap_spmv_shardmap",
-              "repro.api.operator(a, method='nap', backend='shardmap') "
-              "or nap_forward_shardmap")
-    return nap_forward_shardmap(compiled, mesh, local_compute=local_compute,
-                                nv_block=nv_block, interpret=interpret,
-                                materialize_x=materialize_x)
-
-
-def standard_spmv_shardmap(a: CSR, part: RowPartition, topo: Topology, mesh: Mesh,
-                           plan: Optional[StandardPlan] = None,
-                           local_compute: str = "auto",
-                           block_shape: Tuple[int, int] = (8, 128),
-                           nv_block: int = 128, interpret: bool = True,
-                           materialize_x: bool = False,
-                           tuner: LocalComputeParams = TPU_V5E_LOCAL):
-    """Deprecated: compile-and-build in one call, returns ``(run, rows_pad)``.
-
-    Use :func:`repro.api.operator(a, method="standard")` or the split
-    :func:`compile_standard` + :func:`standard_forward_shardmap` pair.
-    """
-    warn_once("repro.core.spmv_jax.standard_spmv_shardmap",
-              "repro.api.operator(a, method='standard', backend='shardmap') "
-              "or compile_standard + standard_forward_shardmap")
-    compiled = compile_standard(a, part, topo, plan=plan,
-                                block_shape=block_shape,
-                                local_compute=local_compute, tuner=tuner)
-    run = standard_forward_shardmap(compiled, mesh, nv_block=nv_block,
-                                    interpret=interpret,
-                                    materialize_x=materialize_x)
-    return run, compiled.rows_pad
+    return _make_run(call4, fmt)
 
 
 # ---------------------------------------------------------------------------

@@ -51,11 +51,15 @@ def test_operator_structure():
     assert op.shape == a.shape and op.method == "nap"
     assert op.T.T is op and op.T.transposed and not op.transposed
     assert "NapOperator" in repr(op) and ".T" in repr(op.T)
+    # square sugar: both partitions are the same object, swapped by .T
+    assert op.row_part is part and op.col_part is part
+    assert op.T.domain_part is op.range_part
     # stats/cost/autotune surfaces exist on every backend
     s = op.stats()
     assert s["messages_inter"].total_bytes >= 0
     assert op.cost(BLUE_WATERS)["total"] >= 0
-    assert "resolved" in op.autotune_report()
+    rep = op.autotune_report()
+    assert "resolved" in rep and "transpose_resolved" in rep
     # the simulate backend computes both directions in exact numpy
     assert op.T.local_compute == op.local_compute == "numpy"
     # matvec alias and __call__ agree
@@ -68,17 +72,72 @@ def test_operator_validation():
     a = random_fixed_nnz(16, 3, seed=0)
     with pytest.raises(ValueError, match="available"):
         nap.operator(a, topo=topo, backend="no-such-backend")
+    from repro.core.partition import contiguous_partition
+    from repro.sparse.csr import CSR
+    rect = CSR.from_dense(np.ones((4, 6)))
+    # part= is square-only sugar; rectangular needs row_part/col_part
     with pytest.raises(ValueError, match="square"):
-        from repro.sparse.csr import CSR
-        nap.operator(CSR.from_dense(np.ones((4, 6))), topo=topo)
+        nap.operator(rect, topo=topo, part=contiguous_partition(4, 2))
+    with pytest.raises(ValueError, match="not both"):
+        nap.operator(a, topo=topo, part=contiguous_partition(16, 2),
+                     row_part=contiguous_partition(16, 2))
+    with pytest.raises(ValueError, match="mismatch"):
+        nap.operator(rect, topo=topo,
+                     row_part=contiguous_partition(6, 2),
+                     col_part=contiguous_partition(6, 2))
+    # a rectangular matrix WITHOUT part= builds on default partitions
+    op_r = nap.operator(rect, topo=topo, backend="simulate")
+    assert op_r.shape == (4, 6) and op_r.T.shape == (6, 4)
     op = nap.operator(a, topo=topo, backend="simulate")
     with pytest.raises(ValueError, match="operand"):
         op @ np.ones(7)
+    with pytest.raises(ValueError, match="operand"):
+        op_r @ np.ones(4)       # forward operand is [n]=6, not [m]=4
     with pytest.raises(ValueError, match="precision"):
         op(np.ones(16), precision="bf16")
     with pytest.raises(ValueError, match="aligned"):
         nap.operator(a, topo=topo, backend="shardmap", pairing="balanced")
     assert op(np.ones(16), precision="float32").dtype == np.float32
+
+
+def test_rectangular_and_composition_simulate():
+    """[m, n] operators with independent partitions + lazy (R @ A @ P)."""
+    topo = Topology(n_nodes=2, ppn=2)
+    rng = np.random.default_rng(5)
+    m, n = 48, 20
+    from repro.core.partition import contiguous_partition
+    from repro.sparse.csr import CSR
+    am = (rng.random((m, m)) < 0.2) * rng.standard_normal((m, m))
+    pm = (rng.random((m, n)) < 0.3) * rng.standard_normal((m, n))
+    fine = contiguous_partition(m, topo.n_procs)
+    coarse = contiguous_partition(n, topo.n_procs)
+    a_op = nap.operator(CSR.from_dense(am), topo=topo, part=fine,
+                        backend="simulate")
+    p_op = nap.operator(CSR.from_dense(pm), topo=topo, row_part=fine,
+                        col_part=coarse, backend="simulate")
+    x, u = rng.standard_normal(n), rng.standard_normal(m)
+    np.testing.assert_allclose(p_op @ x, pm @ x, rtol=1e-9, atol=1e-12)
+    np.testing.assert_allclose(p_op.T @ u, pm.T @ u, rtol=1e-9, atol=1e-12)
+    gal = p_op.T @ a_op @ p_op
+    assert isinstance(gal, nap.ComposedOperator)
+    assert gal.shape == (n, n) and len(gal.factors) == 3
+    np.testing.assert_allclose(gal @ x, pm.T @ (am @ (pm @ x)),
+                               rtol=1e-9, atol=1e-10)
+    # transpose distributes in reverse; per-stage introspection rolls up
+    np.testing.assert_allclose(gal.T @ x, (pm.T @ am.T @ pm) @ x,
+                               rtol=1e-9, atol=1e-10)
+    cost = gal.cost(BLUE_WATERS)
+    assert len(cost["stages"]) == 3 and len(gal.stats()) == 3
+    assert cost["total"] >= max(s["total"] for s in cost["stages"])
+    # incompatible interface partitions are rejected at compose time
+    from repro.core.partition import strided_partition
+    p_bad = nap.operator(CSR.from_dense(pm), topo=topo,
+                         row_part=strided_partition(m, topo.n_procs),
+                         col_part=coarse, backend="simulate")
+    with pytest.raises(ValueError, match="[Ii]ncompatible"):
+        a_op @ p_bad
+    with pytest.raises(ValueError, match="chain"):
+        p_op @ a_op  # (m, n) @ (m, m) does not chain
 
 
 def test_registry_pluggable():
@@ -90,7 +149,7 @@ def test_registry_pluggable():
 
     @register_executor("dummy", "nap")
     class DummyExec:
-        def __init__(self, a, part, topo, spec, mesh=None):
+        def __init__(self, a, row_part, col_part, topo, spec, mesh=None):
             self.a = a
 
         def forward(self, v, donate=False):
@@ -114,21 +173,31 @@ def test_registry_pluggable():
 
 
 def test_amg_vcycle_through_operators():
-    """amg_vcycle(..., operators=...) runs every level through NapOperator."""
-    from repro.amg import (amg_vcycle, cg_solve, level_operators,
-                          smoothed_aggregation_hierarchy)
+    """amg_vcycle(..., operators=...) runs every level — A AND the P/R
+    grid transfers — through NapOperators (restriction = P.T)."""
+    from repro.amg import (LevelOperators, amg_vcycle, cg_solve,
+                           level_operators, smoothed_aggregation_hierarchy)
 
     a = rotated_anisotropic_2d(16, eps=0.1)
     topo = Topology(n_nodes=2, ppn=2)
     levels = smoothed_aggregation_hierarchy(a, theta=0.1, coarse_size=32)
     ops = level_operators(levels, topo, method="nap", backend="simulate")
-    assert ops[0] is not None
+    assert isinstance(ops[0], LevelOperators) and ops[0].a is not None
+    # the hierarchy is distributed: P is rectangular, R its transpose view
+    assert ops[0].p is not None and ops[0].p.shape == levels[0].p.shape
+    assert ops[0].r.transposed and ops[0].r.shape == ops[0].p.shape[::-1]
+    # Galerkin composition matches the host-side RAP coarse matrix
+    gal = ops[0].galerkin()
+    if gal is not None:
+        xc = np.random.default_rng(7).standard_normal(gal.shape[1])
+        np.testing.assert_allclose(gal @ xc, levels[1].a.matvec(xc),
+                                   rtol=1e-8, atol=1e-9)
     rng = np.random.default_rng(0)
     b = rng.standard_normal(a.shape[0])
     x, iters, rel = cg_solve(
         a, b, tol=1e-8, maxiter=200,
         precond=lambda r: amg_vcycle(levels, r, operators=ops),
-        spmv=ops[0])
+        spmv=ops[0].a)
     assert rel < 1e-8, (iters, rel)
 
 
@@ -171,6 +240,24 @@ def test_operator_shardmap_8dev():
     proc = subprocess.run(
         [sys.executable,
          str(ROOT / "tests" / "multidev" / "operator_prog.py")],
+        capture_output=True, text=True, env=env, timeout=600)
+    assert proc.returncode == 0, \
+        f"stdout:\n{proc.stdout}\nstderr:\n{proc.stderr}"
+    assert "ALL OK" in proc.stdout
+
+
+@pytest.mark.multidev
+def test_rect_operator_shardmap_8dev():
+    """Rectangular operator + composed-AMG sweep on a forced 8-device host
+    platform: tall/wide/empty-rank shapes, (R @ A @ P) vs scipy, and the
+    V-cycle whose every restriction runs through the node-aware transpose
+    executor (asserted inside the program)."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(ROOT / "src")
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run(
+        [sys.executable,
+         str(ROOT / "tests" / "multidev" / "rect_operator_prog.py")],
         capture_output=True, text=True, env=env, timeout=600)
     assert proc.returncode == 0, \
         f"stdout:\n{proc.stdout}\nstderr:\n{proc.stderr}"

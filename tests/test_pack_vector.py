@@ -80,6 +80,46 @@ def test_bn_aligned_padding_roundtrip(bn):
         assert (flat[r, int(part.counts()[r]):] == 0).all()
 
 
+def test_rectangular_row_and_col_partitions_roundtrip():
+    """m != n: the forward pack uses the COLUMN partition (n entries,
+    cols_pad) while the output unpacks by the ROW partition (m entries,
+    rows_pad) — both sides must round-trip bit-for-bit with their own
+    partition, including the uneven tails two different sizes produce."""
+    topo = Topology(n_nodes=2, ppn=3)
+    m, n = 41, 100                      # both leave uneven tails over 6 ranks
+    row_part = contiguous_partition(m, topo.n_procs)
+    col_part = contiguous_partition(n, topo.n_procs)
+    assert int(row_part.counts().max()) != int(row_part.counts().min())
+    assert int(col_part.counts().max()) != int(col_part.counts().min())
+    rng = np.random.default_rng(4)
+    u, v = rng.standard_normal(m), rng.standard_normal(n)
+    rows_pad = -(-int(row_part.counts().max()) // 8) * 8
+    cols_pad = -(-int(col_part.counts().max()) // 8) * 8
+    assert rows_pad != cols_pad         # genuinely two pads in flight
+    _, back_u = _roundtrip(u, row_part, topo, rows_pad)
+    _, back_v = _roundtrip(v, col_part, topo, cols_pad)
+    np.testing.assert_array_equal(back_u, u.astype(np.float32))
+    np.testing.assert_array_equal(back_v, v.astype(np.float32))
+
+
+def test_empty_column_partition_ranks():
+    """A coarse AMG col partition can own FEWER entries than there are
+    ranks: the empty ranks' shards stay all-zero, unpack ignores them,
+    and the round-trip is bit-for-bit — for 1-RHS and multi-RHS."""
+    topo = Topology(n_nodes=4, ppn=2)
+    n = 3                               # 3 entries over 8 ranks
+    part = contiguous_partition(n, topo.n_procs)
+    assert int((part.counts() == 0).sum()) == 5
+    rng = np.random.default_rng(5)
+    for v in (rng.standard_normal(n), rng.standard_normal((n, 4))):
+        shards, back = _roundtrip(v, part, topo, rows_pad=8)
+        np.testing.assert_array_equal(back, v.astype(np.float32))
+        flat = shards.reshape((topo.n_procs, 8) + shards.shape[3:])
+        for r in range(topo.n_procs):
+            cnt = int(part.counts()[r])
+            assert (flat[r, cnt:] == 0).all()
+
+
 def test_multirhs_roundtrip_and_order():
     """[n, nv] multivectors: packing is column-independent."""
     topo = Topology(n_nodes=2, ppn=2)
