@@ -9,9 +9,15 @@ Checks, on a (2, 2) machine on CPU:
     f32 tolerance on shardmap), 1-RHS and multi-RHS, on a 64-row square
     operator AND a 64x40 RECTANGULAR operator (row_part != col_part);
   * `(R @ A @ P)` composes lazily and matches the scipy triple product;
+  * the distributed-SpGEMM surface exists and works:
+    `repro.spgemm.build_spgemm_plan` + `simulate_nap_spgemm` produce the
+    host `csr_matmul` product bit-for-bit, and
+    `ComposedOperator.materialize()` collapses `(R @ A @ P)` into a
+    concrete NapOperator on the coarse partitions;
   * the one-release deprecation shims are GONE: `nap_spmv_shardmap`,
     `standard_spmv_shardmap` and `DistSpMV.run` no longer exist (their
-    release has passed — migration table: src/repro/kernels/README.md).
+    release has passed — migration table: src/repro/kernels/README.md)
+    and no removed shim has resurfaced.
 
     PYTHONPATH=src python scripts/check_api.py
 """
@@ -79,6 +85,30 @@ def main() -> None:
             assert rep["transpose_resolved"] in ("ell", "coo"), rep
             assert "transpose" in rep, "compile must record the transpose verdict"
     print("rectangular operator + (R @ A @ P) composition OK on both backends")
+
+    # -- distributed SpGEMM surface + materialize ---------------------------
+    from repro.amg.matmul import csr_matmul
+    from repro.spgemm import build_spgemm_plan, simulate_nap_spgemm
+
+    plan = build_spgemm_plan(a, p, fine, fine, topo, method="nap")
+    c = simulate_nap_spgemm(a, p, plan)
+    host = csr_matmul(a, p)
+    assert np.array_equal(c.indptr, host.indptr) and \
+        np.array_equal(c.indices, host.indices) and \
+        np.array_equal(c.data, host.data), \
+        "simulate_nap_spgemm must equal host csr_matmul bit-for-bit"
+    assert hasattr(nap.ComposedOperator, "materialize"), \
+        "ComposedOperator.materialize is part of the public surface"
+    a_op = nap.operator(a, topo=topo, part=fine, backend="simulate")
+    p_op = nap.operator(p, topo=topo, row_part=fine, col_part=coarse,
+                        backend="simulate")
+    conc = (p_op.T @ a_op @ p_op).materialize(cross_check=True)
+    assert isinstance(conc, nap.NapOperator) and conc.shape == (nc, nc)
+    np.testing.assert_allclose(conc @ xc, pm.T @ (a.to_dense() @ (pm @ xc)),
+                               rtol=1e-9, atol=1e-10)
+    print("spgemm surface OK (build_spgemm_plan + simulate_nap_spgemm "
+          "bit-for-bit, ComposedOperator.materialize concrete on coarse "
+          "partitions)")
 
     # -- the deprecation shims are GONE -------------------------------------
     for mod, name in [(spmv_jax_mod, "nap_spmv_shardmap"),

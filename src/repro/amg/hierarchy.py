@@ -138,10 +138,21 @@ def smooth_prolongator(a: CSR, t: CSR, omega_scale: float = 4.0 / 3.0) -> CSR:
 
 def smoothed_aggregation_hierarchy(a: CSR, nullspace: Optional[np.ndarray] = None,
                                    theta: float = 0.0, max_levels: int = 12,
-                                   coarse_size: int = 64) -> List[Level]:
-    """Build the SA-AMG hierarchy; levels[0].a is the fine matrix."""
+                                   coarse_size: int = 64,
+                                   rap=None) -> List[Level]:
+    """Build the SA-AMG hierarchy; levels[0].a is the fine matrix.
+
+    ``rap`` optionally overrides the Galerkin product: a callable
+    ``rap(r, a, p) -> CSR`` assembling each coarse matrix.  The default
+    is the host-side ``csr_matmul`` triple product; pass
+    :func:`repro.spgemm.distributed_rap` to assemble EVERY coarse level
+    through the node-aware distributed SpGEMM (the float64 simulate
+    backend is bit-for-bit equal to the host product, so the hierarchy
+    is identical — only the assembly path changes).
+    """
     if nullspace is None:
         nullspace = np.ones((a.shape[0], 1))
+    galerkin = rap or (lambda r_, a_, p_: csr_matmul(r_, csr_matmul(a_, p_)))
     levels = [Level(a=a)]
     b = nullspace
     while len(levels) < max_levels and levels[-1].a.shape[0] > coarse_size:
@@ -154,7 +165,7 @@ def smoothed_aggregation_hierarchy(a: CSR, nullspace: Optional[np.ndarray] = Non
         t, bc = tentative_prolongator(agg, b)
         p = smooth_prolongator(a_l, t)
         r = p.transpose()
-        a_c = csr_matmul(r, csr_matmul(a_l, p))
+        a_c = galerkin(r, a_l, p)
         levels[-1].p = p
         levels[-1].r = r
         levels[-1].aggregates = agg

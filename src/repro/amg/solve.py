@@ -40,17 +40,33 @@ class LevelOperators:
     p: Optional[object] = None
     r: Optional[object] = None
 
-    def galerkin(self) -> Optional[object]:
-        """The lazily composed coarse-grid operator ``R @ A @ P`` (a
-        :class:`repro.api.ComposedOperator`; None if any factor is)."""
+    def galerkin(self, materialize: bool = False,
+                 **materialize_kwargs) -> Optional[object]:
+        """The coarse-grid operator ``R @ A @ P`` (None if any factor is).
+
+        ``materialize=False`` (default) returns the lazy
+        :class:`repro.api.ComposedOperator` — three chained node-aware
+        SpMVs per apply.  ``materialize=True`` collapses the chain
+        through the node-aware distributed SpGEMM into a CONCRETE
+        :class:`repro.api.NapOperator` on the coarse partitions (one
+        SpMV per apply; wins past a few applies — see
+        ``src/repro/spgemm/README.md``).  Extra kwargs pass to
+        :meth:`repro.api.ComposedOperator.materialize`.
+        """
         if self.a is None or self.p is None or self.r is None:
             return None
-        return self.r @ self.a @ self.p
+        composed = self.r @ self.a @ self.p
+        if not materialize:
+            return composed
+        return composed.materialize(**materialize_kwargs)
 
 
 def level_operators(levels: Sequence[Level], topo, *, method: str = "nap",
                     backend: str = "simulate", min_rows: Optional[int] = None,
                     parts: Optional[Sequence] = None,
+                    materialize: bool = False,
+                    spgemm_backend: str = "simulate",
+                    spgemm_dtype=None,
                     **kwargs) -> List[LevelOperators]:
     """One :class:`LevelOperators` (A + rectangular P/R) per AMG level.
 
@@ -63,6 +79,15 @@ def level_operators(levels: Sequence[Level], topo, *, method: str = "nap",
     distributed as long as the FINE side is large enough — the coarse
     partition simply has empty ranks.  Extra ``kwargs`` pass straight to
     :func:`repro.api.operator`.
+
+    ``materialize=True`` assembles every coarse-level matrix through the
+    node-aware distributed SpGEMM (:func:`repro.spgemm.galerkin_rap` on
+    ``spgemm_backend``) instead of trusting the hierarchy's host-side
+    product: each level's ``A_c = R (A P)`` chains from the previous
+    distributed product and is cross-checked against the hierarchy's
+    host ``csr_matmul`` assembly — bit-for-bit on the float64
+    ``"simulate"`` backend, to round-off on ``"shardmap"`` — and the
+    coarse operators are built FROM the distributed product.
     """
     import repro.api as nap  # local import keeps numpy-only users jax-free
 
@@ -70,11 +95,29 @@ def level_operators(levels: Sequence[Level], topo, *, method: str = "nap",
     if parts is None:
         parts = [contiguous_partition(lvl.a.shape[0], topo.n_procs)
                  for lvl in levels]
+    a_mats = [levels[0].a] + [None] * (len(levels) - 1)
+    if materialize:
+        from repro.spgemm import assert_matches_host, galerkin_rap
+        for i in range(len(levels) - 1):
+            lvl = levels[i]
+            r_mat = lvl.r if lvl.r is not None else lvl.p.transpose()
+            a_mats[i + 1] = galerkin_rap(
+                r_mat, a_mats[i], lvl.p, parts[i], parts[i + 1], topo,
+                method=method if method in ("nap", "standard") else "nap",
+                backend=spgemm_backend, dtype=spgemm_dtype,
+                mesh=kwargs.get("mesh"))
+            # float32 products chain level-to-level, so the tolerance vs
+            # the float64 host hierarchy grows with the chain depth
+            assert_matches_host(a_mats[i + 1], levels[i + 1].a,
+                                spgemm_backend, f"level {i + 1} A_c",
+                                rtol=5e-5 * (i + 1))
+    else:
+        a_mats = [lvl.a for lvl in levels]
     ops: List[LevelOperators] = []
     for i, lvl in enumerate(levels):
         entry = LevelOperators()
         if lvl.a.shape[0] >= floor:
-            entry.a = nap.operator(lvl.a, topo=topo, part=parts[i],
+            entry.a = nap.operator(a_mats[i], topo=topo, part=parts[i],
                                    method=method, backend=backend, **kwargs)
             if lvl.p is not None:
                 entry.p = nap.operator(lvl.p, topo=topo,

@@ -27,7 +27,12 @@ as the square-case sugar that sets both::
 ``R @ A @ P`` returns a :class:`ComposedOperator` that chains the
 executors right-to-left with compatible-partition checking at compose
 time, and rolls up per-stage ``.stats()`` / ``.cost()`` — the Galerkin
-triple product applied as three node-aware SpMVs, never materialised.
+triple product applied as three node-aware SpMVs, never materialised
+implicitly.  When the product will be applied many times,
+``composed.materialize()`` collapses the chain through the node-aware
+distributed SpGEMM (:mod:`repro.spgemm` — the same three-step exchange
+carrying variable-length B-row blocks) into ONE concrete operator on
+the outer partitions.
 
 Backends resolve through the pluggable registry in
 :mod:`repro.core.executors` — ``backend="shardmap"`` is the jitted SPMD
@@ -334,6 +339,81 @@ class ComposedOperator:
         """(ABC).T = C.T B.T A.T — each stage's node-aware transpose."""
         return ComposedOperator(
             factors=tuple(f.T for f in reversed(self.factors)))
+
+    # -- materialisation: the node-aware distributed SpGEMM ---------------
+    def materialize(self, *, spgemm_backend: Optional[str] = None,
+                    spgemm_method: Optional[str] = None, dtype=None,
+                    cross_check: bool = False, mesh=None) -> "NapOperator":
+        """Collapse the lazy chain into ONE concrete :class:`NapOperator`
+        on the outer partitions, multiplying the factors right-to-left
+        through the node-aware distributed SpGEMM
+        (:mod:`repro.spgemm`) — remote B rows route through the same
+        three-step exchange the SpMV plans use, carrying variable-length
+        CSR row blocks.
+
+        The lazy chain pays k SpMVs (plus interface traffic) per apply;
+        the materialised operator pays the SpGEMM once and ONE SpMV per
+        apply — it wins whenever the operator is applied more than a few
+        times (the AMG solve's coarse operator: one V-cycle already
+        applies it several times).  See ``src/repro/spgemm/README.md``
+        for the break-even discussion.
+
+        ``spgemm_backend``: ``"simulate"`` (exact float64 products,
+        bit-for-bit equal to the host ``csr_matmul`` chain) or
+        ``"shardmap"`` (the SPMD program; float32 payloads unless
+        ``dtype`` overrides under x64).  Defaults to ``"simulate"`` when
+        any factor runs the simulate backend, else ``"shardmap"``.
+        ``spgemm_method`` defaults to the leftmost factor's method.
+        ``cross_check=True`` asserts every intermediate against the host
+        ``csr_matmul`` oracle.  The result reuses the leftmost factor's
+        executor spec (backend, local compute, block shape, ...) AND its
+        mesh — factors built over an explicit device mesh keep the
+        SpGEMM products and the concrete operator on the same devices
+        (``mesh=`` overrides).
+        """
+        from repro.spgemm import assert_matches_host, distributed_spgemm
+
+        factors = self.factors
+        topo = factors[0].topo
+        for f in factors:
+            if (f.topo.n_nodes, f.topo.ppn) != (topo.n_nodes, topo.ppn):
+                raise ValueError("cannot materialize a chain spanning "
+                                 "different topologies")
+        backend = spgemm_backend or (
+            "simulate" if any(f.spec.backend == "simulate" for f in factors)
+            else "shardmap")
+        method = spgemm_method or factors[0].spec.method
+        if mesh is None:
+            # first explicitly meshed factor wins (executors hold _mesh
+            # only when one was passed in or lazily built)
+            for f in factors:
+                mesh = getattr(f.executor, "_mesh", None)
+                if mesh is not None:
+                    break
+
+        def csr_of(f: "NapOperator"):
+            return f.a.transpose() if f.transposed else f.a
+
+        cur = csr_of(factors[-1])
+        for f in reversed(factors[:-1]):
+            cur = distributed_spgemm(csr_of(f), cur, f.range_part,
+                                     f.domain_part, topo, method=method,
+                                     backend=backend, dtype=dtype,
+                                     mesh=mesh)
+        if cross_check:
+            from repro.amg.matmul import csr_matmul
+            want = csr_of(factors[-1])
+            for f in reversed(factors[:-1]):
+                want = csr_matmul(csr_of(f), want)
+            assert_matches_host(cur, want, backend, "materialize")
+        spec = factors[0].spec
+        return operator(cur, topo=topo, row_part=self.range_part,
+                        col_part=self.domain_part, method=spec.method,
+                        backend=spec.backend,
+                        local_compute=spec.local_compute, mesh=mesh,
+                        pairing=spec.pairing, block_shape=spec.block_shape,
+                        nv_block=spec.nv_block, interpret=spec.interpret,
+                        cache=spec.cache, tuner=spec.tuner)
 
     # -- per-stage introspection, rolled up --------------------------------
     def stats(self) -> List[object]:

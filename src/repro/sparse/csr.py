@@ -11,6 +11,18 @@ from typing import Tuple
 import numpy as np
 
 
+def expand_positions(starts: np.ndarray, counts: np.ndarray) -> np.ndarray:
+    """``concat(starts[i] + arange(counts[i]))`` without a Python loop —
+    the index-ramp kernel behind CSR row expansion (``csr_matmul``, the
+    SpGEMM simulators and compile step, bulk row-value gathers)."""
+    total = int(counts.sum())
+    if total == 0:
+        return np.empty(0, dtype=np.int64)
+    ends = np.cumsum(counts)
+    intra = np.arange(total) - np.repeat(ends - counts, counts)
+    return np.repeat(starts, counts) + intra
+
+
 @dataclasses.dataclass
 class CSR:
     indptr: np.ndarray   # int64 [n_rows + 1]

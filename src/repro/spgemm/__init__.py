@@ -1,0 +1,21 @@
+"""Node-aware distributed SpGEMM: ``C = A @ B`` over independent row
+partitions, routed through the paper's three-step exchange with
+row-block payloads.  See ``src/repro/spgemm/README.md``."""
+from repro.spgemm.plan import SpGemmPlan, build_spgemm_plan
+from repro.spgemm.rap import (assert_matches_host, distributed_rap,
+                              galerkin_rap)
+from repro.spgemm.shardmap import (CompiledSpGemm, clear_spgemm_cache,
+                                   compile_spgemm, distributed_spgemm,
+                                   pack_b_values, shardmap_spgemm_runs,
+                                   spgemm_shardmap, unpack_c_values)
+from repro.spgemm.simulate import (simulate_nap_spgemm, simulate_spgemm,
+                                   simulate_standard_spgemm)
+
+__all__ = [
+    "SpGemmPlan", "build_spgemm_plan",
+    "simulate_nap_spgemm", "simulate_standard_spgemm", "simulate_spgemm",
+    "CompiledSpGemm", "compile_spgemm", "spgemm_shardmap",
+    "distributed_spgemm", "pack_b_values", "unpack_c_values",
+    "clear_spgemm_cache", "shardmap_spgemm_runs",
+    "galerkin_rap", "distributed_rap", "assert_matches_host",
+]

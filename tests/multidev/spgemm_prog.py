@@ -1,0 +1,156 @@
+"""Multi-device distributed-SpGEMM sweep (subprocess, forced 8 devices).
+
+Checks, with jax x64 enabled (the SpGEMM program supports float64
+payloads; the SpMV operators keep their own float32 convention):
+
+* square / tall / wide / empty-rank ``C = A @ B`` on independent
+  row/mid partitions, both methods (nap / standard), both partition
+  kinds: the shard_map program matches the scipy float64 oracle at f32
+  tolerance, and at ~1-ulp with float64 payloads; the simulate path is
+  bit-for-bit equal to the host ``csr_matmul``;
+* the smoothed-aggregation hierarchy assembled with
+  ``rap=distributed_rap(backend="shardmap", dtype=float64)`` matches the
+  host hierarchy exactly in structure and to round-off in values (the
+  simulate-backend hierarchy matches BIT-FOR-BIT), with every Galerkin
+  product counted through the device program;
+* ``level_operators(..., materialize=True, spgemm_backend="shardmap")``
+  builds coarse operators from on-device products (asserted against the
+  host assembly inside ``level_operators``) and the resulting V-cycle
+  matches the host-operator V-cycle.
+
+``--quick`` runs a 4-device subset (shard_map sweep only) — the tier-1
+subprocess smoke.
+"""
+import os
+import sys
+
+QUICK = "--quick" in sys.argv
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=" + \
+    ("4" if QUICK else "8")
+
+import jax
+jax.config.update("jax_enable_x64", True)
+import jax.numpy as jnp
+import numpy as np
+import scipy.sparse as sp
+
+from repro.amg.matmul import csr_matmul
+from repro.core.partition import contiguous_partition, strided_partition
+from repro.core.topology import Topology
+from repro.spgemm import (build_spgemm_plan, distributed_rap,
+                          distributed_spgemm, shardmap_spgemm_runs,
+                          simulate_spgemm)
+from repro.sparse import CSR, rotated_anisotropic_2d
+
+TOPO = Topology(n_nodes=2, ppn=2) if QUICK else Topology(n_nodes=2, ppn=4)
+# square / tall / wide / empty-rank (mid dim below the machine size)
+SHAPES = [(64, 48, 40), (40, 64, 72), (48, 6, 40)]
+
+
+def rand_csr(rng, m, n, density=0.25):
+    mat = (rng.random((m, n)) < density) * rng.standard_normal((m, n))
+    return mat, CSR.from_dense(mat)
+
+
+def check_spgemm_sweep(seed: int) -> None:
+    rng = np.random.default_rng(seed)
+    for (m, k, n) in SHAPES:
+        am, a = rand_csr(rng, m, k)
+        bm, b = rand_csr(rng, k, n)
+        want = (sp.csr_matrix(am) @ sp.csr_matrix(bm)).toarray()
+        host = csr_matmul(a, b)
+        for mk in (contiguous_partition, strided_partition):
+            rp, mp = mk(m, TOPO.n_procs), mk(k, TOPO.n_procs)
+            for method in ("nap", "standard"):
+                # float64 simulate: bit-for-bit vs host csr_matmul
+                plan = build_spgemm_plan(a, b, rp, mp, TOPO, method=method)
+                c_sim = simulate_spgemm(a, b, plan)
+                assert np.array_equal(c_sim.indptr, host.indptr)
+                assert np.array_equal(c_sim.indices, host.indices)
+                assert np.array_equal(c_sim.data, host.data)
+                # f32 on-device program vs scipy
+                c32 = distributed_spgemm(a, b, rp, mp, TOPO, method=method,
+                                         backend="shardmap")
+                np.testing.assert_allclose(c32.to_dense(), want,
+                                           rtol=1e-4, atol=1e-4)
+                if not QUICK:
+                    # float64 payloads: round-off-level parity
+                    c64 = distributed_spgemm(a, b, rp, mp, TOPO,
+                                             method=method,
+                                             backend="shardmap",
+                                             dtype=jnp.float64)
+                    assert np.array_equal(c64.indices, host.indices)
+                    np.testing.assert_allclose(c64.data, host.data,
+                                               rtol=1e-12, atol=1e-13)
+        print(f"spgemm {m}x{k}x{n} ok", flush=True)
+
+
+def check_distributed_hierarchy() -> None:
+    from repro.amg import smoothed_aggregation_hierarchy
+
+    a = rotated_anisotropic_2d(16, eps=0.1)
+    host = smoothed_aggregation_hierarchy(a, theta=0.1, coarse_size=16)
+    runs0 = shardmap_spgemm_runs()
+    dev = smoothed_aggregation_hierarchy(
+        a, theta=0.1, coarse_size=16,
+        rap=distributed_rap(TOPO, backend="shardmap", dtype=jnp.float64))
+    n_products = 2 * (len(host) - 1)  # A@P then R@(AP) per coarse level
+    assert shardmap_spgemm_runs() - runs0 == n_products, \
+        "hierarchy assembly did not run through the device SpGEMM program"
+    for lh, ld in zip(host, dev):
+        assert np.array_equal(lh.a.indptr, ld.a.indptr)
+        assert np.array_equal(lh.a.indices, ld.a.indices)
+        np.testing.assert_allclose(ld.a.data, lh.a.data,
+                                   rtol=1e-12, atol=1e-13)
+    # the float64 simulate path IS bit-for-bit
+    sim = smoothed_aggregation_hierarchy(
+        a, theta=0.1, coarse_size=16, rap=distributed_rap(TOPO))
+    for lh, ls in zip(host, sim):
+        assert np.array_equal(lh.a.data, ls.a.data)
+    print(f"distributed hierarchy ok ({len(host)} levels, "
+          f"{n_products} on-device Galerkin products)", flush=True)
+
+
+def check_materialized_level_operators() -> None:
+    from repro.amg import (amg_vcycle, level_operators,
+                           smoothed_aggregation_hierarchy)
+
+    a = rotated_anisotropic_2d(16, eps=0.1)
+    a = CSR.from_dense(a.to_dense() + np.eye(a.shape[0]) * 1e-3)
+    levels = smoothed_aggregation_hierarchy(a, theta=0.1, coarse_size=16)
+    runs0 = shardmap_spgemm_runs()
+    # every coarse A assembled on-device (float64 payloads), asserted
+    # against the host csr_matmul assembly inside level_operators
+    ops = level_operators(levels, TOPO, backend="shardmap",
+                          block_shape=(8, 16), materialize=True,
+                          spgemm_backend="shardmap",
+                          spgemm_dtype=jnp.float64)
+    n_products = 2 * (len(levels) - 1)
+    assert shardmap_spgemm_runs() - runs0 == n_products, \
+        "materialize=True did not route every Galerkin product through " \
+        "the device SpGEMM program"
+    rng = np.random.default_rng(0)
+    b = rng.standard_normal(a.shape[0])
+    x = amg_vcycle(levels, b, operators=ops)
+    x_ref = amg_vcycle(levels, b, operators=None)
+    np.testing.assert_allclose(x, x_ref, rtol=5e-3, atol=5e-4)
+    # a concrete coarse operator straight from the front-end
+    conc = ops[0].galerkin(materialize=True, spgemm_backend="shardmap",
+                           dtype=jnp.float64, cross_check=True)
+    assert conc.shape == (levels[1].a.shape[0],) * 2
+    np.testing.assert_allclose(conc.a.data, levels[1].a.data,
+                               rtol=1e-12, atol=1e-13)
+    print(f"materialize=True level operators ok ({n_products} on-device "
+          f"products, V-cycle matches host)", flush=True)
+
+
+def main() -> None:
+    check_spgemm_sweep(seed=42)
+    if not QUICK:
+        check_distributed_hierarchy()
+        check_materialized_level_operators()
+    print("ALL OK")
+
+
+if __name__ == "__main__":
+    main()
