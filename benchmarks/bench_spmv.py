@@ -286,6 +286,38 @@ def bench_spmv_wall(n_rows: int, nnz_per_row: int, quick: bool) -> dict:
                 "rap_assemble.speedup, not a rounded slogan",
     }
 
+    # -- solver-service walls ----------------------------------------------
+    # serve_submit_p50_s: median submit -> done wall for a 1-RHS SpMV
+    # request through the full service path (admission, EDF batching, plan
+    # cache, accounting) on the simulate backend — the service overhead
+    # number, dominated by the oracle SpMV itself.  serve_recover_rebuild_s:
+    # the elastic-recovery wall after a scripted node death (survivor
+    # repartition + plan-cache rebuild + eager recompile + checkpoint
+    # probe), as measured by the service's own stats.  Both sit in the
+    # shared wall dict, so run.py's 1.5x gate covers them.
+    from repro.serve import FaultPlan, SolverService, dead_node
+    svc = SolverService(topo, backend="simulate", queue_limit=64)
+    svc.register_matrix("A", a)
+    submit_walls = []
+    for i in range(3 if quick else 9):
+        b_req = rng.standard_normal(n_rows)
+        t0 = time.perf_counter()
+        t = svc.submit("bench", "A", b_req, kind="spmv")
+        svc.run()
+        submit_walls.append(time.perf_counter() - t0)
+        assert t.status == "done"
+    walls["serve_submit_p50_s"] = round(
+        float(np.median(submit_walls)), 5)
+    svc_f = SolverService(topo, backend="simulate",
+                          fault_plan=FaultPlan.of(dead_node(1, "node1")),
+                          heartbeat_timeout=2.5)
+    svc_f.register_matrix("A", a)
+    t = svc_f.submit("bench", "A", rng.standard_normal(n_rows), kind="spmv")
+    svc_f.run(max_steps=40)
+    assert t.status == "done" and svc_f.stats["recoveries"] == 1
+    walls["serve_recover_rebuild_s"] = round(
+        svc_f.stats["last_recover_rebuild_s"], 5)
+
     std_plan = build_standard_plan(a.indptr, a.indices, part, topo)
     nap_plan = compiled.plan or build_nap_plan(
         a.indptr, a.indices, part, topo, pairing="aligned")

@@ -110,6 +110,43 @@ def main() -> None:
           "bit-for-bit, ComposedOperator.materialize concrete on coarse "
           "partitions)")
 
+    # -- the serve surface: service round-trip + hot swap, no retrace -------
+    from repro.serve import (FaultPlan, PlanCache, SolverService, dead_node)
+    from repro.sparse.csr import CSR as _CSR
+
+    svc = SolverService(topo, backend="simulate",
+                        fault_plan=FaultPlan.of(dead_node(2, "node1")),
+                        heartbeat_timeout=2.5)
+    m_int = np.rint(a.to_dense() * 4)
+    ai = CSR.from_dense(m_int + m_int.T + np.eye(n) * 80.0)   # integer SPD
+    svc.register_matrix("A", ai)
+    bi = rng.integers(-8, 9, size=n).astype(np.float64)
+    t_spmv = svc.submit("tenant", "A", bi, kind="spmv")
+    t_solve = svc.submit("tenant", "A", bi, kind="solve", tol=1e-10)
+    svc.run(max_steps=40)
+    assert t_spmv.status == "done" and t_solve.status == "done", \
+        (t_spmv.status, t_solve.status)
+    assert svc.stats["recoveries"] == 1 and svc.topo.n_nodes == 1, \
+        "node1's scripted death must drive one elastic recovery"
+    np.testing.assert_array_equal(t_spmv.result(), ai.matvec(bi))
+    np.testing.assert_allclose(ai.matvec(t_solve.result()), bi,
+                               rtol=1e-8, atol=1e-8)
+    # hot value swap reuses the compiled shardmap program: zero retraces
+    op = nap.operator(a, topo=topo, backend="shardmap")
+    _ = op @ v
+    before = dict(op.trace_counts())
+    op.swap_values(_CSR(indptr=a.indptr.copy(), indices=a.indices.copy(),
+                        data=a.data * 2.0, shape=a.shape))
+    w_sw = op @ v
+    assert op.trace_counts() == before, \
+        f"hot swap retraced: {before} -> {op.trace_counts()}"
+    np.testing.assert_allclose(w_sw, 2.0 * a.matvec(v), rtol=1e-4, atol=1e-4)
+    cache = PlanCache(topo, backend="simulate")
+    op_c = cache.operator_for(a, fine)
+    assert cache.operator_for(a, fine) is op_c and cache.stats["hits"] == 1
+    print("serve surface OK (service solve + elastic recovery; hot swap "
+          "with zero retraces; structure-keyed plan cache)")
+
     # -- the deprecation shims are GONE -------------------------------------
     for mod, name in [(spmv_jax_mod, "nap_spmv_shardmap"),
                       (spmv_jax_mod, "standard_spmv_shardmap"),

@@ -207,23 +207,37 @@ def amg_vcycle(levels: List[Level], b: np.ndarray,
 
 def cg_solve(a: CSR, b: np.ndarray, tol: float = 1e-8, maxiter: int = 500,
              precond: Optional[Callable[[np.ndarray], np.ndarray]] = None,
-             spmv: Optional[Callable] = None):
+             spmv: Optional[Callable] = None,
+             x0: Optional[np.ndarray] = None,
+             callback: Optional[Callable[[int, np.ndarray], None]] = None):
     """(Preconditioned) conjugate gradients; returns (x, iters, relres).
 
-    ``spmv`` may be a plain callable or a NapOperator.
+    ``spmv`` may be a plain callable or a NapOperator.  ``x0`` warm-starts
+    the iteration (the serve layer's elastic recovery restarts from the
+    last checkpointed iterate); ``callback(it, x)`` fires after every
+    iteration — raising from it aborts the solve mid-stream, which the
+    fault harness uses to model a node dying at step k.  A restarted CG
+    rebuilds its Krylov space from the checkpointed x, so iterate
+    trajectories differ from an uninterrupted run, but any solve driven
+    to ``tol`` satisfies the same residual contract.
     """
     mv = spmv or a.matvec
-    x = np.zeros_like(b)
+    x = np.zeros_like(b) if x0 is None else np.array(x0, dtype=b.dtype)
     r = b - mv(x)
     z = precond(r) if precond else r
     p = z.copy()
     rz = float(r @ z)
     b_norm = max(float(np.linalg.norm(b)), 1e-30)
+    rel = float(np.linalg.norm(r)) / b_norm
+    if rel < tol:     # warm start already converged
+        return x, 0, rel
     for it in range(1, maxiter + 1):
         ap = mv(p)
         alpha = rz / max(float(p @ ap), 1e-300)
         x += alpha * p
         r -= alpha * ap
+        if callback is not None:
+            callback(it, x)
         rel = float(np.linalg.norm(r)) / b_norm
         if rel < tol:
             return x, it, rel

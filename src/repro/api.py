@@ -243,6 +243,33 @@ class NapOperator:
         return dataclasses.replace(self, transposed=not self.transposed,
                                    _parent=self)
 
+    # -- hot value swap ----------------------------------------------------
+    def swap_values(self, a_new) -> None:
+        """Swap the matrix VALUES behind this operator without recompiling.
+
+        ``a_new`` must have the exact sparsity structure of the current
+        matrix (same shape, indptr, indices — always the UNtransposed
+        orientation, even when called on a ``.T`` view: the transpose
+        shares the executor and picks the new values up automatically).
+        On the shardmap backend the compiled communication plan and both
+        jitted direction programs are reused with ZERO retraces — value
+        arrays are per-call jit arguments; verify with
+        :meth:`trace_counts`.  The serve layer's plan cache keys on
+        structure alone and leans on this for multi-tenant value updates.
+        """
+        self.executor.swap_values(a_new)
+        self.a = a_new
+        if self._parent is not None:
+            self._parent.a = a_new
+
+    def trace_counts(self):
+        """Per-direction program (re)trace counts — ``{"forward": n,
+        "transpose": m}`` on shardmap (a direction appears once built),
+        empty for backends that never trace.  Flat counts across a
+        :meth:`swap_values` prove the hot-swap reused the compiled
+        program."""
+        return self.executor.trace_counts()
+
     # -- introspection -----------------------------------------------------
     def stats(self):
         """Plan-level message statistics (+ padded traffic on shardmap)."""

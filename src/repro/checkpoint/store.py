@@ -37,7 +37,16 @@ def _flatten_with_names(tree: Pytree) -> Tuple[List[Tuple[str, Any]], Any]:
 
 def save_checkpoint(directory: str, step: int, tree: Pytree,
                     extra: Optional[Dict] = None,
-                    shard_mb: int = 512) -> str:
+                    shard_mb: int = 512,
+                    on_before_commit: Optional[Callable[[], None]] = None) -> str:
+    """Write one committed checkpoint step.
+
+    ``on_before_commit`` runs after every shard and the manifest are on
+    disk but BEFORE the ``_COMMITTED`` marker — the crash window the
+    marker protects against.  Fault harnesses (``repro.serve.faultplan``)
+    raise from it to produce a deterministic torn save; restore must then
+    fall back to the previous committed step.
+    """
     path = pathlib.Path(directory) / f"step_{step:08d}"
     path.mkdir(parents=True, exist_ok=True)
     named, _ = _flatten_with_names(tree)
@@ -69,6 +78,8 @@ def save_checkpoint(directory: str, step: int, tree: Pytree,
     manifest["shards"] = shard_id
     with open(path / "manifest.json", "w") as f:
         json.dump(manifest, f)
+    if on_before_commit is not None:
+        on_before_commit()
     (path / "_COMMITTED").touch()       # atomicity marker, written last
     return str(path)
 
@@ -90,9 +101,15 @@ def load_checkpoint(directory: str, step: Optional[int] = None,
         raise FileNotFoundError(f"checkpoint {path} not committed")
     with open(path / "manifest.json") as f:
         manifest = json.load(f)
-    shards = {i: np.load(path / f"shard_{i}.npz")
-              for i in range(manifest["shards"] + 1)
-              if (path / f"shard_{i}.npz").exists()}
+    shards = {}
+    for i in range(manifest["shards"]):   # manifest stores the exact count
+        shard_path = path / f"shard_{i}.npz"
+        if not shard_path.exists():
+            held = [l["name"] for l in manifest["leaves"] if l["shard"] == i]
+            raise FileNotFoundError(
+                f"checkpoint {path} is committed but {shard_path.name} is "
+                f"missing; it held {len(held)} leaves: {held}")
+        shards[i] = np.load(shard_path)
     import ml_dtypes
     by_name = {}
     for l in manifest["leaves"]:
@@ -122,17 +139,25 @@ class CheckpointManager:
         self.directory = directory
         self.keep = keep
         self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+        self._lock = threading.Lock()    # guards last_saved across threads
         self.last_saved: Optional[int] = None
 
     def save(self, step: int, tree: Pytree, extra: Optional[Dict] = None,
-             block: bool = False) -> None:
+             block: bool = False,
+             on_before_commit: Optional[Callable[[], None]] = None) -> None:
         self.wait()                      # one in-flight save at a time
         host_tree = jax.tree.map(np.asarray, tree)   # snapshot before async
 
         def work():
-            save_checkpoint(self.directory, step, host_tree, extra)
-            self.last_saved = step
-            self._gc()
+            try:
+                save_checkpoint(self.directory, step, host_tree, extra,
+                                on_before_commit=on_before_commit)
+                with self._lock:
+                    self.last_saved = step
+                self._gc()
+            except BaseException as e:   # surfaced on the next wait()/save()
+                self._error = e
 
         self._thread = threading.Thread(target=work, daemon=True)
         self._thread.start()
@@ -143,6 +168,11 @@ class CheckpointManager:
         if self._thread is not None:
             self._thread.join()
             self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise RuntimeError(
+                f"background checkpoint save failed; last committed step is "
+                f"{self.last_saved}") from err
 
     def restore(self, target=None, shardings=None, step=None):
         return load_checkpoint(self.directory, step, target, shardings)

@@ -177,6 +177,20 @@ class _ShardmapExecutor:
     def transpose(self, u: np.ndarray, donate: bool = False) -> np.ndarray:
         return self._apply("transpose", u, donate)
 
+    def swap_values(self, a_new) -> None:
+        """Hot-swap matrix VALUES (sparsity must be identical): the
+        compiled plan rebuilds its value arrays in place and every
+        already-built direction program picks them up on the next call
+        WITHOUT retracing — value arrays are per-call jit arguments
+        (see :data:`repro.core.spmv_jax.VALUE_ARRAY_NAMES`)."""
+        self.compiled.swap_values(a_new)
+        self.a = a_new
+
+    def trace_counts(self) -> Dict[str, int]:
+        """Program (re)trace count per built direction; the serve plan
+        cache asserts these stay flat across hot value swaps."""
+        return {d: run.n_traces() for d, run in self._runs.items()}
+
     @property
     def local_compute(self) -> str:
         return self.compiled.resolve_local_compute(self.spec.local_compute)
@@ -300,6 +314,22 @@ class _SimulateExecutor:
     def transpose(self, u: np.ndarray, donate: bool = False) -> np.ndarray:
         return self._columnwise(lambda col: self._transpose(col), u,
                                 self.a.shape[0])
+
+    def swap_values(self, a_new) -> None:
+        """Hot-swap matrix VALUES; the comm plan is pure structure and is
+        reused as-is.  Same structural contract as the shardmap backend."""
+        old = self.a
+        if (tuple(a_new.shape) != tuple(old.shape)
+                or not np.array_equal(a_new.indptr, old.indptr)
+                or not np.array_equal(a_new.indices, old.indices)):
+            raise ValueError(
+                "swap_values requires an identical sparsity structure "
+                "(same shape, indptr, indices); rebuild the operator for "
+                "a structural change")
+        self.a = a_new
+
+    def trace_counts(self) -> Dict[str, int]:
+        return {}   # nothing is traced: exact numpy execution
 
     def autotune_report(self) -> Dict[str, object]:
         return {"resolved": self.local_compute,

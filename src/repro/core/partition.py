@@ -159,6 +159,42 @@ def balanced_partition(indptr: np.ndarray, indices: np.ndarray, n_procs: int,
     return _from_owner(owner, n_procs, "balanced")
 
 
+def survivor_partition(part: RowPartition, dead_ranks) -> RowPartition:
+    """Repartition after rank loss (the serve layer's elastic rebuild).
+
+    Surviving ranks KEEP every row they already own — their shards need no
+    data motion, only the dead ranks' orphaned rows move.  Per-survivor
+    intake counts come from a waterfill (repeatedly topping up the
+    lightest survivor; ties break toward the lowest new rank), then the
+    orphan rows are dealt out in ascending global order in runs of those
+    counts — fully deterministic.  Ranks renumber compactly in surviving
+    order, matching ``ElasticPolicy.survivor_topology``'s shrunken
+    ``Topology``.
+    """
+    dead = sorted({int(r) for r in dead_ranks})
+    for r in dead:
+        if not 0 <= r < part.n_procs:
+            raise ValueError(f"dead rank {r} outside [0, {part.n_procs})")
+    survivors = [r for r in range(part.n_procs) if r not in set(dead)]
+    if not survivors:
+        raise ValueError("no surviving ranks to repartition onto")
+    n_new = len(survivors)
+    remap = np.full(part.n_procs, -1, dtype=np.int64)
+    remap[survivors] = np.arange(n_new)
+    mapped = remap[part.owner]
+    alive = mapped >= 0
+    owner = np.empty(part.n_rows, dtype=np.int64)
+    owner[alive] = mapped[alive]
+    orphans = np.flatnonzero(~alive)
+    loads = np.bincount(mapped[alive], minlength=n_new).astype(np.int64)
+    add = np.zeros(n_new, dtype=np.int64)
+    for _ in range(orphans.size):
+        i = int(np.argmin(loads + add))
+        add[i] += 1
+    owner[orphans] = np.repeat(np.arange(n_new), add)
+    return _from_owner(owner, n_new, "elastic")
+
+
 def make_partition(kind: str, n_rows: int, n_procs: int,
                    indptr: Optional[np.ndarray] = None,
                    indices: Optional[np.ndarray] = None, seed: int = 0) -> RowPartition:

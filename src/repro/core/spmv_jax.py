@@ -210,6 +210,13 @@ class CompiledNAP:
     # per-name device-array memo (see _memo_device_arrays)
     _dev_cache: Dict[str, jnp.ndarray] = dataclasses.field(
         default_factory=dict, repr=False, compare=False)
+    # matrix whose VALUES this plan currently carries (swap_values target)
+    a_ref: Optional[CSR] = dataclasses.field(
+        default=None, repr=False, compare=False)
+    # compile-cache key to retire on a value swap (the global cache keys on
+    # the ORIGINAL data hash — a swapped plan must not satisfy it)
+    _cache_token: Optional[tuple] = dataclasses.field(
+        default=None, repr=False, compare=False)
 
     def __post_init__(self) -> None:
         if self.col_part is None:
@@ -301,6 +308,73 @@ class CompiledNAP:
     def device_arrays(self) -> Dict[str, jnp.ndarray]:
         """Mesh-shaped (n_nodes, ppn, ...) device arrays, memoized per name."""
         return _memo_device_arrays(self.topo, self.arrays, self._dev_cache)
+
+    def swap_values(self, a_new: CSR) -> List[str]:
+        """Hot-swap matrix VALUES in place; sparsity must be identical.
+
+        Rebuilds every value array (eager COO blocks plus any materialised
+        lazy format) against the SAME pads and gather maps, evicts only
+        those names from the device memo, and retires the plan from the
+        global compile cache (which keys on the old data hash).  Executors
+        bound to this plan pick the new values up on their next call with
+        zero retraces — value arrays are jit arguments, and the
+        replacements have identical shapes/dtypes.  Returns the changed
+        array names.
+        """
+        _swap_check_structure(self, a_new)
+        blocks = split_all_blocks(a_new, self.part, self.topo,
+                                  col_part=self.col_part)
+        self.local_blocks = blocks
+        changed = []
+        for key_c in ("on_proc", "on_node", "off_node"):
+            self.arrays[f"{key_c}_vals"] = _pad_to(
+                [getattr(b, key_c).to_coo()[2].astype(np.float32)
+                 for b in blocks],
+                self.pads[f"nnz_{key_c}"], fill=0.0)
+            changed.append(f"{key_c}_vals")
+        changed += _swap_refresh_lazy(self, [
+            ("ell_cols", "ell_vals", self.ensure_ell),
+            ("ell_t_cols", "ell_t_vals", self.ensure_ell_t),
+            ("fused_cols", "fused_blocks", self.ensure_fused)])
+        _swap_finish(self, a_new, changed)
+        return changed
+
+
+def _swap_check_structure(compiled, a_new: CSR) -> None:
+    old = compiled.a_ref
+    if old is None:
+        raise ValueError("compiled plan lost its matrix reference; "
+                         "recompile instead of swapping values")
+    if (tuple(a_new.shape) != tuple(old.shape)
+            or not np.array_equal(a_new.indptr, old.indptr)
+            or not np.array_equal(a_new.indices, old.indices)):
+        raise ValueError(
+            "swap_values requires an identical sparsity structure (same "
+            "shape, indptr, indices); a structural change needs a recompile")
+
+
+def _swap_refresh_lazy(compiled, formats) -> List[str]:
+    """Re-emit each MATERIALISED lazy format from the refreshed blocks.
+
+    Structural companions (cols) regenerate to identical values, so their
+    device-memo entries stay valid; only the value names report changed.
+    """
+    changed = []
+    for cols_name, vals_name, ensure in formats:
+        if cols_name in compiled.arrays:
+            del compiled.arrays[cols_name], compiled.arrays[vals_name]
+            ensure()
+            changed.append(vals_name)
+    return changed
+
+
+def _swap_finish(compiled, a_new: CSR, changed: List[str]) -> None:
+    for name in changed:
+        compiled._dev_cache.pop(name, None)
+    compiled.a_ref = a_new
+    if compiled._cache_token is not None:
+        _COMPILE_CACHE.pop(compiled._cache_token, None)
+        compiled._cache_token = None
 
 
 # ---------------------------------------------------------------------------
@@ -671,7 +745,8 @@ def compile_nap(a: CSR, part: RowPartition, topo: Topology,
                            arrays=arrays, plan=plan,
                            block_shape=tuple(block_shape),
                            local_blocks=blocks, autotune=autotune,
-                           requested_local_compute=local_compute)
+                           requested_local_compute=local_compute,
+                           a_ref=a, _cache_token=key)
     if key is not None:
         _cache_put(key, compiled)
     return compiled
@@ -720,29 +795,85 @@ def unpack_vector(w: np.ndarray, part: RowPartition, topo: Topology) -> np.ndarr
 # Shared run wrapper
 # ---------------------------------------------------------------------------
 
-def _make_run(call4, fmt: str):
+#: Device-array names that carry matrix VALUES rather than structure.
+#: The shard_map builders pass these to the jitted program as ARGUMENTS
+#: (re-fetched from the compiled plan on every call) instead of baking
+#: them in as trace-time closure constants — so a hot value swap
+#: (:meth:`CompiledNAP.swap_values`: same sparsity, new numbers) flows
+#: into the SAME compiled executable with zero retraces, because the
+#: replacement arrays have identical shapes/dtypes and hit the jit cache.
+VALUE_ARRAY_NAMES = frozenset({
+    "on_proc_vals", "on_node_vals", "off_node_vals",
+    "ell_vals", "ell_t_vals", "fused_blocks", "A_vals"})
+
+
+def _make_run(call4, fmt: str, val_fetch=None):
     """Wrap a 4-D shard program into the public run callable.
 
     ``run(v_shards, donate=False)`` accepts [n_nodes, ppn, rows_pad] or
     [..., nv] shards; ``donate=True`` dispatches to a separately-jitted
     entry with ``donate_argnums=(0,)`` (built lazily) so XLA may reuse the
     input shard buffer — the ``NapOperator.__call__(donate=...)`` path.
+
+    ``val_fetch()`` returns the CURRENT matrix-value device arrays, passed
+    as extra jit arguments each call (the hot-value-swap seam — see
+    :data:`VALUE_ARRAY_NAMES`).  ``run.n_traces()`` counts program traces:
+    it must not grow across a value swap with unchanged shapes.
     """
-    jits = {False: jax.jit(call4)}
+    counter = {"n": 0}
+
+    def traced(*args):   # Python body runs only when jax (re)traces
+        counter["n"] += 1
+        return call4(*args)
+
+    jits = {False: jax.jit(traced)}
 
     def run(v_shards, donate: bool = False):
         v_shards = jnp.asarray(v_shards, jnp.float32)
         donate = bool(donate)
         if donate and donate not in jits:
-            jits[True] = jax.jit(call4, donate_argnums=(0,))
+            jits[True] = jax.jit(traced, donate_argnums=(0,))
         fn = jits[donate]
+        vals = val_fetch() if val_fetch is not None else ()
         if v_shards.ndim == 3:
-            return fn(v_shards[..., None])[..., 0]
-        return fn(v_shards)
+            return fn(v_shards[..., None], *vals)[..., 0]
+        return fn(v_shards, *vals)
 
     run.local_compute = fmt
-    run.run4 = jits[False]  # jitted 4-D entry, exposed for jaxpr/HLO checks
+    # jitted 4-D entry, exposed for jaxpr/HLO checks — keeps the
+    # single-argument contract by binding the current value arrays.
+    if val_fetch is None:
+        run.run4 = jits[False]
+    else:
+        run.run4 = lambda v_shards: jits[False](v_shards, *val_fetch())
+    run.n_traces = lambda: counter["n"]
     return run
+
+
+def _bind_shard_program(smapped, compiled, names: List[str]):
+    """(call4, val_fetch) for a shard program applied as
+    ``smapped(v_shards, *[arrays[k] for k in names])``.
+
+    Structural arrays (gather/scatter maps, column indices) bind as
+    closure constants — they are immutable for the life of the plan.
+    :data:`VALUE_ARRAY_NAMES` entries instead arrive through ``val_fetch``
+    as per-call jit arguments read off the LIVE compiled plan, so
+    ``swap_values`` takes effect on the next call without retracing.
+    """
+    dev = compiled.device_arrays()
+    val_names = [k for k in names if k in VALUE_ARRAY_NAMES]
+    struct = {k: dev[k] for k in names if k not in VALUE_ARRAY_NAMES}
+
+    def call4(v_shards, *vals):
+        by = dict(zip(val_names, vals))
+        return smapped(v_shards, *[by[k] if k in by else struct[k]
+                                   for k in names])
+
+    def val_fetch():
+        d = compiled.device_arrays()
+        return tuple(d[k] for k in val_names)
+
+    return call4, val_fetch
 
 
 # ---------------------------------------------------------------------------
@@ -840,7 +971,6 @@ def nap_forward_shardmap(compiled: CompiledNAP, mesh: Mesh,
                                 off_node_rows, num_segments=rows_pad)
         return w.reshape(1, 1, rows_pad, -1)
 
-    dev = compiled.device_arrays()
     names = ["full_send", "init_send", "final_send", "inter_gather",
              "bnode_gather", "boff_gather"]
     if fmt == "bsr":
@@ -855,11 +985,8 @@ def nap_forward_shardmap(compiled: CompiledNAP, mesh: Mesh,
     smapped = shard_map(per_device, mesh=mesh,
                         in_specs=(spec,) * (1 + len(names)), out_specs=spec,
                         check_vma=False)
-
-    def call4(v_shards):
-        return smapped(v_shards, *[dev[k] for k in names])
-
-    return _make_run(call4, fmt)
+    call4, val_fetch = _bind_shard_program(smapped, compiled, names)
+    return _make_run(call4, fmt, val_fetch)
 
 
 def nap_transpose_shardmap(compiled: CompiledNAP, mesh: Mesh,
@@ -964,7 +1091,6 @@ def nap_transpose_shardmap(compiled: CompiledNAP, mesh: Mesh,
                             full_send.reshape(-1), num_segments=cols_pad)
         return z.reshape(1, 1, cols_pad, -1)
 
-    dev = compiled.device_arrays()
     names = ["full_send", "init_send", "final_send", "inter_gather",
              "bnode_gather", "boff_gather"]
     if fmt == "ell":
@@ -977,11 +1103,8 @@ def nap_transpose_shardmap(compiled: CompiledNAP, mesh: Mesh,
     smapped = shard_map(per_device, mesh=mesh,
                         in_specs=(spec,) * (1 + len(names)), out_specs=spec,
                         check_vma=False)
-
-    def call4(u_shards):
-        return smapped(u_shards, *[dev[k] for k in names])
-
-    return _make_run(call4, fmt)
+    call4, val_fetch = _bind_shard_program(smapped, compiled, names)
+    return _make_run(call4, fmt, val_fetch)
 
 
 # ---------------------------------------------------------------------------
@@ -1017,6 +1140,11 @@ class CompiledStandard:
     ell_t_kmax: int = 0
     _dev_cache: Dict[str, jnp.ndarray] = dataclasses.field(
         default_factory=dict, repr=False, compare=False)
+    # see the identically-named CompiledNAP fields (swap_values support)
+    a_ref: Optional[CSR] = dataclasses.field(
+        default=None, repr=False, compare=False)
+    _cache_token: Optional[tuple] = dataclasses.field(
+        default=None, repr=False, compare=False)
 
     def __post_init__(self) -> None:
         if self.col_part is None:
@@ -1094,6 +1222,34 @@ class CompiledStandard:
     def device_arrays(self) -> Dict[str, jnp.ndarray]:
         """Mesh-shaped (n_nodes, ppn, ...) device arrays, memoized per name."""
         return _memo_device_arrays(self.topo, self.arrays, self._dev_cache)
+
+    def swap_values(self, a_new: CSR) -> List[str]:
+        """Hot-swap matrix VALUES in place; sparsity must be identical.
+        See :meth:`CompiledNAP.swap_values` — same contract, over the
+        two-segment standard-plan domain (``per_rank_coo`` refreshes and
+        every materialised format re-emits against the same pads)."""
+        _swap_check_structure(self, a_new)
+        blocks = split_all_blocks(a_new, self.part, self.topo,
+                                  col_part=self.col_part)
+        cols_pad = self.cols_pad
+        per_rank_coo = []
+        for blk in blocks:   # same packed-column layout as compile_standard
+            rr0, cc0, vv0 = blk.on_proc.to_coo()
+            rr1, cc1, vv1 = blk.on_node.to_coo()
+            rr2, cc2, vv2 = blk.off_node.to_coo()
+            rr = np.concatenate([rr0, rr1, rr2])
+            cc = np.concatenate([cc0, cols_pad + cc1,
+                                 cols_pad + blk.on_node_cols.size + cc2])
+            vv = np.concatenate([vv0, vv1, vv2])
+            per_rank_coo.append((rr, cc, vv))
+        self.per_rank_coo = per_rank_coo
+        changed = _swap_refresh_lazy(self, [
+            ("A_rows", "A_vals", self.ensure_coo),
+            ("ell_cols", "ell_vals", self.ensure_ell),
+            ("ell_t_cols", "ell_t_vals", self.ensure_ell_t),
+            ("fused_cols", "fused_blocks", self.ensure_fused)])
+        _swap_finish(self, a_new, changed)
+        return changed
 
 
 def compile_standard(a: CSR, part: RowPartition, topo: Topology,
@@ -1178,7 +1334,7 @@ def compile_standard(a: CSR, part: RowPartition, topo: Topology,
         pair_pad=pair_pad, nnz_pad=nnz_pad, block_shape=tuple(block_shape),
         arrays=dict(send_idx=send_idx, buf_gather=buf_gather),
         per_rank_coo=per_rank_coo, plan=plan, autotune=autotune,
-        requested_local_compute=local_compute)
+        requested_local_compute=local_compute, a_ref=a, _cache_token=key)
     if key is not None:
         _cache_put(key, compiled)
     return compiled
@@ -1236,20 +1392,16 @@ def standard_forward_shardmap(compiled: CompiledStandard, mesh: Mesh,
                             num_segments=rows_pad)
         return w.reshape(1, 1, rows_pad, -1)
 
-    dev = compiled.device_arrays()
-    names = {"bsr": ["fused_cols", "fused_blocks"],
-             "ell": ["ell_cols", "ell_vals"],
-             "coo": ["A_rows", "A_cols", "A_vals"]}[fmt]
+    names = ["send_idx", "buf_gather"]
+    names += {"bsr": ["fused_cols", "fused_blocks"],
+              "ell": ["ell_cols", "ell_vals"],
+              "coo": ["A_rows", "A_cols", "A_vals"]}[fmt]
     spec = P("node", "proc")
     smapped = shard_map(per_device, mesh=mesh,
-                        in_specs=(spec,) * (3 + len(names)), out_specs=spec,
+                        in_specs=(spec,) * (1 + len(names)), out_specs=spec,
                         check_vma=False)
-
-    def call4(v_shards):
-        return smapped(v_shards, dev["send_idx"], dev["buf_gather"],
-                       *[dev[k] for k in names])
-
-    return _make_run(call4, fmt)
+    call4, val_fetch = _bind_shard_program(smapped, compiled, names)
+    return _make_run(call4, fmt, val_fetch)
 
 
 def standard_transpose_shardmap(compiled: CompiledStandard, mesh: Mesh,
@@ -1304,7 +1456,6 @@ def standard_transpose_shardmap(compiled: CompiledStandard, mesh: Mesh,
                             num_segments=cols_pad)
         return z.reshape(1, 1, cols_pad, -1)
 
-    dev = compiled.device_arrays()
     names = ["send_idx", "buf_gather"]
     names += (["ell_t_cols", "ell_t_vals"] if fmt == "ell"
               else ["A_rows", "A_cols", "A_vals"])
@@ -1312,11 +1463,8 @@ def standard_transpose_shardmap(compiled: CompiledStandard, mesh: Mesh,
     smapped = shard_map(per_device, mesh=mesh,
                         in_specs=(spec,) * (1 + len(names)), out_specs=spec,
                         check_vma=False)
-
-    def call4(u_shards):
-        return smapped(u_shards, *[dev[k] for k in names])
-
-    return _make_run(call4, fmt)
+    call4, val_fetch = _bind_shard_program(smapped, compiled, names)
+    return _make_run(call4, fmt, val_fetch)
 
 
 # ---------------------------------------------------------------------------

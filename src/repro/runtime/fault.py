@@ -16,6 +16,8 @@ import time
 from collections import deque
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
+import numpy as np
+
 
 class HeartbeatMonitor:
     """Tracks per-node heartbeats; a node silent for ``timeout`` is dead."""
@@ -26,7 +28,14 @@ class HeartbeatMonitor:
         self.clock = clock
         self.last: Dict[str, float] = {n: clock() for n in nodes}
 
-    def beat(self, node: str) -> None:
+    def beat(self, node: str, register: bool = False) -> None:
+        """Record a heartbeat.  Beating an UNKNOWN node raises ``KeyError``
+        unless ``register=True`` — silently auto-registering meant a typo'd
+        node name looked healthy forever while the real node timed out."""
+        if node not in self.last and not register:
+            raise KeyError(
+                f"heartbeat from unregistered node {node!r} (known: "
+                f"{sorted(self.last)}); pass register=True to add it")
         self.last[node] = self.clock()
 
     def dead_nodes(self) -> List[str]:
@@ -56,7 +65,6 @@ class StragglerDetector:
         self.times.setdefault(node, deque(maxlen=self.window)).append(step_time)
 
     def stragglers(self) -> List[str]:
-        import numpy as np
         means = {n: float(np.mean(t)) for n, t in self.times.items() if t}
         if len(means) < 2:
             return []
@@ -103,7 +111,40 @@ class ElasticPolicy:
 
     def global_batch_plan(self, global_batch: int, old_data: int,
                           new_data: int) -> Tuple[int, int]:
-        """(per_row_batch, grad_accum_multiplier) preserving global batch."""
-        per_old = global_batch // old_data
-        accum = -(-per_old * old_data // (per_old * new_data))
-        return per_old, accum
+        """(per_row_batch, grad_accum_multiplier) preserving global batch
+        EXACTLY: ``per_row_batch * new_data * accum == global_batch``.
+
+        Contract: ``new_data`` must divide ``global_batch`` (the data axis
+        re-shards whole examples; a non-divisible shrink would change the
+        effective batch and thus the optimiser trajectory — callers that
+        cannot satisfy it must change ``global_batch`` explicitly instead
+        of silently training on a different batch).  ``accum`` is the
+        smallest multiplier keeping the per-row microbatch at or below the
+        pre-shrink ``global_batch // old_data``.
+        """
+        if global_batch % new_data != 0:
+            raise ValueError(
+                f"global batch {global_batch} is not divisible by the "
+                f"surviving data-axis size {new_data}; pick a new global "
+                f"batch explicitly rather than silently changing it")
+        per_old = max(1, global_batch // old_data)
+        total_per_row = global_batch // new_data  # = per_row_batch * accum
+        accum = -(-total_per_row // per_old)      # smallest with per_row <= per_old
+        while total_per_row % accum:              # bounded: accum <= total_per_row
+            accum += 1
+        per_row = total_per_row // accum
+        assert per_row * new_data * accum == global_batch
+        return per_row, accum
+
+    def survivor_topology(self, topo, dead_nodes: Sequence) -> Optional[object]:
+        """Node-drop rule for the SOLVER mesh (:class:`repro.core.topology.
+        Topology`): dead nodes leave whole (their ppn ranks go with them),
+        survivors keep the per-node process count.  Returns the survivor
+        :class:`Topology`, or ``None`` when the fleet is too degraded
+        (no node left) — the caller sheds load instead of deadlocking."""
+        from repro.core.topology import Topology
+
+        alive = topo.n_nodes - len(set(dead_nodes))
+        if alive < 1:
+            return None
+        return Topology(n_nodes=alive, ppn=topo.ppn)

@@ -1,0 +1,34 @@
+"""Fault-tolerant persistent solver service over the NAP operator stack.
+
+Public surface::
+
+    from repro.serve import SolverService, FaultPlan, dead_node, ManualClock
+
+    svc = SolverService(topo, backend="simulate",
+                        fault_plan=FaultPlan.of(dead_node(3, "node1")))
+    svc.register_matrix("poisson", A)
+    t = svc.submit("tenant-a", "poisson", b, kind="solve", deadline=50.0)
+    svc.run()
+    x = t.result()
+
+See ``src/repro/serve/README.md`` for the lifecycle (admit → batch →
+solve → recover), the fault-injection DSL, and plan-cache keying.
+"""
+from repro.serve.faultplan import (FabricError, FaultEvent, FaultPlan,
+                                   ManualClock, dead_node, straggler,
+                                   torn_checkpoint)
+from repro.serve.plancache import PlanCache, structure_key, values_fingerprint
+from repro.serve.service import (REJECT_BAD_OPERAND,
+                                 REJECT_DEADLINE_UNMEETABLE,
+                                 REJECT_FLEET_DEGRADED, REJECT_QUEUE_FULL,
+                                 REJECT_UNKNOWN_MATRIX, Request, SolverService,
+                                 Ticket, batched_cg)
+
+__all__ = [
+    "SolverService", "Request", "Ticket", "batched_cg",
+    "PlanCache", "structure_key", "values_fingerprint",
+    "FaultPlan", "FaultEvent", "FabricError", "ManualClock",
+    "dead_node", "straggler", "torn_checkpoint",
+    "REJECT_QUEUE_FULL", "REJECT_DEADLINE_UNMEETABLE",
+    "REJECT_UNKNOWN_MATRIX", "REJECT_BAD_OPERAND", "REJECT_FLEET_DEGRADED",
+]

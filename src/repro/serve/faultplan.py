@@ -1,0 +1,133 @@
+"""Deterministic fault injection for the solver service.
+
+A :class:`FaultPlan` is a script of :class:`FaultEvent`s keyed on the
+service's step counter — the service pump consults it at every step
+boundary, so a given (plan, workload) pair replays IDENTICALLY run after
+run.  Faults act through the clock-injectable production scaffolding, not
+through test monkey-patching:
+
+* ``dead_node(step, node)`` — the node stops heartbeating at ``step``;
+  :class:`repro.runtime.fault.HeartbeatMonitor` times it out and the
+  service's elastic recovery evicts it.  ``at_iteration=k`` delays the
+  death until an in-flight solve reaches CG iteration k (the scripted
+  *mid-solve* loss).  While a dead node is in the fleet, every collective
+  raises :class:`FabricError` — exactly how a real all-to-all fails.
+* ``straggler(step, node, slowdown)`` — the node starts reporting
+  ``slowdown``× step times; :class:`repro.runtime.fault.
+  StragglerDetector` flags it and the service evicts it through the same
+  recovery path as a death.
+* ``torn_checkpoint(step)`` — the NEXT checkpoint save dies between the
+  shard files and the ``_COMMITTED`` marker (via ``save_checkpoint``'s
+  ``on_before_commit`` hook); restore must fall back to the previous
+  committed step.
+
+``FaultPlan.random(seed, ...)`` draws a scripted plan from a seeded
+generator: same seed, same plan, same eviction step — the determinism
+the crash-consistency tests assert.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+
+class FabricError(RuntimeError):
+    """A collective failed because a fleet member is unreachable."""
+
+
+class ManualClock:
+    """Deterministic injectable clock: ``clock()`` reads, ``advance``
+    moves time forward.  Drop-in for ``time.monotonic`` everywhere the
+    runtime scaffolding accepts a ``clock`` callable."""
+
+    def __init__(self, start: float = 0.0):
+        self.t = float(start)
+
+    def __call__(self) -> float:
+        return self.t
+
+    def advance(self, dt: float) -> float:
+        if dt < 0:
+            raise ValueError(f"clock cannot run backwards (dt={dt})")
+        self.t += float(dt)
+        return self.t
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultEvent:
+    """One scripted fault, triggered when the service pump reaches
+    ``step``.  ``node`` names the victim for dead_node/straggler;
+    ``at_iteration`` (dead_node only) defers the death until an in-flight
+    solve reaches that CG iteration."""
+
+    step: int
+    kind: str                      # dead_node | straggler | torn_checkpoint
+    node: Optional[str] = None
+    slowdown: float = 1.0
+    at_iteration: Optional[int] = None
+
+    KINDS = ("dead_node", "straggler", "torn_checkpoint")
+
+    def __post_init__(self) -> None:
+        if self.kind not in self.KINDS:
+            raise ValueError(f"unknown fault kind {self.kind!r}; "
+                             f"one of {self.KINDS}")
+        if self.kind != "torn_checkpoint" and self.node is None:
+            raise ValueError(f"{self.kind} needs a target node")
+
+
+def dead_node(step: int, node: str,
+              at_iteration: Optional[int] = None) -> FaultEvent:
+    """Node death at ``step`` (optionally mid-solve at CG iteration k)."""
+    return FaultEvent(step=step, kind="dead_node", node=node,
+                      at_iteration=at_iteration)
+
+
+def straggler(step: int, node: str, slowdown: float = 4.0) -> FaultEvent:
+    """Node starts running ``slowdown``× slow at ``step``."""
+    return FaultEvent(step=step, kind="straggler", node=node,
+                      slowdown=float(slowdown))
+
+
+def torn_checkpoint(step: int) -> FaultEvent:
+    """The next checkpoint save after ``step`` tears before commit."""
+    return FaultEvent(step=step, kind="torn_checkpoint")
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultPlan:
+    """An immutable script of fault events, consulted per service step."""
+
+    events: Tuple[FaultEvent, ...] = ()
+
+    def at(self, step: int) -> List[FaultEvent]:
+        return [e for e in self.events if e.step == step]
+
+    def __len__(self) -> int:
+        return len(self.events)
+
+    @staticmethod
+    def of(*events: FaultEvent) -> "FaultPlan":
+        return FaultPlan(events=tuple(sorted(events, key=lambda e: e.step)))
+
+    @staticmethod
+    def random(seed: int, nodes: Sequence[str], n_steps: int,
+               n_events: int = 1) -> "FaultPlan":
+        """Seeded random plan over ``nodes`` within ``n_steps``.  Pure
+        function of its arguments: same seed → same events, same steps —
+        the determinism contract the tests pin down."""
+        rng = np.random.default_rng(seed)
+        events = []
+        for _ in range(n_events):
+            kind = str(rng.choice(FaultEvent.KINDS))
+            step = int(rng.integers(1, max(2, n_steps)))
+            if kind == "torn_checkpoint":
+                events.append(torn_checkpoint(step))
+            elif kind == "straggler":
+                events.append(straggler(step, str(rng.choice(list(nodes))),
+                                        slowdown=float(rng.integers(3, 8))))
+            else:
+                events.append(dead_node(step, str(rng.choice(list(nodes)))))
+        return FaultPlan.of(*events)
