@@ -27,6 +27,11 @@ Measures, on a forced 8-device host platform (2 nodes x 4 ppn):
   plus the lazily composed ``(R @ A @ P) @ x`` chain — all share the
   wall dict, so benchmarks/run.py's >1.5x regression gate covers them
   like every other wall entry.
+  The ``integrity_detect_overhead_s`` / ``integrity_recover_s`` walls
+  time the same operator apply with wire checksums + ABFT verification
+  armed, and with a scripted bitflip fired + recovered (detection plus
+  the clean retry) — the overhead numbers the README threat model
+  quotes, under the same regression gate.
 * ``modeled_bytes`` — padded vs effective bytes per phase (the quantity
   the paper's T/U balancing minimises) and plan-level message stats.
 * ``rap_assemble`` + the ``spgemm_rap_*`` / ``hierarchy_assemble_*``
@@ -202,6 +207,34 @@ def bench_spmv_wall(n_rows: int, nnz_per_row: int, quick: bool) -> dict:
             timed(lambda: op @ v), 5)
         walls[f"operator_transpose_nv{nv}_s"] = round(
             timed(lambda: op.T @ v), 5)
+
+    # -- integrity walls ----------------------------------------------------
+    # integrity_detect_overhead_s: the same end-to-end operator apply
+    # with the wire checksums + ABFT verification armed ("detect") — the
+    # relative overhead vs operator_forward_nv1_s is the number the
+    # README threat-model section quotes.  integrity_recover_s: one
+    # apply with a scripted inter-phase bitflip fired, so the wall
+    # includes detection + the clean retry from the retained packed
+    # shards.  Both sit in the shared wall dict under run.py's 1.5x
+    # gate; the integrity="off" program is unchanged (it IS the
+    # operator_forward walls above).
+    v1 = rng.standard_normal(n_rows)
+    op_det = nap_api.operator(a, part=part, topo=topo, method="nap",
+                              backend="shardmap", mesh=mesh, cache=False,
+                              integrity="detect")
+    walls["integrity_detect_overhead_s"] = round(
+        timed(lambda: op_det @ v1), 5)
+    op_rec = nap_api.operator(a, part=part, topo=topo, method="nap",
+                              backend="shardmap", mesh=mesh, cache=False,
+                              integrity="recover")
+
+    def recover_apply():
+        op_rec.inject_fault("inter", "bitflip", node=1, proc=0, slot=0,
+                            element=1, bit=20)
+        return op_rec @ v1
+
+    walls["integrity_recover_s"] = round(timed(recover_apply), 5)
+    assert op_rec.integrity_report()["recovered"] > 0
 
     # -- rectangular operator walls (independent row/col partitions) -------
     # forward packs by the column partition, transpose by the row

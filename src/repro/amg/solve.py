@@ -19,6 +19,7 @@ from typing import Callable, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.amg.hierarchy import Level
+from repro.core.integrity import IntegrityError
 from repro.core.partition import contiguous_partition
 from repro.sparse.csr import CSR
 
@@ -209,7 +210,8 @@ def cg_solve(a: CSR, b: np.ndarray, tol: float = 1e-8, maxiter: int = 500,
              precond: Optional[Callable[[np.ndarray], np.ndarray]] = None,
              spmv: Optional[Callable] = None,
              x0: Optional[np.ndarray] = None,
-             callback: Optional[Callable[[int, np.ndarray], None]] = None):
+             callback: Optional[Callable[[int, np.ndarray], None]] = None,
+             verify_every: int = 0, verify_tol: float = 1e-6):
     """(Preconditioned) conjugate gradients; returns (x, iters, relres).
 
     ``spmv`` may be a plain callable or a NapOperator.  ``x0`` warm-starts
@@ -220,6 +222,18 @@ def cg_solve(a: CSR, b: np.ndarray, tol: float = 1e-8, maxiter: int = 500,
     rebuilds its Krylov space from the checkpointed x, so iterate
     trajectories differ from an uninterrupted run, but any solve driven
     to ``tol`` satisfies the same residual contract.
+
+    ``verify_every=k`` (0 = off; the default path is bit-identical to a
+    build without the feature) adds a SELF-VERIFYING replay check every k
+    iterations: the recursive residual ``r`` is compared against the true
+    residual ``b - A x`` (one extra SpMV).  A silently corrupted SpMV
+    poisons the recursion — the two drift apart far beyond float
+    round-off — so on a drift past ``verify_tol`` (relative to ``||b||``)
+    the solver rolls back to the LAST VERIFIED iterate and replays; a
+    transient fault replays clean and the trajectory re-joins the
+    fault-free one exactly.  Drift that persists at the same iterate
+    raises :class:`repro.core.integrity.IntegrityError` (the corruption
+    is not transient — retrying cannot help).
     """
     mv = spmv or a.matvec
     x = np.zeros_like(b) if x0 is None else np.array(x0, dtype=b.dtype)
@@ -231,11 +245,31 @@ def cg_solve(a: CSR, b: np.ndarray, tol: float = 1e-8, maxiter: int = 500,
     rel = float(np.linalg.norm(r)) / b_norm
     if rel < tol:     # warm start already converged
         return x, 0, rel
-    for it in range(1, maxiter + 1):
+    snap = (x.copy(), r.copy(), p.copy(), rz) if verify_every else None
+    snap_it = 0
+    failed_at = -1
+    it = 1
+    while it <= maxiter:
         ap = mv(p)
         alpha = rz / max(float(p @ ap), 1e-300)
         x += alpha * p
         r -= alpha * ap
+        verified = False
+        if verify_every and it % verify_every == 0:
+            drift = float(np.linalg.norm((b - mv(x)) - r)) / b_norm
+            if drift > verify_tol:
+                if failed_at == it:
+                    raise IntegrityError(
+                        f"CG true-residual replay check failed twice at "
+                        f"iteration {it} (drift {drift:.3e} > "
+                        f"{verify_tol:.1e}): persistent SpMV corruption")
+                failed_at = it
+                x, r, p = snap[0].copy(), snap[1].copy(), snap[2].copy()
+                rz = snap[3]
+                it = snap_it + 1
+                continue
+            verified = True
+            failed_at = -1
         if callback is not None:
             callback(it, x)
         rel = float(np.linalg.norm(r)) / b_norm
@@ -245,6 +279,14 @@ def cg_solve(a: CSR, b: np.ndarray, tol: float = 1e-8, maxiter: int = 500,
         rz_new = float(r @ z)
         p = z + (rz_new / max(rz, 1e-300)) * p
         rz = rz_new
+        # snapshot AFTER the direction update: the saved tuple is the
+        # complete loop-top state of iteration it+1, so a rollback replays
+        # the clean trajectory exactly (a verify-point snapshot would pair
+        # the new x/r with the PREVIOUS search direction)
+        if verified:
+            snap = (x.copy(), r.copy(), p.copy(), rz)
+            snap_it = it
+        it += 1
     return x, maxiter, float(np.linalg.norm(r)) / b_norm
 
 
@@ -259,7 +301,8 @@ def _safe_div(num: float, den: float) -> float:
 
 def bicgstab_solve(a: CSR, b: np.ndarray, tol: float = 1e-8,
                    maxiter: int = 500, spmv: Optional[Callable] = None,
-                   spmv_t: Optional[Callable] = None):
+                   spmv_t: Optional[Callable] = None,
+                   verify_every: int = 0, verify_tol: float = 1e-6):
     """BiCG-stabilised solve for nonsymmetric systems; returns
     (x, iters, relres).
 
@@ -267,21 +310,54 @@ def bicgstab_solve(a: CSR, b: np.ndarray, tol: float = 1e-8,
     stabilises needs ``A.T @ v`` — pass ``spmv_t`` (e.g. ``op.T``) to run
     plain BiCG instead, exercising the transpose SpMV the NapOperator
     front-end provides from the same compiled plan.
+
+    ``verify_every=k`` adds the same true-residual replay check as
+    :func:`cg_solve` (0 = off, default path untouched): drift between
+    the recursive and true residual past ``verify_tol`` rolls back to
+    the last verified iterate and replays; persistent drift at the same
+    iterate raises :class:`repro.core.integrity.IntegrityError`.
     """
     mv = spmv or a.matvec
     x = np.zeros_like(b)
     r = b - mv(x)
     b_norm = max(float(np.linalg.norm(b)), 1e-30)
+
+    def _check(it, x, r, failed_at) -> bool:
+        """Shared replay check: True means drift past tolerance (roll
+        back); a REPEAT failure at the same iterate raises instead —
+        retrying cannot fix a persistent corruption."""
+        drift = float(np.linalg.norm((b - mv(x)) - r)) / b_norm
+        if drift <= verify_tol:
+            return False
+        if failed_at == it:
+            raise IntegrityError(
+                f"true-residual replay check failed twice at "
+                f"iteration {it} (drift {drift:.3e} > "
+                f"{verify_tol:.1e}): persistent SpMV corruption")
+        return True
+
     if spmv_t is not None:
         # plain BiCG (Lanczos biorthogonalisation) using A and A.T
         rt = r.copy()
         p, pt = r.copy(), rt.copy()
         rho = float(rt @ r)
-        for it in range(1, maxiter + 1):
+        snap = (x.copy(), r.copy(), rt.copy(), p.copy(), pt.copy(), rho) \
+            if verify_every else None
+        snap_it, failed_at, it = 0, -1, 1
+        while it <= maxiter:
             ap = mv(p)
             alpha = _safe_div(rho, float(pt @ ap))
             x += alpha * p
             r -= alpha * ap
+            verified = False
+            if verify_every and it % verify_every == 0:
+                if _check(it, x, r, failed_at):
+                    failed_at = it
+                    x, r, rt, p, pt = (s.copy() for s in snap[:5])
+                    rho = snap[5]
+                    it = snap_it + 1
+                    continue
+                verified, failed_at = True, -1
             rel = float(np.linalg.norm(r)) / b_norm
             if rel < tol:
                 return x, it, rel
@@ -291,11 +367,21 @@ def bicgstab_solve(a: CSR, b: np.ndarray, tol: float = 1e-8,
             p = r + beta * p
             pt = rt + beta * pt
             rho = rho_new
+            # snapshot AFTER the direction updates — the complete loop-top
+            # state of iteration it+1, so a rollback replays exactly
+            if verified:
+                snap = (x.copy(), r.copy(), rt.copy(), p.copy(), pt.copy(),
+                        rho)
+                snap_it = it
+            it += 1
         return x, maxiter, float(np.linalg.norm(r)) / b_norm
     rt0 = r.copy()
     rho = alpha = omega = 1.0
     v = p = np.zeros_like(b)
-    for it in range(1, maxiter + 1):
+    snap = (x.copy(), r.copy(), v.copy(), p.copy(), rho, alpha, omega) \
+        if verify_every else None
+    snap_it, failed_at, it = 0, -1, 1
+    while it <= maxiter:
         rho_new = float(rt0 @ r)
         beta = _safe_div(rho_new, rho) * _safe_div(alpha, omega)
         rho = rho_new
@@ -307,7 +393,21 @@ def bicgstab_solve(a: CSR, b: np.ndarray, tol: float = 1e-8,
         omega = _safe_div(float(t @ s), float(t @ t))
         x += alpha * p + omega * s
         r = s - omega * t
+        if verify_every and it % verify_every == 0:
+            if _check(it, x, r, failed_at):
+                failed_at = it
+                x, r, v, p = (s_.copy() for s_ in snap[:4])
+                rho, alpha, omega = snap[4:]
+                it = snap_it + 1
+                continue
+            failed_at = -1
+            # BiCGSTAB updates every recurrence at the loop TOP, so the
+            # verify-point state IS the loop-top state of iteration it+1
+            snap = (x.copy(), r.copy(), v.copy(), p.copy(), rho, alpha,
+                    omega)
+            snap_it = it
         rel = float(np.linalg.norm(r)) / b_norm
         if rel < tol:
             return x, it, rel
+        it += 1
     return x, maxiter, float(np.linalg.norm(r)) / b_norm

@@ -54,11 +54,13 @@ from repro.core.cost_model import (LocalComputeParams, MachineParams,
                                    TPU_V5E_LOCAL)
 from repro.core.executors import (OperatorSpec, available_executors,
                                   bind_executor, register_executor)
+from repro.core.integrity import IntegrityError, MessageFault
 from repro.core.partition import RowPartition, contiguous_partition
 from repro.core.topology import Topology
 
 __all__ = ["operator", "NapOperator", "ComposedOperator",
-           "available_executors", "register_executor"]
+           "available_executors", "register_executor",
+           "IntegrityError", "MessageFault"]
 
 
 def operator(a, topo: Optional[Topology] = None,
@@ -70,7 +72,8 @@ def operator(a, topo: Optional[Topology] = None,
              pairing: str = "aligned",
              block_shape: Tuple[int, int] = (8, 128), nv_block: int = 128,
              interpret: bool = True, cache: bool = True,
-             tuner: LocalComputeParams = TPU_V5E_LOCAL) -> "NapOperator":
+             tuner: LocalComputeParams = TPU_V5E_LOCAL,
+             integrity: str = "off") -> "NapOperator":
     """Build a :class:`NapOperator` for ``a`` on a (topo, partitions) layout.
 
     Parameters
@@ -106,6 +109,15 @@ def operator(a, topo: Optional[Topology] = None,
         TPU all-to-all-natural choice and the only one the shardmap
         backend lowers; "balanced" is the paper's text rule, available on
         the simulate backend).
+    integrity : ``"off"`` (default — the program is bit-for-bit the
+        uninstrumented one) | ``"detect"`` (wire checksums over every
+        exchange message + ABFT result verification per apply; a mismatch
+        raises :class:`IntegrityError` with phase/message attribution) |
+        ``"recover"`` (same checks, but a mismatch retries the apply from
+        the retained packed refs — bit-identical to the fault-free run —
+        and only raises when the mismatch persists).  Inspect with
+        ``op.integrity_report()``; script deterministic faults with
+        ``op.inject_fault(...)``.
     """
     m, n = a.shape
     if part is not None:
@@ -131,10 +143,14 @@ def operator(a, topo: Optional[Topology] = None,
     if backend == "shardmap" and pairing != "aligned":
         raise ValueError("the shardmap backend lowers pairing='aligned' "
                          "only (the all-to-all slot contract)")
+    if integrity not in ("off", "detect", "recover"):
+        raise ValueError(f"integrity must be off|detect|recover, "
+                         f"got {integrity!r}")
     spec = OperatorSpec(method=method, backend=backend,
                         local_compute=local_compute, pairing=pairing,
                         block_shape=tuple(block_shape), nv_block=nv_block,
-                        interpret=interpret, cache=cache, tuner=tuner)
+                        interpret=interpret, cache=cache, tuner=tuner,
+                        integrity=integrity)
     exec_ = bind_executor(backend, method, a, row_part, col_part, topo, spec,
                          mesh=mesh)
     return NapOperator(a=a, row_part=row_part, col_part=col_part, topo=topo,
@@ -269,6 +285,35 @@ class NapOperator:
         :meth:`swap_values` prove the hot-swap reused the compiled
         program."""
         return self.executor.trace_counts()
+
+    # -- integrity ---------------------------------------------------------
+    def integrity_report(self):
+        """Check/mismatch counters, scope attribution, per-node strikes
+        and quarantine candidates (``{"mode": "off"}`` when the operator
+        was built without integrity)."""
+        return self.executor.integrity_report()
+
+    def inject_fault(self, phase: str, kind: str = "bitflip", *,
+                     node: int = 0, proc: int = 0, slot: int = 0,
+                     element: int = 0, bit: int = 30,
+                     direction: Optional[str] = None) -> MessageFault:
+        """Script ONE deterministic message fault for the next matching
+        apply (requires ``integrity != "off"``; the fault fires once and
+        replays exactly — see :class:`repro.api.MessageFault`).
+        ``direction`` defaults to this view's own direction, so
+        ``op.T.inject_fault(...)`` targets the transpose apply."""
+        if direction is None:
+            direction = "transpose" if self.transposed else "forward"
+        fault = MessageFault(phase=phase, kind=kind, node=node, proc=proc,
+                             slot=slot, element=element, bit=bit,
+                             direction=direction)
+        self.queue_fault(fault)
+        return fault
+
+    def queue_fault(self, fault: MessageFault) -> None:
+        """Script a pre-built :class:`MessageFault` (see
+        :meth:`inject_fault` for the keyword convenience)."""
+        self.executor.queue_fault(fault)
 
     # -- introspection -----------------------------------------------------
     def stats(self):
@@ -440,7 +485,8 @@ class ComposedOperator:
                         local_compute=spec.local_compute, mesh=mesh,
                         pairing=spec.pairing, block_shape=spec.block_shape,
                         nv_block=spec.nv_block, interpret=spec.interpret,
-                        cache=spec.cache, tuner=spec.tuner)
+                        cache=spec.cache, tuner=spec.tuner,
+                        integrity=spec.integrity)
 
     # -- per-stage introspection, rolled up --------------------------------
     def stats(self) -> List[object]:

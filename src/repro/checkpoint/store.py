@@ -1,9 +1,16 @@
 """Sharded checkpoints with manifest, async save, and ELASTIC restore.
 
 Layout per step:  <dir>/step_<n>/
-    manifest.json      tree structure, shapes, dtypes, mesh, data cursor
+    manifest.json      tree structure, shapes, dtypes, shard digests
     shard_<k>.npz      leaf arrays (chunked so no single file balloons)
     _COMMITTED         written LAST — a crash mid-save never corrupts restore
+
+The manifest records a sha256 content digest per shard file, verified on
+every load: the ``_COMMITTED`` marker proves the save FINISHED, the
+digests prove the bytes read back are the bytes written — bitrot or a
+partial overwrite inside an intact shard set raises
+:class:`repro.core.integrity.IntegrityError` naming the corrupt shard
+instead of silently restoring garbage iterates.
 
 Elastic restore: arrays are stored UNSHARDED per leaf (on a real multi-host
 fleet each host writes its shard slice + index, same manifest), so restoring
@@ -12,6 +19,7 @@ surviving-nodes restart path in runtime/elastic.py relies on this.
 """
 from __future__ import annotations
 
+import hashlib
 import json
 import os
 import pathlib
@@ -22,7 +30,17 @@ from typing import Any, Callable, Dict, List, Optional, Tuple
 import jax
 import numpy as np
 
+from repro.core.integrity import IntegrityError
+
 Pytree = Any
+
+
+def _file_digest(path: pathlib.Path) -> str:
+    h = hashlib.sha256()
+    with open(path, "rb") as f:
+        for block in iter(lambda: f.read(1 << 20), b""):
+            h.update(block)
+    return h.hexdigest()
 
 
 def _flatten_with_names(tree: Pytree) -> Tuple[List[Tuple[str, Any]], Any]:
@@ -54,10 +72,14 @@ def save_checkpoint(directory: str, step: int, tree: Pytree,
     shard, shard_bytes, shard_id = {}, 0, 0
     limit = shard_mb * 1_000_000
 
+    digests: Dict[str, str] = {}
+
     def flush():
         nonlocal shard, shard_bytes, shard_id
         if shard:
-            np.savez(path / f"shard_{shard_id}.npz", **shard)
+            fname = f"shard_{shard_id}.npz"
+            np.savez(path / fname, **shard)
+            digests[fname] = _file_digest(path / fname)
             shard, shard_bytes = {}, 0
             shard_id += 1
 
@@ -76,6 +98,7 @@ def save_checkpoint(directory: str, step: int, tree: Pytree,
             flush()
     flush()
     manifest["shards"] = shard_id
+    manifest["shard_digests"] = digests
     with open(path / "manifest.json", "w") as f:
         json.dump(manifest, f)
     if on_before_commit is not None:
@@ -101,6 +124,8 @@ def load_checkpoint(directory: str, step: Optional[int] = None,
         raise FileNotFoundError(f"checkpoint {path} not committed")
     with open(path / "manifest.json") as f:
         manifest = json.load(f)
+    # pre-digest manifests (older checkpoints) skip verification
+    digests = manifest.get("shard_digests", {})
     shards = {}
     for i in range(manifest["shards"]):   # manifest stores the exact count
         shard_path = path / f"shard_{i}.npz"
@@ -109,6 +134,18 @@ def load_checkpoint(directory: str, step: Optional[int] = None,
             raise FileNotFoundError(
                 f"checkpoint {path} is committed but {shard_path.name} is "
                 f"missing; it held {len(held)} leaves: {held}")
+        want = digests.get(shard_path.name)
+        if want is not None:
+            got = _file_digest(shard_path)
+            if got != want:
+                held = [l["name"] for l in manifest["leaves"]
+                        if l["shard"] == i]
+                raise IntegrityError(
+                    f"checkpoint shard {shard_path} is corrupt: sha256 "
+                    f"{got[:16]}… != manifest {want[:16]}… — the shard set "
+                    f"is intact but the bytes changed since the save "
+                    f"(bitrot / partial overwrite); it held {len(held)} "
+                    f"leaves: {held}")
         shards[i] = np.load(shard_path)
     import ml_dtypes
     by_name = {}

@@ -44,6 +44,8 @@ from repro.core.comm_graph import (build_nap_plan, build_standard_plan,
                                    nap_stats, standard_stats)
 from repro.core.cost_model import (LocalComputeParams, MachineParams,
                                    TPU_V5E_LOCAL, nap_cost, standard_cost)
+from repro.core.integrity import (IntegrityError, IntegrityState, MessageFault,
+                                  SimWire)
 from repro.core.partition import RowPartition
 from repro.core.spmv import (simulate_nap_spmv, simulate_nap_spmv_transpose,
                              simulate_standard_spmv,
@@ -52,7 +54,7 @@ from repro.core.topology import Topology
 
 # NOTE: repro.core.spmv_jax (and thus jax) is imported lazily inside the
 # shardmap executors — the simulate backend stays importable and usable on
-# a jax-free numpy installation.
+# a jax-free numpy installation (repro.core.integrity is numpy-only).
 
 
 @dataclasses.dataclass(frozen=True)
@@ -68,6 +70,7 @@ class OperatorSpec:
     interpret: bool = True
     cache: bool = True
     tuner: LocalComputeParams = TPU_V5E_LOCAL
+    integrity: str = "off"          # "off" | "detect" | "recover"
 
 
 # ---------------------------------------------------------------------------
@@ -135,6 +138,9 @@ class _ShardmapExecutor:
         self._mesh = mesh
         self._compiled = None
         self._runs: Dict[str, Callable] = {}
+        self._integrity = (IntegrityState(spec.integrity, topo,
+                                          type(self).method)
+                           if spec.integrity != "off" else None)
 
     # -- lazy resources ----------------------------------------------------
     @property
@@ -168,8 +174,64 @@ class _ShardmapExecutor:
             in_part, in_pad, out_part = self.row_part, c.rows_pad, self.col_part
             v = check_operand(self.a.shape[0], v)
         shards = pack_vector(v, in_part, self.topo, in_pad)
-        w = self._run(direction)(shards, donate=donate)
+        if self._integrity is not None:
+            w = self._apply_verified(direction, shards)
+        else:
+            w = self._run(direction)(shards, donate=donate)
         return unpack_vector(np.asarray(w), out_part, self.topo)
+
+    def _apply_verified(self, direction: str, shards) -> np.ndarray:
+        """Integrity path: arm any scripted faults, run the instrumented
+        program (which also returns the wire-checksum and ABFT aux
+        outputs), verify on the host, and — under ``"recover"`` — retry
+        the apply from the RETAINED packed shards with the fault consumed
+        (never donated), which reproduces the fault-free result
+        bit-for-bit.  Persistent mismatches raise after the retry."""
+        st = self._integrity
+        c = self.compiled
+        n_terms = c.rows_pad + c.packed_x_len
+        st.counters["applies"] += 1
+        st.arm(direction)
+        try:
+            w, chk, abft = self._run(direction)(shards, donate=False)
+            mism = st.verify(np.asarray(chk), np.asarray(abft), direction,
+                             n_terms)
+            if not mism:
+                return w
+            if st.mode == "detect":
+                raise IntegrityError(
+                    f"{len(mism)} integrity mismatch(es) on {direction} "
+                    f"apply: " + "; ".join(str(m) for m in mism), mism)
+            # recover: scripted faults were consumed at arm time, so the
+            # retry runs the identical program on identical inputs clean.
+            st.counters["retries"] += 1
+            st.disarm()
+            w, chk, abft = self._run(direction)(shards, donate=False)
+            mism = st.verify(np.asarray(chk), np.asarray(abft), direction,
+                             n_terms)
+            if mism:
+                raise IntegrityError(
+                    f"integrity mismatch persisted through retry on "
+                    f"{direction} apply: " + "; ".join(str(m) for m in mism),
+                    mism)
+            st.counters["recovered"] += 1
+            return w
+        finally:
+            st.disarm()
+
+    # -- integrity surface -------------------------------------------------
+    def queue_fault(self, fault: MessageFault) -> None:
+        """Script a deterministic message fault for the NEXT matching
+        apply (fires once; requires ``integrity != "off"``)."""
+        if self._integrity is None:
+            raise ValueError("fault injection requires integrity='detect' "
+                             "or 'recover' on the operator")
+        self._integrity.queue_fault(fault)
+
+    def integrity_report(self) -> Dict[str, object]:
+        if self._integrity is None:
+            return {"mode": "off"}
+        return self._integrity.report()
 
     def forward(self, v: np.ndarray, donate: bool = False) -> np.ndarray:
         return self._apply("forward", v, donate)
@@ -225,15 +287,13 @@ class NapShardmapExecutor(_ShardmapExecutor):
     def _build(self, direction: str):
         from repro.core.spmv_jax import (nap_forward_shardmap,
                                          nap_transpose_shardmap)
+        kw = dict(local_compute=self.spec.local_compute,
+                  nv_block=self.spec.nv_block, interpret=self.spec.interpret)
+        if self._integrity is not None:
+            kw.update(integrity=True, fault_fetch=self._integrity.fetch_spec)
         if direction == "forward":
-            return nap_forward_shardmap(
-                self.compiled, self.mesh,
-                local_compute=self.spec.local_compute,
-                nv_block=self.spec.nv_block, interpret=self.spec.interpret)
-        return nap_transpose_shardmap(self.compiled, self.mesh,
-                                      local_compute=self.spec.local_compute,
-                                      nv_block=self.spec.nv_block,
-                                      interpret=self.spec.interpret)
+            return nap_forward_shardmap(self.compiled, self.mesh, **kw)
+        return nap_transpose_shardmap(self.compiled, self.mesh, **kw)
 
     def stats(self) -> Dict[str, object]:
         from repro.core.spmv_jax import padded_traffic
@@ -261,14 +321,13 @@ class StandardShardmapExecutor(_ShardmapExecutor):
     def _build(self, direction: str):
         from repro.core.spmv_jax import (standard_forward_shardmap,
                                          standard_transpose_shardmap)
+        kw = dict(local_compute=self.spec.local_compute,
+                  nv_block=self.spec.nv_block, interpret=self.spec.interpret)
+        if self._integrity is not None:
+            kw.update(integrity=True, fault_fetch=self._integrity.fetch_spec)
         if direction == "forward":
-            return standard_forward_shardmap(
-                self.compiled, self.mesh,
-                local_compute=self.spec.local_compute,
-                nv_block=self.spec.nv_block, interpret=self.spec.interpret)
-        return standard_transpose_shardmap(
-            self.compiled, self.mesh, local_compute=self.spec.local_compute,
-            nv_block=self.spec.nv_block, interpret=self.spec.interpret)
+            return standard_forward_shardmap(self.compiled, self.mesh, **kw)
+        return standard_transpose_shardmap(self.compiled, self.mesh, **kw)
 
     def stats(self) -> Dict[str, object]:
         return {f"messages_{k}": v for k, v in
@@ -294,6 +353,9 @@ class _SimulateExecutor:
         self.a, self.topo, self.spec = a, topo, spec
         self.row_part, self.col_part = row_part, col_part
         self._plan = None
+        self._integrity = (IntegrityState(spec.integrity, topo,
+                                          type(self).method)
+                           if spec.integrity != "off" else None)
 
     @property
     def plan(self):
@@ -308,12 +370,57 @@ class _SimulateExecutor:
         return np.stack([fn(v[:, i]) for i in range(v.shape[1])], axis=1)
 
     def forward(self, v: np.ndarray, donate: bool = False) -> np.ndarray:
-        return self._columnwise(lambda col: self._forward(col), v,
-                                self.a.shape[1])
+        if self._integrity is None:
+            return self._columnwise(lambda col: self._forward(col), v,
+                                    self.a.shape[1])
+        return self._forward_verified(v)
+
+    def _forward_verified(self, v: np.ndarray) -> np.ndarray:
+        """Integrity path over the numpy mailboxes: one :class:`SimWire`
+        spans the whole (possibly multi-RHS) apply; a scripted fault
+        fires on its first matching message.  Detect raises, recover
+        re-runs clean (faults are consumed) — exact by construction."""
+        st = self._integrity
+        st.counters["applies"] += 1
+        wire = SimWire(self.topo, st.take_pending("forward"))
+        out = self._columnwise(lambda col: self._forward(col, wire=wire), v,
+                               self.a.shape[1])
+        mism = st.note_sim(wire)
+        if not mism:
+            return out
+        if st.mode == "detect":
+            raise IntegrityError(
+                f"{len(mism)} integrity mismatch(es) on forward apply: "
+                + "; ".join(str(m) for m in mism), mism)
+        st.counters["retries"] += 1
+        out = self._columnwise(lambda col: self._forward(col), v,
+                               self.a.shape[1])
+        st.counters["recovered"] += 1
+        return out
 
     def transpose(self, u: np.ndarray, donate: bool = False) -> np.ndarray:
+        st = self._integrity
+        if st is not None:
+            if any(f.direction in ("any", "transpose") for f in st.pending):
+                raise NotImplementedError(
+                    "message-fault injection on the transpose direction is "
+                    "shardmap-only: the simulate transposes reverse the "
+                    "exchange phases algebraically without mailboxes")
+            st.counters["applies"] += 1
         return self._columnwise(lambda col: self._transpose(col), u,
                                 self.a.shape[0])
+
+    # -- integrity surface -------------------------------------------------
+    def queue_fault(self, fault: MessageFault) -> None:
+        if self._integrity is None:
+            raise ValueError("fault injection requires integrity='detect' "
+                             "or 'recover' on the operator")
+        self._integrity.queue_fault(fault)
+
+    def integrity_report(self) -> Dict[str, object]:
+        if self._integrity is None:
+            return {"mode": "off"}
+        return self._integrity.report()
 
     def swap_values(self, a_new) -> None:
         """Hot-swap matrix VALUES; the comm plan is pure structure and is
@@ -348,8 +455,8 @@ class NapSimulateExecutor(_SimulateExecutor):
                               self.topo, pairing=self.spec.pairing,
                               col_part=self.col_part)
 
-    def _forward(self, v):
-        return simulate_nap_spmv(self.a, v, self.plan)
+    def _forward(self, v, wire=None):
+        return simulate_nap_spmv(self.a, v, self.plan, wire=wire)
 
     def _transpose(self, u):
         return simulate_nap_spmv_transpose(self.a, u, self.plan)
@@ -370,8 +477,8 @@ class StandardSimulateExecutor(_SimulateExecutor):
                                    self.row_part, self.topo,
                                    col_part=self.col_part)
 
-    def _forward(self, v):
-        return simulate_standard_spmv(self.a, v, self.plan)
+    def _forward(self, v, wire=None):
+        return simulate_standard_spmv(self.a, v, self.plan, wire=wire)
 
     def _transpose(self, u):
         return simulate_standard_spmv_transpose(self.a, u, self.plan)

@@ -113,10 +113,16 @@ class _MailBox:
     chunk index never repeats an (len_senders, len_receivers) residue pair).
     A duplicate post is a plan bug and fails loudly instead of silently
     overwriting the first payload.
+
+    An optional :class:`repro.core.integrity.SimWire` sits at the post /
+    fetch boundary: the sender checksums the clean payload (and a scripted
+    fault may corrupt it in flight), the receiver re-checksums on fetch —
+    the numpy twin of the instrumented shard_map exchange.
     """
 
-    def __init__(self) -> None:
+    def __init__(self, wire=None, phase: str = "") -> None:
         self.store: Dict[Tuple[int, int], np.ndarray] = {}
+        self.wire, self.phase = wire, phase
 
     def post(self, msg: Message, values: np.ndarray) -> None:
         assert values.shape == msg.idx.shape
@@ -124,10 +130,15 @@ class _MailBox:
         assert key not in self.store, \
             f"duplicate message for rank pair {key}: plan emitted two messages " \
             f"in one phase for the same (src, dst)"
+        if self.wire is not None:
+            values = self.wire.send(self.phase, msg, values)
         self.store[key] = values
 
     def fetch(self, msg: Message) -> np.ndarray:
-        return self.store[(msg.src, msg.dst)]
+        vals = self.store[(msg.src, msg.dst)]
+        if self.wire is not None:
+            self.wire.recv(self.phase, msg, vals)
+        return vals
 
 
 def _gather_from(available: Dict[int, float], idx: np.ndarray) -> np.ndarray:
@@ -137,19 +148,22 @@ def _gather_from(available: Dict[int, float], idx: np.ndarray) -> np.ndarray:
     return np.array([available[int(j)] for j in idx], dtype=np.float64)
 
 
-def simulate_standard_spmv(a: CSR, v: np.ndarray, plan: StandardPlan) -> np.ndarray:
+def simulate_standard_spmv(a: CSR, v: np.ndarray, plan: StandardPlan,
+                           wire=None) -> np.ndarray:
     """Algorithm 1 with explicit message passing (numpy).
 
     ``v`` has length ``a.shape[1]`` and is owned by the plan's column
     partition; the output has length ``a.shape[0]`` laid out by the row
     partition (the two coincide for square single-partition systems).
+    ``wire`` optionally threads a :class:`repro.core.integrity.SimWire`
+    through the mailbox (checksums + scripted faults).
     """
     part, topo = plan.partition, plan.topology
     cpart = plan.col_part
     blocks = split_all_blocks(a, part, topo, col_part=cpart)
     w = np.zeros(a.shape[0])
     # post all sends (Isend)
-    box = _MailBox()
+    box = _MailBox(wire, "pair")
     for r in range(topo.n_procs):
         mine = {int(j): float(v[j]) for j in cpart.rows_of(r)}
         for msg in plan.sends[r]:
@@ -175,13 +189,16 @@ def simulate_standard_spmv(a: CSR, v: np.ndarray, plan: StandardPlan) -> np.ndar
     return w
 
 
-def simulate_nap_spmv(a: CSR, v: np.ndarray, plan: NAPPlan) -> np.ndarray:
+def simulate_nap_spmv(a: CSR, v: np.ndarray, plan: NAPPlan,
+                      wire=None) -> np.ndarray:
     """Algorithms 2+3 with explicit per-phase message passing (numpy).
 
     Phase order follows Algorithm 3: local full + local init first, then
     inter-node Isend, local SpMVs overlap, then the final local scatter.
     ``v`` is owned by the plan's column partition, the output by the row
     partition (identical for square single-partition systems).
+    ``wire`` optionally threads a :class:`repro.core.integrity.SimWire`
+    through all four phase mailboxes (checksums + scripted faults).
     """
     part, topo = plan.partition, plan.topology
     cpart = plan.col_part
@@ -192,14 +209,14 @@ def simulate_nap_spmv(a: CSR, v: np.ndarray, plan: NAPPlan) -> np.ndarray:
              for r in range(topo.n_procs)]
 
     # -- phase A: fully-local exchange (on_node -> on_node) ------------------
-    box_full = _MailBox()
+    box_full = _MailBox(wire, "full")
     for r in range(topo.n_procs):
         for msg in plan.local_full_sends[r]:
             assert topo.same_node(msg.src, msg.dst), "full-local must stay on node"
             box_full.post(msg, _gather_from(owned[r], msg.idx))
 
     # -- phase B: local init redistribution (on_node -> off_node) ------------
-    box_init = _MailBox()
+    box_init = _MailBox(wire, "init")
     for r in range(topo.n_procs):
         for msg in plan.local_init_sends[r]:
             assert topo.same_node(msg.src, msg.dst), "init redistribution stays on node"
@@ -211,7 +228,7 @@ def simulate_nap_spmv(a: CSR, v: np.ndarray, plan: NAPPlan) -> np.ndarray:
                 staged[r][int(jj)] = float(val)
 
     # -- phase C: inter-node exchange (the only network injection) -----------
-    box_inter = _MailBox()
+    box_inter = _MailBox(wire, "inter")
     for r in range(topo.n_procs):
         for msg in plan.inter_sends[r]:
             assert not topo.same_node(msg.src, msg.dst), "inter phase crosses nodes"
@@ -223,7 +240,7 @@ def simulate_nap_spmv(a: CSR, v: np.ndarray, plan: NAPPlan) -> np.ndarray:
                 arrived[r][int(jj)] = float(val)
 
     # -- phase D: local final scatter (off_node -> on_node) ------------------
-    box_final = _MailBox()
+    box_final = _MailBox(wire, "final")
     for r in range(topo.n_procs):
         for msg in plan.local_final_sends[r]:
             assert topo.same_node(msg.src, msg.dst)

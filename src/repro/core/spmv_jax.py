@@ -99,6 +99,8 @@ from repro.compat import shard_map
 from repro.core.comm_graph import (Message, NAPPlan, StandardPlan,
                                    build_nap_plan, build_standard_plan,
                                    lookup_slots)
+from repro.core.integrity import (NAP_MESSAGE_PHASES, STD_MESSAGE_PHASES,
+                                  phase_index)
 from repro.core.cost_model import (LOCAL_FORMATS, LocalComputeParams,
                                    TPU_V5E_LOCAL, choose_local_format,
                                    local_format_times)
@@ -305,6 +307,38 @@ class CompiledNAP:
         self.arrays["fused_blocks"] = fb
         self.bsr_layout.update(layout)
 
+    def ensure_abft(self) -> None:
+        """Materialise the ABFT checksum vectors (lazily, once): the
+        per-rank COLUMN sums ``c_p = 1^T A_p`` over the packed x domain
+        (forward check: ``sum(y_p) == c_p · x_packed``) and ROW sums
+        ``A_p 1`` over the output rows (transpose check), plus their
+        absolute-value twins feeding the dtype-aware tolerance scale.
+        Accumulated in float64 from the f32-rounded values the kernels
+        actually multiply, then stored f32 — value arrays, so a hot swap
+        refreshes them with zero retraces."""
+        if "abft_col" in self.arrays:
+            return
+        assert self.local_blocks is not None, "compiled plan lost its blocks"
+        n, n_x, rows_pad = self.topo.n_procs, self.packed_x_len, self.rows_pad
+        col = np.zeros((n, n_x), np.float64)
+        cola = np.zeros((n, n_x), np.float64)
+        row = np.zeros((n, rows_pad), np.float64)
+        rowa = np.zeros((n, rows_pad), np.float64)
+        offs = (("on_proc", 0), ("on_node", self.cols_pad),
+                ("off_node", self.cols_pad + self.pads["bnode"]))
+        for r, blk in enumerate(self.local_blocks):
+            for key_c, off in offs:
+                rr, cc, vv = getattr(blk, key_c).to_coo()
+                v32 = vv.astype(np.float32).astype(np.float64)
+                np.add.at(col[r], cc + off, v32)
+                np.add.at(cola[r], cc + off, np.abs(v32))
+                np.add.at(row[r], rr, v32)
+                np.add.at(rowa[r], rr, np.abs(v32))
+        self.arrays["abft_col"] = col.astype(np.float32)
+        self.arrays["abft_col_abs"] = cola.astype(np.float32)
+        self.arrays["abft_row"] = row.astype(np.float32)
+        self.arrays["abft_row_abs"] = rowa.astype(np.float32)
+
     def device_arrays(self) -> Dict[str, jnp.ndarray]:
         """Mesh-shaped (n_nodes, ppn, ...) device arrays, memoized per name."""
         return _memo_device_arrays(self.topo, self.arrays, self._dev_cache)
@@ -336,6 +370,7 @@ class CompiledNAP:
             ("ell_cols", "ell_vals", self.ensure_ell),
             ("ell_t_cols", "ell_t_vals", self.ensure_ell_t),
             ("fused_cols", "fused_blocks", self.ensure_fused)])
+        changed += _swap_refresh_abft(self)
         _swap_finish(self, a_new, changed)
         return changed
 
@@ -366,6 +401,21 @@ def _swap_refresh_lazy(compiled, formats) -> List[str]:
             ensure()
             changed.append(vals_name)
     return changed
+
+
+#: ABFT checksum-vector names — value arrays derived from the matrix
+#: values, so a hot swap refreshes them like the format value arrays.
+_ABFT_NAMES = ("abft_col", "abft_col_abs", "abft_row", "abft_row_abs")
+
+
+def _swap_refresh_abft(compiled) -> List[str]:
+    """Re-emit the ABFT checksum vectors if they were materialised."""
+    if "abft_col" not in compiled.arrays:
+        return []
+    for k in _ABFT_NAMES:
+        del compiled.arrays[k]
+    compiled.ensure_abft()
+    return list(_ABFT_NAMES)
 
 
 def _swap_finish(compiled, a_new: CSR, changed: List[str]) -> None:
@@ -804,10 +854,86 @@ def unpack_vector(w: np.ndarray, part: RowPartition, topo: Topology) -> np.ndarr
 #: replacement arrays have identical shapes/dtypes and hit the jit cache.
 VALUE_ARRAY_NAMES = frozenset({
     "on_proc_vals", "on_node_vals", "off_node_vals",
-    "ell_vals", "ell_t_vals", "fused_blocks", "A_vals"})
+    "ell_vals", "ell_t_vals", "fused_blocks", "A_vals",
+    "abft_col", "abft_col_abs", "abft_row", "abft_row_abs"})
 
 
-def _make_run(call4, fmt: str, val_fetch=None):
+# ---------------------------------------------------------------------------
+# In-graph integrity primitives (jnp twins of repro.core.integrity)
+# ---------------------------------------------------------------------------
+
+def _msg_checksums(buf: jnp.ndarray) -> jnp.ndarray:
+    """Per-message position-weighted Fletcher fold, [n_slots] uint32.
+
+    Bit-for-bit twin of :func:`repro.core.integrity.checksum_np`: the
+    payload's raw bit pattern viewed as 32-bit words ``w_i``, with
+    ``s1 = Σ w_i`` and ``s2 = Σ i·w_i`` (1-based) both wrapping mod 2^32,
+    folded as ``s1 ^ rotl32(s2, 7)``.  uint32 arithmetic wraps, and
+    reduction mod 2^32 is a ring homomorphism, so the jnp and numpy
+    evaluations agree exactly.
+    """
+    n = buf.shape[0]
+    flat = buf.reshape(n, -1)
+    words = jax.lax.bitcast_convert_type(flat, jnp.uint32).reshape(n, -1)
+    idx = jnp.arange(1, words.shape[1] + 1, dtype=jnp.uint32)
+    s1 = jnp.sum(words, axis=1, dtype=jnp.uint32)
+    s2 = jnp.sum(words * idx[None, :], axis=1, dtype=jnp.uint32)
+    return s1 ^ (((s2 << 7) & jnp.uint32(0xFFFFFFFF)) | (s2 >> 25))
+
+
+def _apply_fault(buf: jnp.ndarray, spec_row: jnp.ndarray) -> jnp.ndarray:
+    """Pure in-graph message-fault transform at the pack boundary.
+
+    ``spec_row`` is one int32 ``(kind_code, slot, element, bit)`` row of
+    the fault-spec ARGUMENT (see integrity.build_fault_spec) — kind 0
+    returns ``buf`` unchanged, so the armed/clean distinction is a data
+    value, never a retrace.  Every variant is computed (cheap elementwise
+    work) and selected by ``where``: bitflip XORs one bit of one 32-bit
+    word; zero and drop blank the slot (a dropped message in a static
+    SPMD program IS a zero payload); stale shifts the slot's elements by
+    one (a plausibly-valid but stale buffer); duplicate delivers the
+    NEXT slot's payload in place of this one.
+    """
+    kind, slot, elem, bit = (spec_row[0], spec_row[1], spec_row[2],
+                             spec_row[3])
+    n = buf.shape[0]
+    flat = buf.reshape(n, -1)
+    slot = jnp.mod(slot, n)
+    is_slot = (jnp.arange(n, dtype=jnp.int32) == slot)[:, None]
+    words = jax.lax.bitcast_convert_type(flat, jnp.uint32)
+    w2 = words.reshape(n, -1)
+    elem_w = jnp.mod(elem, w2.shape[1])
+    hit = is_slot & (jnp.arange(w2.shape[1], dtype=jnp.int32)[None, :]
+                     == elem_w)
+    mask = jnp.where(
+        hit, jnp.uint32(1) << jnp.clip(bit, 0, 31).astype(jnp.uint32),
+        jnp.uint32(0))
+    flipped = jax.lax.bitcast_convert_type(
+        (w2 ^ mask).reshape(words.shape), flat.dtype).reshape(n, -1)
+    zeroed = jnp.where(is_slot, jnp.zeros_like(flat), flat)
+    stale = jnp.where(is_slot, jnp.roll(flat, 1, axis=1), flat)
+    dup = jnp.where(is_slot, jnp.roll(flat, -1, axis=0), flat)
+    out = flat
+    for code, variant in ((1, flipped), (2, zeroed), (3, stale),
+                          (4, zeroed), (5, dup)):
+        out = jnp.where(kind == code, variant, out)
+    return out.reshape(buf.shape)
+
+
+def _stack_chk(pairs: List[Tuple[jnp.ndarray, jnp.ndarray]],
+               max_slots: int) -> jnp.ndarray:
+    """Stack per-phase (expected, actual) checksum vectors into the
+    [n_phases, 2, max_slots] aux output (padded slots zero on BOTH rows,
+    so padding can never read as a mismatch)."""
+    rows = []
+    for expect, actual in pairs:
+        pad = max_slots - expect.shape[0]
+        rows.append(jnp.stack([jnp.pad(expect, (0, pad)),
+                               jnp.pad(actual, (0, pad))]))
+    return jnp.stack(rows)
+
+
+def _make_run(call4, fmt: str, val_fetch=None, fault_fetch=None):
     """Wrap a 4-D shard program into the public run callable.
 
     ``run(v_shards, donate=False)`` accepts [n_nodes, ppn, rows_pad] or
@@ -819,6 +945,11 @@ def _make_run(call4, fmt: str, val_fetch=None):
     as extra jit arguments each call (the hot-value-swap seam — see
     :data:`VALUE_ARRAY_NAMES`).  ``run.n_traces()`` counts program traces:
     it must not grow across a value swap with unchanged shapes.
+
+    ``fault_fetch()`` (integrity-instrumented programs only) returns the
+    armed fault-spec array — same shape/dtype every call, so arming or
+    clearing scripted faults never retraces either.  With it set, ``run``
+    returns the instrumented triple ``(w_shards, chk, abft)``.
     """
     counter = {"n": 0}
 
@@ -835,14 +966,25 @@ def _make_run(call4, fmt: str, val_fetch=None):
             jits[True] = jax.jit(traced, donate_argnums=(0,))
         fn = jits[donate]
         vals = val_fetch() if val_fetch is not None else ()
+        if fault_fetch is not None:
+            spec_arg = jnp.asarray(np.asarray(fault_fetch()), jnp.int32)
+            if v_shards.ndim == 3:
+                w, chk, abft = fn(v_shards[..., None], spec_arg, *vals)
+                return w[..., 0], chk, abft
+            return fn(v_shards, spec_arg, *vals)
         if v_shards.ndim == 3:
             return fn(v_shards[..., None], *vals)[..., 0]
         return fn(v_shards, *vals)
 
     run.local_compute = fmt
+    run.integrity = fault_fetch is not None
     # jitted 4-D entry, exposed for jaxpr/HLO checks — keeps the
     # single-argument contract by binding the current value arrays.
-    if val_fetch is None:
+    if fault_fetch is not None:
+        run.run4 = lambda v_shards: jits[False](
+            v_shards, jnp.asarray(np.asarray(fault_fetch()), jnp.int32),
+            *(val_fetch() if val_fetch is not None else ()))
+    elif val_fetch is None:
         run.run4 = jits[False]
     else:
         run.run4 = lambda v_shards: jits[False](v_shards, *val_fetch())
@@ -850,7 +992,8 @@ def _make_run(call4, fmt: str, val_fetch=None):
     return run
 
 
-def _bind_shard_program(smapped, compiled, names: List[str]):
+def _bind_shard_program(smapped, compiled, names: List[str],
+                        with_fault: bool = False):
     """(call4, val_fetch) for a shard program applied as
     ``smapped(v_shards, *[arrays[k] for k in names])``.
 
@@ -859,15 +1002,23 @@ def _bind_shard_program(smapped, compiled, names: List[str]):
     :data:`VALUE_ARRAY_NAMES` entries instead arrive through ``val_fetch``
     as per-call jit arguments read off the LIVE compiled plan, so
     ``swap_values`` takes effect on the next call without retracing.
+    ``with_fault`` inserts the integrity fault-spec as the second
+    positional argument (the instrumented-program calling convention).
     """
     dev = compiled.device_arrays()
     val_names = [k for k in names if k in VALUE_ARRAY_NAMES]
     struct = {k: dev[k] for k in names if k not in VALUE_ARRAY_NAMES}
 
-    def call4(v_shards, *vals):
-        by = dict(zip(val_names, vals))
-        return smapped(v_shards, *[by[k] if k in by else struct[k]
-                                   for k in names])
+    if with_fault:
+        def call4(v_shards, fault_spec, *vals):
+            by = dict(zip(val_names, vals))
+            return smapped(v_shards, fault_spec,
+                           *[by[k] if k in by else struct[k] for k in names])
+    else:
+        def call4(v_shards, *vals):
+            by = dict(zip(val_names, vals))
+            return smapped(v_shards, *[by[k] if k in by else struct[k]
+                                       for k in names])
 
     def val_fetch():
         d = compiled.device_arrays()
@@ -882,7 +1033,8 @@ def _bind_shard_program(smapped, compiled, names: List[str]):
 
 def nap_forward_shardmap(compiled: CompiledNAP, mesh: Mesh,
                          local_compute: str = "auto", nv_block: int = 128,
-                         interpret: bool = True, materialize_x: bool = False):
+                         interpret: bool = True, materialize_x: bool = False,
+                         integrity: bool = False, fault_fetch=None):
     """Build the jitted shard_map NAPSpMV: f(v_shards) -> w_shards.
 
     ``v_shards`` is [n_nodes, ppn, cols_pad] or [n_nodes, ppn, cols_pad, nv]
@@ -895,6 +1047,17 @@ def nap_forward_shardmap(compiled: CompiledNAP, mesh: Mesh,
     exposed as ``run.local_compute``.  ``materialize_x=True`` re-enables
     the legacy HBM pad/concat of the packed x operand (bit-for-bit equal
     to the default zero-copy gather; kept as an A/B oracle).
+
+    ``integrity=True`` builds the INSTRUMENTED program instead: every
+    message payload is checksummed by the sender before the scripted
+    fault boundary (the checksum words travel through a second tiny
+    all_to_all over the same axis) and re-checksummed by the receiver,
+    the armed fault-spec argument (``fault_fetch``) is applied as a pure
+    transform at the pack boundary, and the ABFT triple
+    ``(sum(y_p), c_p · x_packed, |c_p| · |x_packed|)`` is emitted per
+    device — ``run`` then returns ``(w_shards, chk, abft)``.  With
+    ``integrity=False`` the emitted program is bit-for-bit the
+    uninstrumented one (no extra arguments, outputs, or ops).
     """
     fmt = compiled.resolve_local_compute(local_compute)
     if fmt == "bsr":
@@ -904,32 +1067,59 @@ def nap_forward_shardmap(compiled: CompiledNAP, mesh: Mesh,
     topo = compiled.topo
     rows_pad = compiled.rows_pad
     bn = compiled.block_shape[1]
+    cols_pad, bnode_pad = compiled.cols_pad, compiled.pads["bnode"]
+    ph = phase_index("nap")
+    max_slots = max(topo.ppn, topo.n_nodes)
+    if integrity:
+        compiled.ensure_abft()
 
-    def per_device(v_loc, full_send, init_send, final_send, inter_gather,
-                   bnode_gather, boff_gather, *tail):
+    def per_device(v_loc, *args):
         squeeze = lambda x: x.reshape(x.shape[2:])
+        if integrity:
+            fault_spec = squeeze(args[0])                   # [n_phases, 4]
+            args = args[1:]
         v_loc = squeeze(v_loc)                              # [rows_pad, nv]
         (full_send, init_send, final_send, inter_gather, bnode_gather,
-         boff_gather) = map(squeeze, (full_send, init_send, final_send,
-                                      inter_gather, bnode_gather, boff_gather))
-        tail = tuple(map(squeeze, tail))
+         boff_gather) = map(squeeze, args[:6])
+        tail = tuple(map(squeeze, args[6:]))
+        if integrity:
+            abft_col, abft_abs = tail[-2:]
+            tail = tail[:-2]
         nv = v_loc.shape[-1]
+
+        chks = {}
+
+        def exchange(buf, phase, axis):
+            # Sender checksums the CLEAN payload, the scripted fault (if
+            # armed for this device+phase) corrupts it at the pack
+            # boundary, then payload and checksum words travel through
+            # the same collective; the receiver recomputes.  Uninstrumented
+            # (integrity=False) this is literally the bare all_to_all.
+            if not integrity:
+                return jax.lax.all_to_all(buf, axis, 0, 0, tiled=True)
+            sent = _msg_checksums(buf)
+            buf = _apply_fault(buf, fault_spec[ph[phase]])
+            recv = jax.lax.all_to_all(buf, axis, 0, 0, tiled=True)
+            expect = jax.lax.all_to_all(sent[:, None], axis, 0, 0,
+                                        tiled=True)[:, 0]
+            chks[phase] = (expect, _msg_checksums(recv))
+            return recv
 
         # Phase A+B (overlap in Alg. 3): intra-node exchanges over "proc".
         full_out = v_loc[full_send]                       # [ppn, full_pad, nv]
-        full_recv = jax.lax.all_to_all(full_out, "proc", 0, 0, tiled=True)
+        full_recv = exchange(full_out, "full", "proc")
         init_out = v_loc[init_send]
-        init_recv = jax.lax.all_to_all(init_out, "proc", 0, 0, tiled=True)
+        init_recv = exchange(init_out, "init", "proc")
 
         # Phase C: ONE aggregated inter-node all-to-all over "node".
         staged = jnp.concatenate([v_loc, init_recv.reshape(-1, nv)])
         inter_out = staged[inter_gather]                  # [n_nodes, inter_pad, nv]
-        inter_recv = jax.lax.all_to_all(inter_out, "node", 0, 0, tiled=True)
+        inter_recv = exchange(inter_out, "inter", "node")
 
         # Phase D: intra-node scatter of received off-node data.
         inter_flat = inter_recv.reshape(-1, nv)
         final_out = inter_flat[final_send]
-        final_recv = jax.lax.all_to_all(final_out, "proc", 0, 0, tiled=True)
+        final_recv = exchange(final_out, "final", "proc")
 
         # Buffers of Algorithm 3's three local_spmv calls.
         bnode = full_recv.reshape(-1, nv)[bnode_gather]   # [bnode_pad, nv]
@@ -969,7 +1159,24 @@ def nap_forward_shardmap(compiled: CompiledNAP, mesh: Mesh,
             # local_spmv(A_off_node, b_nl->l)
             w = w + segment_sum(off_node_vals[:, None] * boff[off_node_cols],
                                 off_node_rows, num_segments=rows_pad)
-        return w.reshape(1, 1, rows_pad, -1)
+        if not integrity:
+            return w.reshape(1, 1, rows_pad, -1)
+        # Scripted compute-side corruption (what ABFT exists to catch) is
+        # applied to the LOCAL result, after the wire but before the check.
+        w = _apply_fault(w[None], fault_spec[ph["compute"]])[0]
+        # ABFT: sum(y_p) vs c_p · x_packed over the SAME received buffers
+        # the compute consumed, plus the |c_p|·|x| tolerance scale.
+        d = (abft_col[:cols_pad] @ v_loc
+             + abft_col[cols_pad: cols_pad + bnode_pad] @ bnode
+             + abft_col[cols_pad + bnode_pad:] @ boff)
+        s = (abft_abs[:cols_pad] @ jnp.abs(v_loc)
+             + abft_abs[cols_pad: cols_pad + bnode_pad] @ jnp.abs(bnode)
+             + abft_abs[cols_pad + bnode_pad:] @ jnp.abs(boff))
+        abft = jnp.stack([jnp.sum(w, axis=0), d, s])
+        chk = _stack_chk([chks[p] for p in NAP_MESSAGE_PHASES], max_slots)
+        return (w.reshape(1, 1, rows_pad, -1),
+                chk.reshape((1, 1) + chk.shape),
+                abft.reshape((1, 1) + abft.shape))
 
     names = ["full_send", "init_send", "final_send", "inter_gather",
              "bnode_gather", "boff_gather"]
@@ -981,17 +1188,24 @@ def nap_forward_shardmap(compiled: CompiledNAP, mesh: Mesh,
         names += ["on_proc_rows", "on_proc_cols", "on_proc_vals",
                   "on_node_rows", "on_node_cols", "on_node_vals",
                   "off_node_rows", "off_node_cols", "off_node_vals"]
+    if integrity:
+        names += ["abft_col", "abft_col_abs"]
     spec = P("node", "proc")
+    n_in = 1 + len(names) + (1 if integrity else 0)
     smapped = shard_map(per_device, mesh=mesh,
-                        in_specs=(spec,) * (1 + len(names)), out_specs=spec,
+                        in_specs=(spec,) * n_in,
+                        out_specs=(spec, spec, spec) if integrity else spec,
                         check_vma=False)
-    call4, val_fetch = _bind_shard_program(smapped, compiled, names)
-    return _make_run(call4, fmt, val_fetch)
+    call4, val_fetch = _bind_shard_program(smapped, compiled, names,
+                                           with_fault=integrity)
+    return _make_run(call4, fmt, val_fetch,
+                     fault_fetch=fault_fetch if integrity else None)
 
 
 def nap_transpose_shardmap(compiled: CompiledNAP, mesh: Mesh,
                            local_compute: str = "auto", nv_block: int = 128,
-                           interpret: bool = True):
+                           interpret: bool = True,
+                           integrity: bool = False, fault_fetch=None):
     """Build the jitted shard_map transpose NAPSpMV: f(u_shards) -> z_shards
     with ``z = A.T u`` — the exact adjoint of :func:`nap_forward_shardmap`.
 
@@ -1024,16 +1238,40 @@ def nap_transpose_shardmap(compiled: CompiledNAP, mesh: Mesh,
     full_pad, init_pad = pads["full"], pads["init"]
     inter_pad, final_pad = pads["inter"], pads["final"]
     bnode_pad, boff_pad = pads["bnode"], pads["boff"]
+    ph = phase_index("nap")
+    max_slots = max(ppn, nn)
+    if integrity:
+        compiled.ensure_abft()
 
-    def per_device(u_loc, full_send, init_send, final_send, inter_gather,
-                   bnode_gather, boff_gather, *tail):
+    def per_device(u_loc, *args):
         squeeze = lambda x: x.reshape(x.shape[2:])
+        if integrity:
+            fault_spec = squeeze(args[0])                   # [n_phases, 4]
+            args = args[1:]
         u_loc = squeeze(u_loc)                              # [rows_pad, nv]
         (full_send, init_send, final_send, inter_gather, bnode_gather,
-         boff_gather) = map(squeeze, (full_send, init_send, final_send,
-                                      inter_gather, bnode_gather, boff_gather))
-        tail = tuple(map(squeeze, tail))
+         boff_gather) = map(squeeze, args[:6])
+        tail = tuple(map(squeeze, args[6:]))
+        if integrity:
+            abft_row, abft_abs = tail[-2:]
+            tail = tail[:-2]
         nv = u_loc.shape[-1]
+
+        chks = {}
+
+        def exchange(buf, phase, axis):
+            # Reverse-direction twin of the forward builder's exchange():
+            # checksum the clean pre-exchange contribution buffer, apply
+            # the armed fault at the pack boundary, verify post-delivery.
+            if not integrity:
+                return jax.lax.all_to_all(buf, axis, 0, 0, tiled=True)
+            sent = _msg_checksums(buf)
+            buf = _apply_fault(buf, fault_spec[ph[phase]])
+            recv = jax.lax.all_to_all(buf, axis, 0, 0, tiled=True)
+            expect = jax.lax.all_to_all(sent[:, None], axis, 0, 0,
+                                        tiled=True)[:, 0]
+            chks[phase] = (expect, _msg_checksums(recv))
+            return recv
 
         # -- transposed local_spmv blocks: rows index u, cols index the
         #    output domain of each block (local x rows / buffer slots).
@@ -1055,6 +1293,21 @@ def nap_transpose_shardmap(compiled: CompiledNAP, mesh: Mesh,
             c_off = segment_sum(off_node_vals[:, None] * u_loc[off_node_rows],
                                 off_node_cols, num_segments=boff_pad)
 
+        if integrity:
+            # Compute-side fault + transpose ABFT over the packed
+            # contribution domain, BEFORE any communication: the sum of
+            # every local contribution equals the row-sum vector (A_p 1)
+            # dotted with u_loc.
+            packed_c = jnp.concatenate([z, c_node, c_off])
+            packed_c = _apply_fault(packed_c[None],
+                                    fault_spec[ph["compute"]])[0]
+            abft = jnp.stack([jnp.sum(packed_c, axis=0),
+                              abft_row @ u_loc,
+                              abft_abs @ jnp.abs(u_loc)])
+            z = packed_c[:cols_pad]
+            c_node = packed_c[cols_pad: cols_pad + bnode_pad]
+            c_off = packed_c[cols_pad + bnode_pad:]
+
         # -- reverse of boff = concat(inter_flat, final_recv_flat)[boff_gather]
         comb = segment_sum(c_off, boff_gather,
                            num_segments=nn * inter_pad + ppn * final_pad)
@@ -1062,15 +1315,15 @@ def nap_transpose_shardmap(compiled: CompiledNAP, mesh: Mesh,
         final_recv_c = comb[nn * inter_pad:].reshape(ppn, final_pad, nv)
 
         # -- reverse phase D: adjoint all_to_all + scatter over final_send
-        final_out_c = jax.lax.all_to_all(final_recv_c, "proc", 0, 0, tiled=True)
+        final_out_c = exchange(final_recv_c, "final", "proc")
         inter_c = inter_c + segment_sum(final_out_c.reshape(-1, nv),
                                         final_send.reshape(-1),
                                         num_segments=nn * inter_pad)
 
         # -- reverse phase C: adjoint inter-node all_to_all + scatter over
         #    inter_gather into the staged domain concat(v_loc, init_recv)
-        inter_out_c = jax.lax.all_to_all(inter_c.reshape(nn, inter_pad, nv),
-                                         "node", 0, 0, tiled=True)
+        inter_out_c = exchange(inter_c.reshape(nn, inter_pad, nv),
+                               "inter", "node")
         staged_c = segment_sum(inter_out_c.reshape(-1, nv),
                                inter_gather.reshape(-1),
                                num_segments=cols_pad + ppn * init_pad)
@@ -1078,18 +1331,23 @@ def nap_transpose_shardmap(compiled: CompiledNAP, mesh: Mesh,
 
         # -- reverse phase B: init redistribution back to the owners
         init_recv_c = staged_c[cols_pad:].reshape(ppn, init_pad, nv)
-        init_out_c = jax.lax.all_to_all(init_recv_c, "proc", 0, 0, tiled=True)
+        init_out_c = exchange(init_recv_c, "init", "proc")
         z = z + segment_sum(init_out_c.reshape(-1, nv),
                             init_send.reshape(-1), num_segments=cols_pad)
 
         # -- reverse phase A: on-node buffer contributions back to owners
         full_recv_c = segment_sum(c_node, bnode_gather,
                                   num_segments=ppn * full_pad)
-        full_out_c = jax.lax.all_to_all(full_recv_c.reshape(ppn, full_pad, nv),
-                                        "proc", 0, 0, tiled=True)
+        full_out_c = exchange(full_recv_c.reshape(ppn, full_pad, nv),
+                              "full", "proc")
         z = z + segment_sum(full_out_c.reshape(-1, nv),
                             full_send.reshape(-1), num_segments=cols_pad)
-        return z.reshape(1, 1, cols_pad, -1)
+        if not integrity:
+            return z.reshape(1, 1, cols_pad, -1)
+        chk = _stack_chk([chks[p] for p in NAP_MESSAGE_PHASES], max_slots)
+        return (z.reshape(1, 1, cols_pad, -1),
+                chk.reshape((1, 1) + chk.shape),
+                abft.reshape((1, 1) + abft.shape))
 
     names = ["full_send", "init_send", "final_send", "inter_gather",
              "bnode_gather", "boff_gather"]
@@ -1099,12 +1357,18 @@ def nap_transpose_shardmap(compiled: CompiledNAP, mesh: Mesh,
         names += ["on_proc_rows", "on_proc_cols", "on_proc_vals",
                   "on_node_rows", "on_node_cols", "on_node_vals",
                   "off_node_rows", "off_node_cols", "off_node_vals"]
+    if integrity:
+        names += ["abft_row", "abft_row_abs"]
     spec = P("node", "proc")
+    n_in = 1 + len(names) + (1 if integrity else 0)
     smapped = shard_map(per_device, mesh=mesh,
-                        in_specs=(spec,) * (1 + len(names)), out_specs=spec,
+                        in_specs=(spec,) * n_in,
+                        out_specs=(spec, spec, spec) if integrity else spec,
                         check_vma=False)
-    call4, val_fetch = _bind_shard_program(smapped, compiled, names)
-    return _make_run(call4, fmt, val_fetch)
+    call4, val_fetch = _bind_shard_program(smapped, compiled, names,
+                                           with_fault=integrity)
+    return _make_run(call4, fmt, val_fetch,
+                     fault_fetch=fault_fetch if integrity else None)
 
 
 # ---------------------------------------------------------------------------
@@ -1219,6 +1483,27 @@ class CompiledStandard:
         self.arrays["fused_cols"] = f_cols
         self.arrays["fused_blocks"] = f_blocks
 
+    def ensure_abft(self) -> None:
+        """ABFT checksum vectors over the two-segment packed domain —
+        see :meth:`CompiledNAP.ensure_abft` (same contract)."""
+        if "abft_col" in self.arrays:
+            return
+        n, n_x, rows_pad = self.topo.n_procs, self.n_x, self.rows_pad
+        col = np.zeros((n, n_x), np.float64)
+        cola = np.zeros((n, n_x), np.float64)
+        row = np.zeros((n, rows_pad), np.float64)
+        rowa = np.zeros((n, rows_pad), np.float64)
+        for r, (rr, cc, vv) in enumerate(self.per_rank_coo):
+            v32 = vv.astype(np.float32).astype(np.float64)
+            np.add.at(col[r], cc, v32)
+            np.add.at(cola[r], cc, np.abs(v32))
+            np.add.at(row[r], rr, v32)
+            np.add.at(rowa[r], rr, np.abs(v32))
+        self.arrays["abft_col"] = col.astype(np.float32)
+        self.arrays["abft_col_abs"] = cola.astype(np.float32)
+        self.arrays["abft_row"] = row.astype(np.float32)
+        self.arrays["abft_row_abs"] = rowa.astype(np.float32)
+
     def device_arrays(self) -> Dict[str, jnp.ndarray]:
         """Mesh-shaped (n_nodes, ppn, ...) device arrays, memoized per name."""
         return _memo_device_arrays(self.topo, self.arrays, self._dev_cache)
@@ -1248,6 +1533,7 @@ class CompiledStandard:
             ("ell_cols", "ell_vals", self.ensure_ell),
             ("ell_t_cols", "ell_t_vals", self.ensure_ell_t),
             ("fused_cols", "fused_blocks", self.ensure_fused)])
+        changed += _swap_refresh_abft(self)
         _swap_finish(self, a_new, changed)
         return changed
 
@@ -1343,29 +1629,47 @@ def compile_standard(a: CSR, part: RowPartition, topo: Topology,
 def standard_forward_shardmap(compiled: CompiledStandard, mesh: Mesh,
                               local_compute: str = "auto",
                               nv_block: int = 128, interpret: bool = True,
-                              materialize_x: bool = False):
+                              materialize_x: bool = False,
+                              integrity: bool = False, fault_fetch=None):
     """Algorithm 1 as a flat padded all-to-all over ("node","proc").
 
     Local compute runs through the same adaptive engine as the NAP path —
     ``"auto"`` (default) picks bsr/ell/coo from the format cost model over
     the two-segment ``[v_loc | recv buffer]`` packed x domain; both Pallas
     paths read the segments zero-copy.  The resolved format is exposed as
-    ``run.local_compute``.
+    ``run.local_compute``.  ``integrity=True`` instruments the single
+    ``pair`` exchange + ABFT exactly like :func:`nap_forward_shardmap`.
     """
     fmt = compiled.resolve_local_compute(local_compute)
     {"coo": compiled.ensure_coo, "ell": compiled.ensure_ell,
      "bsr": compiled.ensure_fused}[fmt]()
     topo = compiled.topo
-    rows_pad = compiled.rows_pad
+    rows_pad, cols_pad = compiled.rows_pad, compiled.cols_pad
     bn = compiled.block_shape[1]
+    ph = phase_index("standard")
+    if integrity:
+        compiled.ensure_abft()
 
-    def per_device(v_loc, send_idx, buf_gather, *tail):
+    def per_device(v_loc, *args):
         squeeze = lambda x: x.reshape(x.shape[2:])
-        v_loc, send_idx, buf_gather = map(squeeze, (v_loc, send_idx, buf_gather))
-        tail = tuple(map(squeeze, tail))
+        if integrity:
+            fault_spec = squeeze(args[0])                   # [n_phases, 4]
+            args = args[1:]
+        v_loc, send_idx, buf_gather = map(squeeze, (v_loc,) + args[:2])
+        tail = tuple(map(squeeze, args[2:]))
+        if integrity:
+            abft_col, abft_abs = tail[-2:]
+            tail = tail[:-2]
         nv = v_loc.shape[-1]
         out = v_loc[send_idx]                               # [n_procs, pair_pad, nv]
+        if integrity:
+            sent = _msg_checksums(out)
+            out = _apply_fault(out, fault_spec[ph["pair"]])
         recv = jax.lax.all_to_all(out, ("node", "proc"), 0, 0, tiled=True)
+        if integrity:
+            expect = jax.lax.all_to_all(sent[:, None], ("node", "proc"),
+                                        0, 0, tiled=True)[:, 0]
+            chk_pair = (expect, _msg_checksums(recv))
         buf = recv.reshape(-1, nv)[buf_gather]              # [buf_pad, nv]
         if fmt == "bsr":
             fused_cols, fused_blocks = tail
@@ -1390,23 +1694,40 @@ def standard_forward_shardmap(compiled: CompiledStandard, mesh: Mesh,
             full = jnp.concatenate([v_loc, buf])
             w = segment_sum(A_vals[:, None] * full[A_cols], A_rows,
                             num_segments=rows_pad)
-        return w.reshape(1, 1, rows_pad, -1)
+        if not integrity:
+            return w.reshape(1, 1, rows_pad, -1)
+        w = _apply_fault(w[None], fault_spec[ph["compute"]])[0]
+        d = abft_col[:cols_pad] @ v_loc + abft_col[cols_pad:] @ buf
+        s = (abft_abs[:cols_pad] @ jnp.abs(v_loc)
+             + abft_abs[cols_pad:] @ jnp.abs(buf))
+        abft = jnp.stack([jnp.sum(w, axis=0), d, s])
+        chk = _stack_chk([chk_pair], topo.n_procs)
+        return (w.reshape(1, 1, rows_pad, -1),
+                chk.reshape((1, 1) + chk.shape),
+                abft.reshape((1, 1) + abft.shape))
 
     names = ["send_idx", "buf_gather"]
     names += {"bsr": ["fused_cols", "fused_blocks"],
               "ell": ["ell_cols", "ell_vals"],
               "coo": ["A_rows", "A_cols", "A_vals"]}[fmt]
+    if integrity:
+        names += ["abft_col", "abft_col_abs"]
     spec = P("node", "proc")
+    n_in = 1 + len(names) + (1 if integrity else 0)
     smapped = shard_map(per_device, mesh=mesh,
-                        in_specs=(spec,) * (1 + len(names)), out_specs=spec,
+                        in_specs=(spec,) * n_in,
+                        out_specs=(spec, spec, spec) if integrity else spec,
                         check_vma=False)
-    call4, val_fetch = _bind_shard_program(smapped, compiled, names)
-    return _make_run(call4, fmt, val_fetch)
+    call4, val_fetch = _bind_shard_program(smapped, compiled, names,
+                                           with_fault=integrity)
+    return _make_run(call4, fmt, val_fetch,
+                     fault_fetch=fault_fetch if integrity else None)
 
 
 def standard_transpose_shardmap(compiled: CompiledStandard, mesh: Mesh,
                                 local_compute: str = "auto",
-                                nv_block: int = 128, interpret: bool = True):
+                                nv_block: int = 128, interpret: bool = True,
+                                integrity: bool = False, fault_fetch=None):
     """Transpose of Algorithm 1 against the same compiled plan:
     f(u_shards) -> z_shards with ``z = A.T u``.
 
@@ -1430,11 +1751,20 @@ def standard_transpose_shardmap(compiled: CompiledStandard, mesh: Mesh,
     rows_pad, cols_pad = compiled.rows_pad, compiled.cols_pad
     pair_pad, n_x = compiled.pair_pad, compiled.n_x
     n_procs = topo.n_procs
+    ph = phase_index("standard")
+    if integrity:
+        compiled.ensure_abft()
 
-    def per_device(u_loc, send_idx, buf_gather, *tail):
+    def per_device(u_loc, *args):
         squeeze = lambda x: x.reshape(x.shape[2:])
-        u_loc, send_idx, buf_gather = map(squeeze, (u_loc, send_idx, buf_gather))
-        tail = tuple(map(squeeze, tail))
+        if integrity:
+            fault_spec = squeeze(args[0])                   # [n_phases, 4]
+            args = args[1:]
+        u_loc, send_idx, buf_gather = map(squeeze, (u_loc,) + args[:2])
+        tail = tuple(map(squeeze, args[2:]))
+        if integrity:
+            abft_row, abft_abs = tail[-2:]
+            tail = tail[:-2]
         nv = u_loc.shape[-1]
         # transposed local SpMV over the packed domain [v_loc | buf]
         if fmt == "ell":
@@ -1445,26 +1775,50 @@ def standard_transpose_shardmap(compiled: CompiledStandard, mesh: Mesh,
             A_rows, A_cols, A_vals = tail
             c = segment_sum(A_vals[:, None] * u_loc[A_rows], A_cols,
                             num_segments=n_x)
+        if integrity:
+            # compute fault + transpose ABFT pre-communication (see the
+            # NAP transpose builder — same contract)
+            c = _apply_fault(c[None], fault_spec[ph["compute"]])[0]
+            abft = jnp.stack([jnp.sum(c, axis=0), abft_row @ u_loc,
+                              abft_abs @ jnp.abs(u_loc)])
         z = c[:cols_pad]
         # reverse of buf = recv.reshape(-1)[buf_gather]
         recv_c = segment_sum(c[cols_pad:], buf_gather,
                              num_segments=n_procs * pair_pad)
-        out_c = jax.lax.all_to_all(recv_c.reshape(n_procs, pair_pad, nv),
-                                   ("node", "proc"), 0, 0, tiled=True)
+        out = recv_c.reshape(n_procs, pair_pad, nv)
+        if integrity:
+            sent = _msg_checksums(out)
+            out = _apply_fault(out, fault_spec[ph["pair"]])
+        out_c = jax.lax.all_to_all(out, ("node", "proc"), 0, 0, tiled=True)
+        if integrity:
+            expect = jax.lax.all_to_all(sent[:, None], ("node", "proc"),
+                                        0, 0, tiled=True)[:, 0]
+            chk_pair = (expect, _msg_checksums(out_c))
         # reverse of out = v_loc[send_idx]
         z = z + segment_sum(out_c.reshape(-1, nv), send_idx.reshape(-1),
                             num_segments=cols_pad)
-        return z.reshape(1, 1, cols_pad, -1)
+        if not integrity:
+            return z.reshape(1, 1, cols_pad, -1)
+        chk = _stack_chk([chk_pair], n_procs)
+        return (z.reshape(1, 1, cols_pad, -1),
+                chk.reshape((1, 1) + chk.shape),
+                abft.reshape((1, 1) + abft.shape))
 
     names = ["send_idx", "buf_gather"]
     names += (["ell_t_cols", "ell_t_vals"] if fmt == "ell"
               else ["A_rows", "A_cols", "A_vals"])
+    if integrity:
+        names += ["abft_row", "abft_row_abs"]
     spec = P("node", "proc")
+    n_in = 1 + len(names) + (1 if integrity else 0)
     smapped = shard_map(per_device, mesh=mesh,
-                        in_specs=(spec,) * (1 + len(names)), out_specs=spec,
+                        in_specs=(spec,) * n_in,
+                        out_specs=(spec, spec, spec) if integrity else spec,
                         check_vma=False)
-    call4, val_fetch = _bind_shard_program(smapped, compiled, names)
-    return _make_run(call4, fmt, val_fetch)
+    call4, val_fetch = _bind_shard_program(smapped, compiled, names,
+                                           with_fault=integrity)
+    return _make_run(call4, fmt, val_fetch,
+                     fault_fetch=fault_fetch if integrity else None)
 
 
 # ---------------------------------------------------------------------------

@@ -20,17 +20,29 @@ through test monkey-patching:
   shard files and the ``_COMMITTED`` marker (via ``save_checkpoint``'s
   ``on_before_commit`` hook); restore must fall back to the previous
   committed step.
+* ``corrupt_message(step, edge)`` / ``drop_message`` /
+  ``duplicate_message`` — DATA-plane faults: the scripted
+  :class:`repro.core.integrity.MessageFault` is queued onto the serving
+  operator at ``step`` and fires inside the next SpMV apply as a pure
+  transform at the pack boundary (bitflip / zeroed / stale / dropped /
+  duplicated payload on one exchange message).  What happens next is the
+  operator's ``integrity`` mode: ``"detect"`` raises with phase+message
+  attribution, ``"recover"`` retries clean and counts a strike against
+  the implicated node.
 
 ``FaultPlan.random(seed, ...)`` draws a scripted plan from a seeded
 generator: same seed, same plan, same eviction step — the determinism
-the crash-consistency tests assert.
+the crash-consistency tests assert.  Pass ``ppn=`` to include the
+message-fault kinds (they need sender device coordinates).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Sequence, Tuple
+from typing import List, Optional, Sequence, Tuple, Union
 
 import numpy as np
+
+from repro.core.integrity import MessageFault, NAP_MESSAGE_PHASES
 
 
 class FabricError(RuntimeError):
@@ -60,21 +72,28 @@ class FaultEvent:
     """One scripted fault, triggered when the service pump reaches
     ``step``.  ``node`` names the victim for dead_node/straggler;
     ``at_iteration`` (dead_node only) defers the death until an in-flight
-    solve reaches that CG iteration."""
+    solve reaches that CG iteration; ``fault`` carries the scripted
+    :class:`MessageFault` for the message kinds."""
 
     step: int
     kind: str                      # dead_node | straggler | torn_checkpoint
-    node: Optional[str] = None
+    node: Optional[str] = None     # | corrupt/drop/duplicate_message
     slowdown: float = 1.0
     at_iteration: Optional[int] = None
+    fault: Optional[MessageFault] = None
 
-    KINDS = ("dead_node", "straggler", "torn_checkpoint")
+    KINDS = ("dead_node", "straggler", "torn_checkpoint",
+             "corrupt_message", "drop_message", "duplicate_message")
+    MESSAGE_KINDS = ("corrupt_message", "drop_message", "duplicate_message")
 
     def __post_init__(self) -> None:
         if self.kind not in self.KINDS:
             raise ValueError(f"unknown fault kind {self.kind!r}; "
                              f"one of {self.KINDS}")
-        if self.kind != "torn_checkpoint" and self.node is None:
+        if self.kind in self.MESSAGE_KINDS:
+            if self.fault is None:
+                raise ValueError(f"{self.kind} needs a MessageFault payload")
+        elif self.kind != "torn_checkpoint" and self.node is None:
             raise ValueError(f"{self.kind} needs a target node")
 
 
@@ -96,6 +115,55 @@ def torn_checkpoint(step: int) -> FaultEvent:
     return FaultEvent(step=step, kind="torn_checkpoint")
 
 
+Edge = Tuple[str, Union[int, Tuple[int, int]], int]
+
+
+def _edge_fault(edge: Edge, kind: str, element: int, bit: int,
+                direction: str) -> MessageFault:
+    """``edge = (phase, sender, slot)`` — sender as (node, proc) device
+    coordinates or a flat rank."""
+    phase, sender, slot = edge
+    if not isinstance(sender, tuple):
+        raise ValueError("pass the sender as (node, proc) device "
+                         "coordinates; a flat rank needs the topology's "
+                         "ppn to split")
+    node, proc = sender
+    return MessageFault(phase=phase, kind=kind, node=int(node),
+                        proc=int(proc), slot=int(slot), element=int(element),
+                        bit=int(bit), direction=direction)
+
+
+def corrupt_message(step: int, edge: Edge, kind: str = "bitflip",
+                    element: int = 0, bit: int = 30,
+                    direction: str = "forward") -> FaultEvent:
+    """Corrupt ONE exchange message at ``step``: ``kind`` is
+    ``"bitflip"`` | ``"zero"`` | ``"stale"``; ``edge`` is
+    ``(phase, (node, proc), slot)`` — the sending device and destination
+    message slot within the phase."""
+    if kind not in ("bitflip", "zero", "stale"):
+        raise ValueError(f"corrupt_message kind must be bitflip|zero|stale, "
+                         f"got {kind!r} (use drop_message / "
+                         f"duplicate_message for the other kinds)")
+    return FaultEvent(step=step, kind="corrupt_message",
+                      fault=_edge_fault(edge, kind, element, bit, direction))
+
+
+def drop_message(step: int, edge: Edge,
+                 direction: str = "forward") -> FaultEvent:
+    """Drop ONE exchange message at ``step`` (the receiver sees a zeroed
+    payload — the static-SPMD model of a lost send)."""
+    return FaultEvent(step=step, kind="drop_message",
+                      fault=_edge_fault(edge, "drop", 0, 0, direction))
+
+
+def duplicate_message(step: int, edge: Edge,
+                      direction: str = "forward") -> FaultEvent:
+    """Deliver a DIFFERENT message from the same sender in place of this
+    one (payload duplication / misrouting)."""
+    return FaultEvent(step=step, kind="duplicate_message",
+                      fault=_edge_fault(edge, "duplicate", 0, 0, direction))
+
+
 @dataclasses.dataclass(frozen=True)
 class FaultPlan:
     """An immutable script of fault events, consulted per service step."""
@@ -114,20 +182,40 @@ class FaultPlan:
 
     @staticmethod
     def random(seed: int, nodes: Sequence[str], n_steps: int,
-               n_events: int = 1) -> "FaultPlan":
+               n_events: int = 1, ppn: Optional[int] = None) -> "FaultPlan":
         """Seeded random plan over ``nodes`` within ``n_steps``.  Pure
-        function of its arguments: same seed → same events, same steps —
-        the determinism contract the tests pin down."""
+        function of its arguments: same seed → same events, same steps,
+        same corrupted edges — the determinism contract the tests pin
+        down.  With ``ppn`` set the draw includes the message-fault
+        kinds (sender device coordinates need the node width)."""
         rng = np.random.default_rng(seed)
+        kinds = FaultEvent.KINDS if ppn else \
+            tuple(k for k in FaultEvent.KINDS
+                  if k not in FaultEvent.MESSAGE_KINDS)
         events = []
         for _ in range(n_events):
-            kind = str(rng.choice(FaultEvent.KINDS))
+            kind = str(rng.choice(kinds))
             step = int(rng.integers(1, max(2, n_steps)))
             if kind == "torn_checkpoint":
                 events.append(torn_checkpoint(step))
             elif kind == "straggler":
                 events.append(straggler(step, str(rng.choice(list(nodes))),
                                         slowdown=float(rng.integers(3, 8))))
+            elif kind in FaultEvent.MESSAGE_KINDS:
+                edge = (str(rng.choice(NAP_MESSAGE_PHASES)),
+                        (int(rng.integers(0, len(nodes))),
+                         int(rng.integers(0, ppn))),
+                        int(rng.integers(0, max(len(nodes), ppn))))
+                if kind == "corrupt_message":
+                    events.append(corrupt_message(
+                        step, edge,
+                        kind=str(rng.choice(("bitflip", "zero", "stale"))),
+                        element=int(rng.integers(0, 64)),
+                        bit=int(rng.integers(0, 31))))
+                elif kind == "drop_message":
+                    events.append(drop_message(step, edge))
+                else:
+                    events.append(duplicate_message(step, edge))
             else:
                 events.append(dead_node(step, str(rng.choice(list(nodes)))))
         return FaultPlan.of(*events)

@@ -38,15 +38,16 @@ from repro.core.topology import Topology
 
 def structure_key(a, row_part: RowPartition, col_part: RowPartition,
                   topo: Topology, method: str, backend: str,
-                  local_compute: str = "auto") -> str:
+                  local_compute: str = "auto", integrity: str = "off") -> str:
     """Digest of everything a compiled plan depends on EXCEPT the matrix
     values — two matrices with equal keys may hot-swap into each other's
-    compiled program."""
+    compiled program.  ``integrity`` keys too: the instrumented program
+    is a different jit signature than the bare one."""
     h = hashlib.sha1()
     for arr in (a.indptr, a.indices, row_part.owner, col_part.owner):
         h.update(np.ascontiguousarray(arr).tobytes())
     h.update(repr((tuple(a.shape), topo.n_nodes, topo.ppn,
-                   method, backend, local_compute)).encode())
+                   method, backend, local_compute, integrity)).encode())
     return h.hexdigest()
 
 
@@ -60,12 +61,14 @@ class PlanCache:
 
     def __init__(self, topo: Topology, *, method: str = "nap",
                  backend: str = "simulate", local_compute: str = "auto",
-                 max_entries: int = 8, mesh=None, **operator_kwargs):
+                 max_entries: int = 8, mesh=None, integrity: str = "off",
+                 **operator_kwargs):
         self.topo = topo
         self.method, self.backend = method, backend
         self.local_compute = local_compute
         self.max_entries = int(max_entries)
         self.mesh = mesh
+        self.integrity = integrity
         self.operator_kwargs = dict(operator_kwargs)
         self._entries: "OrderedDict[str, dict]" = OrderedDict()
         self.stats: Dict[str, int] = {"hits": 0, "misses": 0, "hot_swaps": 0,
@@ -84,7 +87,8 @@ class PlanCache:
         """
         cpart = row_part if col_part is None else col_part
         key = structure_key(a, row_part, cpart, self.topo,
-                            self.method, self.backend, self.local_compute)
+                            self.method, self.backend, self.local_compute,
+                            self.integrity)
         ent = self._entries.get(key)
         if ent is not None:
             self._entries.move_to_end(key)
@@ -102,7 +106,7 @@ class PlanCache:
                           col_part=cpart, method=self.method,
                           backend=self.backend,
                           local_compute=self.local_compute, mesh=self.mesh,
-                          **self.operator_kwargs)
+                          integrity=self.integrity, **self.operator_kwargs)
         while len(self._entries) >= self.max_entries:
             self._entries.popitem(last=False)
             self.stats["evictions"] += 1

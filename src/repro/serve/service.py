@@ -35,6 +35,7 @@ into the cached compiled program with zero retraces.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import time
 from collections import deque
 from typing import Callable, Dict, List, Optional
@@ -42,6 +43,7 @@ from typing import Callable, Dict, List, Optional
 import numpy as np
 
 from repro.checkpoint.store import CheckpointManager
+from repro.core.integrity import IntegrityError, MessageFault
 from repro.core.partition import RowPartition, contiguous_partition, \
     survivor_partition
 from repro.core.topology import Topology
@@ -178,7 +180,8 @@ class SolverService:
                  checkpoint_every: int = 4,
                  fault_plan: Optional[FaultPlan] = None,
                  max_attempts: int = 4, backoff: float = 1.0,
-                 plan_cache_max: int = 8, mesh=None):
+                 plan_cache_max: int = 8, mesh=None,
+                 integrity: str = "off", quarantine_strikes: int = 3):
         self.clock = clock if clock is not None else ManualClock()
         self.dt = float(dt)
         self.topo = topo
@@ -191,9 +194,14 @@ class SolverService:
                                       rel_floor=straggler_rel)
         self.detector = StragglerDetector(**self._straggler_params)
         self.policy = ElasticPolicy()
+        self.integrity = integrity
+        self.quarantine_strikes = int(quarantine_strikes)
+        self._pending_msg_faults: List[MessageFault] = []
+        self._quarantine_pending: List[str] = []
         self.plans = PlanCache(topo, method=method, backend=backend,
                                local_compute=local_compute,
-                               max_entries=plan_cache_max, mesh=mesh)
+                               max_entries=plan_cache_max, mesh=mesh,
+                               integrity=integrity)
         self.matrices: Dict[str, dict] = {}
         self.queue: "deque[Request]" = deque()
         self.requests: Dict[int, Request] = {}
@@ -217,6 +225,7 @@ class SolverService:
         self.stats: Dict[str, float] = {
             "steps": 0, "completed": 0, "rejected": 0, "expired": 0,
             "failed": 0, "retries": 0, "recoveries": 0, "torn_saves": 0,
+            "message_faults": 0, "integrity_detected": 0, "quarantines": 0,
             "last_recover_rebuild_s": 0.0}
         self.log: List[str] = []
 
@@ -317,6 +326,16 @@ class SolverService:
             self._recover(evicted)
         self._shed_expired(now)
         executed = self._pump(now)
+        if self._quarantine_pending and not self.degraded:
+            cand = [n for n in self._quarantine_pending if n in self.nodes]
+            self._quarantine_pending = []
+            if cand:
+                self.stats["quarantines"] += 1
+                self.log.append(
+                    f"step {self.step_no}: quarantining {cand} after "
+                    f">={self.quarantine_strikes} integrity strikes")
+                self._recover(cand)
+                evicted = sorted(set(evicted) | set(cand))
         return {"step": self.step_no, "now": now, "executed": executed,
                 "queued": len(self.queue), "evicted": evicted}
 
@@ -355,6 +374,21 @@ class SolverService:
             self._torn_next_save = True
             self.log.append(f"step {self.step_no}: next checkpoint save "
                             f"will tear")
+        elif ev.kind in ("corrupt_message", "drop_message",
+                         "duplicate_message"):
+            self.stats["message_faults"] += 1
+            if self.integrity == "off":
+                self.log.append(
+                    f"step {self.step_no}: scripted {ev.kind} dropped — "
+                    f"no integrity layer on this service (the corruption "
+                    f"would have gone undetected)")
+            else:
+                self._pending_msg_faults.append(ev.fault)
+                f = ev.fault
+                self.log.append(
+                    f"step {self.step_no}: scripted {ev.kind} armed "
+                    f"(phase={f.phase} kind={f.kind} sender="
+                    f"({f.node},{f.proc}) slot={f.slot})")
 
     def _shed_expired(self, now: float) -> None:
         keep = deque()
@@ -382,7 +416,9 @@ class SolverService:
             r.status = "running"
         try:
             self._execute(batch, now)
-        except FabricError as e:
+        except (FabricError, IntegrityError) as e:
+            if isinstance(e, IntegrityError):
+                self.stats["integrity_detected"] += 1
             for r in batch:
                 r.attempts += 1
                 if r.attempts >= self.max_attempts:
@@ -391,13 +427,27 @@ class SolverService:
                     self.stats["failed"] += 1
                 else:
                     r.status = "queued"
-                    r.not_before = now + self.backoff * 2 ** (r.attempts - 1)
+                    r.not_before = now + self._backoff_delay(r.id, r.attempts)
                     self.queue.append(r)
                     self._acct(r.tenant)["retries"] += 1
                     self.stats["retries"] += 1
+            kind = ("integrity" if isinstance(e, IntegrityError)
+                    else "fabric")
             self.log.append(f"step {self.step_no}: batch of {len(batch)} "
-                            f"hit fabric error: {e}")
+                            f"hit {kind} error: {e}")
         return len(batch)
+
+    def _backoff_delay(self, request_id: int, attempt: int) -> float:
+        """Exponential backoff with DETERMINISTIC seeded jitter.  A bare
+        ``backoff * 2**(attempt-1)`` synchronizes every request failed in
+        the same step onto the same retry step — a thundering herd at
+        exactly the moment the fleet is recovering.  The jitter spreads
+        them over [1x, 1.25x] of the base delay, derived from
+        (request id, attempt) so fault scenarios replay exactly."""
+        base = self.backoff * 2 ** (attempt - 1)
+        digest = hashlib.sha256(f"{request_id}:{attempt}".encode()).digest()
+        jitter = int.from_bytes(digest[:8], "big") / 2.0 ** 64
+        return base * (1.0 + 0.25 * jitter)
 
     def _execute(self, batch: List[Request], now: float) -> None:
         m = self.matrices[batch[0].matrix]
@@ -405,6 +455,17 @@ class SolverService:
         if self.dead_now:
             raise FabricError(f"collective timed out: "
                               f"{sorted(self.dead_now)} unreachable")
+        if self._pending_msg_faults:
+            for f in self._pending_msg_faults:
+                # a fault scripted against coordinates the fleet no longer
+                # has (sender evicted since it was armed) cannot fire
+                if f.node >= self.topo.n_nodes or f.proc >= self.topo.ppn:
+                    self.log.append(
+                        f"step {self.step_no}: scripted fault on evicted "
+                        f"sender ({f.node},{f.proc}) dropped")
+                    continue
+                op.queue_fault(f)
+            self._pending_msg_faults = []
         V = np.stack([r.b for r in batch], axis=1)
         if batch[0].kind == "spmv":
             W = op @ V
@@ -439,6 +500,15 @@ class SolverService:
                 elif isinstance(v, (int, float)):
                     acct["plan"][k] = acct["plan"].get(k, 0) + v
             self.stats["completed"] += 1
+        if self.integrity == "recover":
+            # k strikes against a node (attributed by the wire checksums)
+            # propose it to the elastic path — a link that corrupts
+            # repeatedly is treated like a failing node.
+            strikes = op.integrity_report().get("strikes", {})
+            cand = sorted(n for n, s in strikes.items()
+                          if s >= self.quarantine_strikes and n in self.nodes)
+            if cand:
+                self._quarantine_pending = cand
 
     def _solve_callback(self, batch: List[Request]) -> Callable:
         ids = np.array([r.id for r in batch], dtype=np.int64)

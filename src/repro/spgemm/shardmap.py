@@ -35,6 +35,9 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro.core.integrity import (IntegrityError, NAP_MESSAGE_PHASES,
+                                  build_fault_spec, message_phases,
+                                  phase_index, verify_wire)
 from repro.core.partition import RowPartition
 from repro.core.topology import Topology
 from repro.spgemm.plan import (SpGemmPlan, build_spgemm_plan,
@@ -358,7 +361,8 @@ def unpack_c_values(c_shards: np.ndarray, compiled: CompiledSpGemm) -> CSR:
                         sum_duplicates=False)
 
 
-def spgemm_shardmap(compiled: CompiledSpGemm, mesh, dtype=None):
+def spgemm_shardmap(compiled: CompiledSpGemm, mesh, dtype=None,
+                    integrity: bool = False):
     """Build the jitted shard_map SpGEMM: f(b_shards) -> c_value_shards.
 
     ``b_shards`` is [n_nodes, ppn, b_nnz_pad] (``pack_b_values``); the
@@ -366,81 +370,139 @@ def spgemm_shardmap(compiled: CompiledSpGemm, mesh, dtype=None):
     structure's order.  ``dtype`` pins the payload precision (float32
     default; float64 needs jax x64 mode and matches the host product to
     round-off — the simulate backend is the bit-for-bit oracle).
+
+    ``integrity=True`` builds the INSTRUMENTED program: every value-block
+    payload is checksummed by the sender before the scripted fault
+    boundary, the per-call fault-spec argument (the SpMV operators'
+    :func:`repro.core.integrity.build_fault_spec` array) is applied as a
+    pure transform at the pack boundary, and the receiver recomputes
+    after the collective — ``run(b_shards, fault_spec)`` then returns
+    ``(c_shards, chk)`` with ``chk`` the
+    [n_nodes, ppn, n_phases, 2, max_slots] aux output of
+    :func:`repro.core.integrity.verify_wire`.  With ``integrity=False``
+    the emitted program is the bare one, bit-for-bit.
     """
     import jax
     import jax.numpy as jnp
     from jax.ops import segment_sum
     from jax.sharding import PartitionSpec as P
     from repro.compat import shard_map
+    from repro.core.spmv_jax import _apply_fault, _msg_checksums, _stack_chk
 
     if dtype is None:
         dtype = jnp.float32
-    run_key = (id(mesh), np.dtype(dtype).name)
+    run_key = (id(mesh), np.dtype(dtype).name, bool(integrity))
     hit = compiled._run_cache.get(run_key)
     if hit is not None:
         return hit
     topo = compiled.topo
     nn, ppn = topo.n_nodes, topo.ppn
     c_nnz_pad, vpads = compiled.c_nnz_pad, compiled.vpads
+    ph = phase_index(compiled.method)
+    max_slots = max(ppn, nn) if compiled.method == "nap" else topo.n_procs
+
+    def make_exchange(fault_spec, chks):
+        # Sender checksums the CLEAN payload, the scripted fault (if
+        # armed for this device+phase) corrupts it at the pack boundary,
+        # payload and checksum words travel through the same collective,
+        # the receiver recomputes.  Uninstrumented this is literally the
+        # bare all_to_all.
+        def exchange(buf, phase, axis):
+            if not integrity:
+                return jax.lax.all_to_all(buf, axis, 0, 0, tiled=True)
+            sent = _msg_checksums(buf)
+            buf = _apply_fault(buf, fault_spec[ph[phase]])
+            recv = jax.lax.all_to_all(buf, axis, 0, 0, tiled=True)
+            expect = jax.lax.all_to_all(sent[:, None], axis, 0, 0,
+                                        tiled=True)[:, 0]
+            chks[phase] = (expect, _msg_checksums(recv))
+            return recv
+        return exchange
 
     if compiled.method == "nap":
         names = ["full_send_v", "init_send_v", "inter_gather_v",
                  "final_send_v", "exp_pos", "exp_out", "exp_a"]
 
-        def per_device(b_loc, full_send_v, init_send_v, inter_gather_v,
-                       final_send_v, exp_pos, exp_out, exp_a):
+        def per_device(b_loc, *args):
             squeeze = lambda x: x.reshape(x.shape[2:])
+            fault_spec = None
+            if integrity:
+                fault_spec = squeeze(args[0])               # [n_phases, 4]
+                args = args[1:]
             (b_loc, full_send_v, init_send_v, inter_gather_v, final_send_v,
-             exp_pos, exp_out, exp_a) = map(
-                squeeze, (b_loc, full_send_v, init_send_v, inter_gather_v,
-                          final_send_v, exp_pos, exp_out, exp_a))
+             exp_pos, exp_out, exp_a) = map(squeeze, (b_loc,) + args)
+            chks = {}
+            exchange = make_exchange(fault_spec, chks)
             # Phases A+B: intra-node row-block exchanges over "proc".
-            full_recv = jax.lax.all_to_all(b_loc[full_send_v], "proc",
-                                           0, 0, tiled=True)
-            init_recv = jax.lax.all_to_all(b_loc[init_send_v], "proc",
-                                           0, 0, tiled=True)
+            full_recv = exchange(b_loc[full_send_v], "full", "proc")
+            init_recv = exchange(b_loc[init_send_v], "init", "proc")
             # Phase C: ONE aggregated inter-node all_to_all over "node".
             staged = jnp.concatenate([b_loc, init_recv.reshape(-1)])
-            inter_recv = jax.lax.all_to_all(staged[inter_gather_v], "node",
-                                            0, 0, tiled=True)
+            inter_recv = exchange(staged[inter_gather_v], "inter", "node")
             inter_flat = inter_recv.reshape(-1)
             # Phase D: intra-node scatter of the aggregated rows.
-            final_recv = jax.lax.all_to_all(inter_flat[final_send_v], "proc",
-                                            0, 0, tiled=True)
+            final_recv = exchange(inter_flat[final_send_v], "final", "proc")
             domain = jnp.concatenate([b_loc, full_recv.reshape(-1),
                                       inter_flat, final_recv.reshape(-1)])
             # local compute: csr_matmul's row expansion + duplicate merge
             c = segment_sum(exp_a * domain[exp_pos], exp_out,
                             num_segments=c_nnz_pad)
-            return c.reshape(1, 1, c_nnz_pad)
+            if not integrity:
+                return c.reshape(1, 1, c_nnz_pad)
+            chk = _stack_chk([chks[p] for p in NAP_MESSAGE_PHASES],
+                             max_slots)
+            return (c.reshape(1, 1, c_nnz_pad),
+                    chk.reshape((1, 1) + chk.shape))
     else:
         names = ["send_v", "exp_pos", "exp_out", "exp_a"]
 
-        def per_device(b_loc, send_v, exp_pos, exp_out, exp_a):
+        def per_device(b_loc, *args):
             squeeze = lambda x: x.reshape(x.shape[2:])
+            fault_spec = None
+            if integrity:
+                fault_spec = squeeze(args[0])
+                args = args[1:]
             b_loc, send_v, exp_pos, exp_out, exp_a = map(
-                squeeze, (b_loc, send_v, exp_pos, exp_out, exp_a))
-            recv = jax.lax.all_to_all(b_loc[send_v], ("node", "proc"),
-                                      0, 0, tiled=True)
+                squeeze, (b_loc,) + args)
+            chks = {}
+            exchange = make_exchange(fault_spec, chks)
+            recv = exchange(b_loc[send_v], "pair", ("node", "proc"))
             domain = jnp.concatenate([b_loc, recv.reshape(-1)])
             c = segment_sum(exp_a * domain[exp_pos], exp_out,
                             num_segments=c_nnz_pad)
-            return c.reshape(1, 1, c_nnz_pad)
+            if not integrity:
+                return c.reshape(1, 1, c_nnz_pad)
+            chk = _stack_chk([chks["pair"]], max_slots)
+            return (c.reshape(1, 1, c_nnz_pad),
+                    chk.reshape((1, 1) + chk.shape))
 
     dev = compiled.device_arrays(dtype)
     spec = P("node", "proc")
+    n_in = 1 + len(names) + (1 if integrity else 0)
     smapped = shard_map(per_device, mesh=mesh,
-                        in_specs=(spec,) * (1 + len(names)), out_specs=spec,
+                        in_specs=(spec,) * n_in,
+                        out_specs=(spec, spec) if integrity else spec,
                         check_vma=False)
-    jitted = jax.jit(lambda b_shards: smapped(
-        b_shards, *[dev[k] for k in names]))
+    if integrity:
+        jitted = jax.jit(lambda b_shards, fault_spec: smapped(
+            b_shards, fault_spec, *[dev[k] for k in names]))
 
-    def run(b_shards):
-        import jax.numpy as jnp
-        _RUN_COUNTER["runs"] += 1
-        return jitted(jnp.asarray(b_shards, dtype))
+        def run(b_shards, fault_spec):
+            import jax.numpy as jnp
+            _RUN_COUNTER["runs"] += 1
+            return jitted(jnp.asarray(b_shards, dtype),
+                          jnp.asarray(np.asarray(fault_spec), jnp.int32))
+    else:
+        jitted = jax.jit(lambda b_shards: smapped(
+            b_shards, *[dev[k] for k in names]))
+
+        def run(b_shards):
+            import jax.numpy as jnp
+            _RUN_COUNTER["runs"] += 1
+            return jitted(jnp.asarray(b_shards, dtype))
 
     run.method = compiled.method
+    run.integrity = bool(integrity)
     compiled._run_cache[run_key] = run
     return run
 
@@ -448,7 +510,9 @@ def spgemm_shardmap(compiled: CompiledSpGemm, mesh, dtype=None):
 def distributed_spgemm(a: CSR, b: CSR, row_part: RowPartition,
                        mid_part: RowPartition, topo: Topology, *,
                        method: str = "nap", backend: str = "shardmap",
-                       mesh=None, dtype=None, cache: bool = True) -> CSR:
+                       mesh=None, dtype=None, cache: bool = True,
+                       integrity: str = "off", faults=(),
+                       report: Optional[dict] = None) -> CSR:
     """One-call distributed ``C = A @ B``.
 
     ``backend="simulate"`` runs the exact float64 message-passing oracle
@@ -456,7 +520,29 @@ def distributed_spgemm(a: CSR, b: CSR, row_part: RowPartition,
     ``"shardmap"`` compiles and runs the SPMD program (float32 payloads
     by default; ``dtype=jnp.float64`` under jax x64 mode matches the
     host product to round-off).
+
+    ``integrity="detect"`` runs the checksum-instrumented program and
+    raises :class:`repro.core.integrity.IntegrityError` with
+    phase+message attribution when any value-exchange payload arrives
+    different from what the sender packed; ``"recover"`` retries the
+    whole product once with the fault boundary cleared (the scripted
+    faults in ``faults`` — :class:`repro.core.integrity.MessageFault`
+    on this method's exchange phases, forward direction — fire on the
+    first run only, so a recovered product is bit-identical to the
+    fault-free run).  Pass a dict as ``report`` to receive the check
+    counters.  Integrity is shardmap-only: the simulate backend IS the
+    bit-exact oracle the checks are calibrated against.
     """
+    if integrity not in ("off", "detect", "recover"):
+        raise ValueError(f"integrity must be 'off'|'detect'|'recover', "
+                         f"got {integrity!r}")
+    if faults and integrity == "off":
+        raise ValueError("scripted message faults need "
+                         "integrity='detect'|'recover'")
+    if integrity != "off" and backend != "shardmap":
+        raise ValueError("integrity-checked SpGEMM is shardmap-only (the "
+                         "simulate backend is the bit-exact oracle the "
+                         "checks are calibrated against)")
     if backend == "simulate":
         plan = build_spgemm_plan(a, b, row_part, mid_part, topo,
                                  method=method)
@@ -468,7 +554,46 @@ def distributed_spgemm(a: CSR, b: CSR, row_part: RowPartition,
                               cache=cache)
     if mesh is None:
         mesh = _default_mesh(topo)
-    run = spgemm_shardmap(compiled, mesh, dtype=dtype)
     np_dtype = np.dtype(np.float32 if dtype is None else dtype)
-    c_shards = run(pack_b_values(b, compiled, np_dtype))
+    b_shards = pack_b_values(b, compiled, np_dtype)
+    if integrity == "off":
+        run = spgemm_shardmap(compiled, mesh, dtype=dtype)
+        return unpack_c_values(np.asarray(run(b_shards)), compiled)
+
+    for f in faults:
+        if f.direction not in ("any", "forward"):
+            raise ValueError("SpGEMM message faults are forward-only "
+                             "(the product has no transpose exchange)")
+        if f.phase == "compute":
+            raise ValueError("SpGEMM integrity covers the value exchanges; "
+                             "compute-side faults belong to the SpMV "
+                             "operators' ABFT check")
+    run = spgemm_shardmap(compiled, mesh, dtype=dtype, integrity=True)
+    spec = build_fault_spec(topo, faults, method)
+    phases = message_phases(method)
+    counters = {"wire_checks": topo.n_procs * len(phases),
+                "wire_mismatches": 0, "faults_injected": len(list(faults)),
+                "retries": 0, "recovered": 0}
+    c_shards, chk = run(b_shards, spec)
+    mism = verify_wire(np.asarray(chk), phases, topo.ppn, "forward")
+    if mism:
+        counters["wire_mismatches"] = len(mism)
+        if integrity == "detect":
+            if report is not None:
+                report.update(counters)
+            raise IntegrityError(
+                f"{len(mism)} integrity mismatch(es) in distributed "
+                f"SpGEMM: " + "; ".join(str(m) for m in mism), mism)
+        counters["retries"] = 1
+        c_shards, chk = run(b_shards, np.zeros_like(spec))
+        again = verify_wire(np.asarray(chk), phases, topo.ppn, "forward")
+        if again:
+            if report is not None:
+                report.update(counters)
+            raise IntegrityError(
+                "integrity mismatch persisted through the clean SpGEMM "
+                "retry: " + "; ".join(str(m) for m in again), again)
+        counters["recovered"] = 1
+    if report is not None:
+        report.update(counters)
     return unpack_c_values(np.asarray(c_shards), compiled)
