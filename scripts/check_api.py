@@ -195,6 +195,33 @@ def main() -> None:
         pass
     print("deprecation shims removed (DistSpMV.run, nap_spmv_shardmap, "
           "standard_spmv_shardmap)")
+
+    # -- comm-strategy surface ----------------------------------------------
+    # comm="multistep" matches the oracle on both backends; comm="nap" is
+    # bit-identical to the pre-existing operator; comm="auto" records the
+    # per-direction verdict on autotune_report().
+    for backend, rtol, atol in [("simulate", 1e-9, 1e-12),
+                                ("shardmap", 1e-4, 1e-5)]:
+        op = nap.operator(a, topo=topo, backend=backend, comm="multistep")
+        np.testing.assert_allclose(op @ v, a.matvec(v), rtol=rtol, atol=atol)
+        np.testing.assert_allclose(op.T @ v, at.matvec(v),
+                                   rtol=rtol, atol=atol)
+        base = nap.operator(a, topo=topo, backend=backend)
+        pinned = nap.operator(a, topo=topo, backend=backend, comm="nap")
+        np.testing.assert_array_equal(np.asarray(base @ v),
+                                      np.asarray(pinned @ v))
+    op = nap.operator(a, topo=topo, backend="simulate", comm="auto")
+    rep = op.autotune_report()
+    assert rep["comm"]["requested"] == "auto"
+    assert rep["comm_resolved"] in ("standard", "nap", "multistep")
+    assert rep["comm_transpose_resolved"] in ("standard", "nap", "multistep")
+    cand = rep["comm"]["forward"]["candidates"]
+    assert set(cand) == {"standard", "nap", "multistep"}
+    for c in cand.values():
+        assert c["injected_inter_bytes"] >= c["effective_inter_bytes"] >= 0
+    np.testing.assert_allclose(op @ v, a.matvec(v), rtol=1e-9, atol=1e-12)
+    print("comm surface OK (multistep both backends, comm='nap' "
+          "bit-identical, comm='auto' verdict on autotune_report)")
     print("API OK")
 
 

@@ -68,6 +68,7 @@ def level_operators(levels: Sequence[Level], topo, *, method: str = "nap",
                     materialize: bool = False,
                     spgemm_backend: str = "simulate",
                     spgemm_dtype=None,
+                    comm: Optional[str] = None,
                     **kwargs) -> List[LevelOperators]:
     """One :class:`LevelOperators` (A + rectangular P/R) per AMG level.
 
@@ -80,6 +81,15 @@ def level_operators(levels: Sequence[Level], topo, *, method: str = "nap",
     distributed as long as the FINE side is large enough — the coarse
     partition simply has empty ranks.  Extra ``kwargs`` pass straight to
     :func:`repro.api.operator`.
+
+    ``comm`` selects the exchange strategy PER LEVEL and PER DIRECTION:
+    each level's A and P get their own :func:`repro.api.operator` call,
+    so ``comm="auto"`` runs the comm autotuner against that level's own
+    sparsity — a near-dense coarse level can resolve to ``"multistep"``
+    (or ``"standard"``) while the fine levels stay ``"nap"``, and a
+    rectangular P's restriction direction can differ from its forward.
+    Inspect the per-level verdicts via each operator's
+    ``autotune_report()["comm"]``.
 
     ``materialize=True`` assembles every coarse-level matrix through the
     node-aware distributed SpGEMM (:func:`repro.spgemm.galerkin_rap` on
@@ -119,13 +129,14 @@ def level_operators(levels: Sequence[Level], topo, *, method: str = "nap",
         entry = LevelOperators()
         if lvl.a.shape[0] >= floor:
             entry.a = nap.operator(a_mats[i], topo=topo, part=parts[i],
-                                   method=method, backend=backend, **kwargs)
+                                   method=method, backend=backend,
+                                   comm=comm, **kwargs)
             if lvl.p is not None:
                 entry.p = nap.operator(lvl.p, topo=topo,
                                        row_part=parts[i],
                                        col_part=parts[i + 1],
                                        method=method, backend=backend,
-                                       **kwargs)
+                                       comm=comm, **kwargs)
                 entry.r = entry.p.T
         ops.append(entry)
     return ops

@@ -68,6 +68,7 @@ def operator(a, topo: Optional[Topology] = None,
              row_part: Optional[RowPartition] = None,
              col_part: Optional[RowPartition] = None,
              method: str = "nap", backend: str = "shardmap",
+             comm: Optional[str] = None, threshold: object = "auto",
              local_compute: str = "auto", mesh=None,
              pairing: str = "aligned",
              block_shape: Tuple[int, int] = (8, 128), nv_block: int = 128,
@@ -96,9 +97,23 @@ def operator(a, topo: Optional[Topology] = None,
         layout ``row_part`` has), else to
         ``contiguous_partition(n, topo.n_procs)``.  Ranks may own zero
         entries (coarse AMG levels smaller than the machine).
-    method : ``"nap"`` (Algorithms 2+3) or ``"standard"`` (Algorithm 1).
+    method : ``"nap"`` (Algorithms 2+3), ``"standard"`` (Algorithm 1) or
+        ``"multistep"`` (the duplication-split node-aware exchange —
+        see :mod:`repro.comm`).
     backend : ``"shardmap"`` (jitted SPMD) | ``"simulate"`` (exact numpy
         oracle) | any backend later added to the executor registry.
+    comm : optional exchange-strategy override — ``"standard"`` |
+        ``"nap"`` | ``"multistep"`` pin the strategy (taking precedence
+        over ``method``), ``"auto"`` lets the comm autotuner
+        (:func:`repro.comm.choose_comm`) pick one PER DIRECTION from the
+        modeled injected inter-node bytes + postal time; when forward
+        and transpose disagree, the operator holds a second executor for
+        the transpose direction.  The verdict is merged into
+        ``op.autotune_report()`` under ``comm``/``comm_resolved``/
+        ``comm_transpose_resolved``.  ``None`` (default) follows
+        ``method`` unchanged.
+    threshold : duplication threshold for the multistep strategy
+        (``"auto"`` or an int >= 1; ``d < threshold`` columns go direct).
     local_compute : shardmap local kernel — ``"auto"`` | ``"bsr"`` |
         ``"ell"`` | ``"coo"`` (see kernels/README.md).  The transpose
         direction autotunes independently over ell/coo (no transposed
@@ -146,15 +161,48 @@ def operator(a, topo: Optional[Topology] = None,
     if integrity not in ("off", "detect", "recover"):
         raise ValueError(f"integrity must be off|detect|recover, "
                          f"got {integrity!r}")
+    comm_report = None
+    t_method = None
+    if comm is not None:
+        from repro.comm import COMM_CHOICES, choose_comm
+        if comm not in COMM_CHOICES:
+            raise ValueError(f"comm must be one of {COMM_CHOICES}, "
+                             f"got {comm!r}")
+        if comm == "auto":
+            verdict = choose_comm(a.indptr, a.indices, row_part, topo,
+                                  pairing=pairing, col_part=col_part,
+                                  threshold=threshold, integrity=integrity)
+            method = verdict["forward"]["chosen"]
+            t_method = verdict["transpose"]["chosen"]
+            comm_report = {
+                "requested": "auto",
+                "resolved": method,
+                "transpose_resolved": t_method,
+                "threshold": verdict["threshold"],
+                "forward": verdict["forward"],
+                "transpose": verdict["transpose"],
+            }
+        else:
+            method = t_method = comm
+            comm_report = {"requested": comm, "resolved": comm,
+                           "transpose_resolved": comm}
     spec = OperatorSpec(method=method, backend=backend,
                         local_compute=local_compute, pairing=pairing,
                         block_shape=tuple(block_shape), nv_block=nv_block,
                         interpret=interpret, cache=cache, tuner=tuner,
-                        integrity=integrity)
+                        integrity=integrity, threshold=threshold)
     exec_ = bind_executor(backend, method, a, row_part, col_part, topo, spec,
                          mesh=mesh)
+    t_exec = None
+    if t_method is not None and t_method != method:
+        # forward and transpose verdicts disagree: a dedicated executor
+        # (own plan + programs) serves the transpose direction.
+        t_spec = dataclasses.replace(spec, method=t_method)
+        t_exec = bind_executor(backend, t_method, a, row_part, col_part,
+                               topo, t_spec, mesh=mesh)
     return NapOperator(a=a, row_part=row_part, col_part=col_part, topo=topo,
-                       spec=spec, executor=exec_)
+                       spec=spec, executor=exec_,
+                       transpose_executor=t_exec, comm_report=comm_report)
 
 
 def _is_operator(x) -> bool:
@@ -178,6 +226,10 @@ class NapOperator:
     topo: Topology
     spec: OperatorSpec
     executor: object
+    # set when comm="auto" resolves the two directions to DIFFERENT
+    # strategies: the transpose direction runs through its own executor
+    transpose_executor: Optional[object] = None
+    comm_report: Optional[dict] = None
     transposed: bool = False
     _parent: Optional["NapOperator"] = dataclasses.field(
         default=None, repr=False)
@@ -201,8 +253,12 @@ class NapOperator:
             raise NotImplementedError(
                 "the shardmap backend computes in float32; use "
                 "backend='simulate' for float64 results")
-        apply = (self.executor.transpose if self.transposed
-                 else self.executor.forward)
+        if self.transposed:
+            ex = (self.transpose_executor
+                  if self.transpose_executor is not None else self.executor)
+            apply = ex.transpose
+        else:
+            apply = self.executor.forward
         out = apply(x, donate=donate)
         if precision is not None:
             out = np.asarray(out, dtype=precision)
@@ -274,6 +330,8 @@ class NapOperator:
         structure alone and leans on this for multi-tenant value updates.
         """
         self.executor.swap_values(a_new)
+        if self.transpose_executor is not None:
+            self.transpose_executor.swap_values(a_new)
         self.a = a_new
         if self._parent is not None:
             self._parent.a = a_new
@@ -284,14 +342,26 @@ class NapOperator:
         empty for backends that never trace.  Flat counts across a
         :meth:`swap_values` prove the hot-swap reused the compiled
         program."""
-        return self.executor.trace_counts()
+        counts = dict(self.executor.trace_counts())
+        if self.transpose_executor is not None:
+            counts.pop("transpose", None)
+            counts.update(
+                {k: v for k, v
+                 in self.transpose_executor.trace_counts().items()
+                 if k == "transpose"})
+        return counts
 
     # -- integrity ---------------------------------------------------------
     def integrity_report(self):
         """Check/mismatch counters, scope attribution, per-node strikes
         and quarantine candidates (``{"mode": "off"}`` when the operator
         was built without integrity)."""
-        return self.executor.integrity_report()
+        rep = self.executor.integrity_report()
+        if self.transpose_executor is not None:
+            rep = dict(rep)
+            rep["transpose_executor"] = \
+                self.transpose_executor.integrity_report()
+        return rep
 
     def inject_fault(self, phase: str, kind: str = "bitflip", *,
                      node: int = 0, proc: int = 0, slot: int = 0,
@@ -313,7 +383,11 @@ class NapOperator:
     def queue_fault(self, fault: MessageFault) -> None:
         """Script a pre-built :class:`MessageFault` (see
         :meth:`inject_fault` for the keyword convenience)."""
-        self.executor.queue_fault(fault)
+        if (fault.direction == "transpose"
+                and self.transpose_executor is not None):
+            self.transpose_executor.queue_fault(fault)
+        else:
+            self.executor.queue_fault(fault)
 
     # -- introspection -----------------------------------------------------
     def stats(self):
@@ -328,8 +402,19 @@ class NapOperator:
         """Local-compute format decision (chosen format, modeled times,
         per-rank stats) where the backend runs the adaptive engine —
         forward verdict at the top level, transpose verdict under
-        ``"transpose"`` / ``"transpose_resolved"``."""
-        return self.executor.autotune_report()
+        ``"transpose"`` / ``"transpose_resolved"``.  When the operator
+        was built with ``comm=``, the exchange-strategy verdict rides
+        along under ``"comm"`` / ``"comm_resolved"`` /
+        ``"comm_transpose_resolved"``."""
+        rep = self.executor.autotune_report()
+        if self.comm_report is None:
+            return rep
+        rep = dict(rep or {})
+        rep["comm"] = self.comm_report
+        rep["comm_resolved"] = self.comm_report["resolved"]
+        rep["comm_transpose_resolved"] = \
+            self.comm_report["transpose_resolved"]
+        return rep
 
     def __repr__(self) -> str:
         t = ".T" if self.transposed else ""
@@ -486,7 +571,7 @@ class ComposedOperator:
                         pairing=spec.pairing, block_shape=spec.block_shape,
                         nv_block=spec.nv_block, interpret=spec.interpret,
                         cache=spec.cache, tuner=spec.tuner,
-                        integrity=spec.integrity)
+                        integrity=spec.integrity, threshold=spec.threshold)
 
     # -- per-stage introspection, rolled up --------------------------------
     def stats(self) -> List[object]:

@@ -1,0 +1,34 @@
+"""Comm-strategy subsystem: pluggable exchange schedules for the
+distributed SpMV operator stack.  See README.md in this directory."""
+from repro.comm.autotune import (PREFERENCE, build_candidate_plans,
+                                 choose_comm, comm_verdict)
+from repro.comm.cost import planned_traffic
+from repro.comm.multistep import (AUTO_THRESHOLD, MultistepPlan,
+                                  build_multistep_plan, duplication_counts,
+                                  multistep_stats, resolve_threshold)
+from repro.comm.simulate import (simulate_multistep_spmv,
+                                 simulate_multistep_spmv_transpose)
+from repro.comm.strategies import (COMM_CHOICES, COMM_STRATEGIES,
+                                   CommStrategy, available_strategies,
+                                   get_strategy)
+
+__all__ = [
+    "AUTO_THRESHOLD",
+    "COMM_CHOICES",
+    "COMM_STRATEGIES",
+    "CommStrategy",
+    "MultistepPlan",
+    "PREFERENCE",
+    "available_strategies",
+    "build_candidate_plans",
+    "build_multistep_plan",
+    "choose_comm",
+    "comm_verdict",
+    "duplication_counts",
+    "get_strategy",
+    "multistep_stats",
+    "planned_traffic",
+    "resolve_threshold",
+    "simulate_multistep_spmv",
+    "simulate_multistep_spmv_transpose",
+]

@@ -1,0 +1,154 @@
+"""Slot-granular planned traffic for the comm-strategy chooser.
+
+The SPMD lowerings (``repro.core.spmv_jax``) pad every message in an
+exchange phase to that phase's largest message, so the bytes a strategy
+*injects* differ from the bytes it *needs* to move.  This module costs a
+plan the way the lowering will actually run it: per phase, each existing
+(src, dst) message is charged the phase pad; absent slots cost nothing
+(MPI-style — an all_to_all slot nobody fills is not a message here, the
+full-buffer view lives in ``padded_traffic`` on the compiled program).
+
+The resulting payload is what :func:`repro.core.cost_model.postal_comm_time`
+consumes and what the ``comm_autotune`` benchmark block quotes.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence
+
+from repro.core.comm_graph import NAPPlan, StandardPlan
+from repro.comm.multistep import MultistepPlan
+
+#: bytes of the per-slot u32 checksum side-channel (PR 7) per message slot.
+_CHECKSUM_BYTES_PER_SLOT = 4
+
+
+def _phase_entry(send_lists: Sequence[List], recv_lists: Sequence[List],
+                 pad: int, inter: bool, bytes_per_val: int, nv: int,
+                 direction: str, n_slots: int, integrity: str) -> Dict:
+    """Account one exchange phase.
+
+    ``pad`` is the phase's slot size in values (max message length,
+    matching the compiled program).  ``direction`` picks whose buffers
+    set the per-rank maxima: the forward program sends along
+    ``send_lists``; the transpose program reverses every message, so the
+    forward *receiver* becomes the bottleneck sender.  Totals are
+    direction-independent.
+    """
+    rank_lists = send_lists if direction == "forward" else recv_lists
+    bpv = bytes_per_val * nv
+    n_msgs = sum(len(msgs) for msgs in send_lists)
+    effective = sum(m.size for msgs in send_lists for m in msgs) * bpv
+    padded = n_msgs * pad * bpv
+    max_rank_msgs = max((len(msgs) for msgs in rank_lists), default=0)
+    max_rank_padded = max((len(msgs) * pad * bpv for msgs in rank_lists),
+                          default=0)
+    # PR 7's integrity side-channel: a second tiny exchange shipping one
+    # u32 per slot per rank, regardless of how many slots carry data.
+    checksum = n_slots * _CHECKSUM_BYTES_PER_SLOT if integrity != "off" \
+        and n_msgs > 0 else 0
+    return {
+        "n_msgs": int(n_msgs),
+        "pad": int(pad),
+        "effective_bytes": int(effective),
+        "padded_bytes": int(padded),
+        "max_rank_msgs": int(max_rank_msgs),
+        "max_rank_padded_bytes": int(max_rank_padded),
+        "checksum_bytes": int(checksum),
+        "inter": bool(inter),
+    }
+
+
+def _pad_of(send_lists: Sequence[List]) -> int:
+    return max((m.size for msgs in send_lists for m in msgs), default=1) or 1
+
+
+def _split_pair(plan: StandardPlan):
+    """Split the flat pair exchange into inter/intra message lists while
+    keeping the SHARED pad the compiled program uses for both."""
+    topo = plan.topology
+    n = topo.n_procs
+    s_inter: List[List] = [[] for _ in range(n)]
+    s_intra: List[List] = [[] for _ in range(n)]
+    r_inter: List[List] = [[] for _ in range(n)]
+    r_intra: List[List] = [[] for _ in range(n)]
+    for r in range(n):
+        for m in plan.sends[r]:
+            (s_intra if topo.same_node(m.src, m.dst) else s_inter)[r].append(m)
+        for m in plan.recvs[r]:
+            (r_intra if topo.same_node(m.src, m.dst) else r_inter)[r].append(m)
+    return s_inter, s_intra, r_inter, r_intra
+
+
+def planned_traffic(plan, bytes_per_val: int = 4, nv: int = 1,
+                    direction: str = "forward",
+                    integrity: str = "off") -> Dict:
+    """Phase-by-phase injected traffic for a Standard/NAP/Multistep plan.
+
+    Returns ``{"strategy", "direction", "phases": {name: entry},
+    "injected_inter_bytes", "effective_inter_bytes",
+    "injected_intra_bytes", "effective_intra_bytes"}`` where each phase
+    entry carries padded/effective totals, per-rank maxima for the
+    requested direction, the integrity side-channel bytes, and an
+    ``inter`` flag.
+    """
+    if direction not in ("forward", "transpose"):
+        raise ValueError(f"unknown direction {direction!r}")
+    topo = plan.topology
+    phases: Dict[str, Dict] = {}
+
+    def nap_phases(nap: NAPPlan) -> None:
+        pads = {
+            "full": _pad_of(nap.local_full_sends),
+            "init": _pad_of(nap.local_init_sends),
+            "inter": _pad_of(nap.inter_sends),
+            "final": _pad_of(nap.local_final_sends),
+        }
+        phases["full"] = _phase_entry(
+            nap.local_full_sends, nap.local_full_recvs, pads["full"], False,
+            bytes_per_val, nv, direction, topo.ppn, integrity)
+        phases["init"] = _phase_entry(
+            nap.local_init_sends, nap.local_init_recvs, pads["init"], False,
+            bytes_per_val, nv, direction, topo.ppn, integrity)
+        phases["inter"] = _phase_entry(
+            nap.inter_sends, nap.inter_recvs, pads["inter"], True,
+            bytes_per_val, nv, direction, topo.n_nodes, integrity)
+        phases["final"] = _phase_entry(
+            nap.local_final_sends, nap.local_final_recvs, pads["final"],
+            False, bytes_per_val, nv, direction, topo.ppn, integrity)
+
+    if isinstance(plan, MultistepPlan):
+        strategy = "multistep"
+        nap_phases(plan.nap)
+        phases["direct"] = _phase_entry(
+            plan.direct.sends, plan.direct.recvs, _pad_of(plan.direct.sends),
+            True, bytes_per_val, nv, direction, topo.n_procs, integrity)
+    elif isinstance(plan, NAPPlan):
+        strategy = "nap"
+        nap_phases(plan)
+    elif isinstance(plan, StandardPlan):
+        strategy = "standard"
+        s_inter, s_intra, r_inter, r_intra = _split_pair(plan)
+        pad = _pad_of(plan.sends)  # shared across the flat exchange
+        phases["pair_inter"] = _phase_entry(
+            s_inter, r_inter, pad, True, bytes_per_val, nv, direction,
+            topo.n_procs, integrity)
+        phases["pair_intra"] = _phase_entry(
+            s_intra, r_intra, pad, False, bytes_per_val, nv, direction,
+            topo.n_procs, integrity)
+    else:
+        raise TypeError(f"unsupported plan type {type(plan).__name__}")
+
+    def total(key: str, inter: bool) -> int:
+        return sum(ph[key] for ph in phases.values() if ph["inter"] is inter)
+
+    return {
+        "strategy": strategy,
+        "direction": direction,
+        "phases": phases,
+        "injected_inter_bytes": total("padded_bytes", True)
+        + total("checksum_bytes", True),
+        "effective_inter_bytes": total("effective_bytes", True),
+        "injected_intra_bytes": total("padded_bytes", False)
+        + total("checksum_bytes", False),
+        "effective_intra_bytes": total("effective_bytes", False),
+    }

@@ -1,0 +1,133 @@
+"""Multi-step node-aware exchange: split off-node traffic by duplication.
+
+The paper's single aggregated inter-node exchange (``NAPPlan``) wins by
+deduplicating columns that several processes on the destination node
+need: each such column crosses the network once and fans out locally.
+Its follow-up (arXiv:1904.05838, PAPERS.md) observes the flip side —
+columns needed by only one (or few) processes on the destination node
+gain nothing from the dedup, yet still pay the init/final intra-node
+hops and, in the padded SPMD lowering, inflate the aggregated
+exchange's slot pad: one process's dense rows set the pad every other
+message in the all_to_all must stretch to.
+
+``build_multistep_plan`` therefore splits the deduped off-process
+triples ``(t, r, j)`` by a duplication threshold:
+
+* ``d(j) >= threshold`` — the column is needed by enough processes on
+  the destination node that the node-aware dedup pays; it goes through
+  an ordinary :class:`NAPPlan` (full/init/inter/final), built over its
+  share of the triples.
+* ``d(j) < threshold`` — low duplication ("dense rows go direct"): the
+  column is shipped owner -> requester in one network hop through a
+  :class:`StandardPlan` sub-exchange (the "direct" phase), bypassing
+  the aggregation entirely.
+
+On-node triples always ride the NAP sub-plan's full phase.  With
+``threshold <= 1`` nothing goes direct and the plan degenerates to the
+single-step NAP plan over the same triples.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple, Union
+
+import numpy as np
+
+from repro.core.comm_graph import (NAPPlan, PhaseStats, StandardPlan,
+                                   _offproc_pairs, build_nap_plan,
+                                   build_standard_plan, nap_stats)
+from repro.core.partition import RowPartition
+from repro.core.topology import Topology
+
+#: ``threshold="auto"``: dedup pays as soon as a second process on the
+#: destination node needs the column (one saved network crossing).
+AUTO_THRESHOLD = 2
+
+
+def resolve_threshold(threshold: Union[int, str], topo: Topology) -> int:
+    if threshold == "auto":
+        return AUTO_THRESHOLD
+    thr = int(threshold)
+    if thr < 1:
+        raise ValueError(f"duplication threshold must be >= 1, got {thr}")
+    return thr
+
+
+def duplication_counts(t: np.ndarray, j: np.ndarray, topo: Topology,
+                       n_cols: int) -> np.ndarray:
+    """Per-triple duplication: how many distinct processes on the triple's
+    destination NODE request column j.  Triples are deduped per
+    ``(t, r, j)`` and a column has one owner, so the count of triples
+    sharing ``(node_of(t), j)`` IS the number of requesting processes."""
+    if t.size == 0:
+        return np.zeros(0, dtype=np.int64)
+    tn = topo.node_of_array(t).astype(np.int64)
+    key = tn * np.int64(n_cols) + j
+    _, inv, counts = np.unique(key, return_inverse=True, return_counts=True)
+    return counts[inv]
+
+
+@dataclasses.dataclass
+class MultistepPlan:
+    """A NAP sub-plan for the high-duplication share plus a direct
+    (standard-style, owner -> requester) sub-plan for the rest.
+
+    Both sub-plans are built over the SAME topology/partitions; their
+    triple sets partition the full off-process set, so the union of
+    delivered columns equals what a single-step plan delivers.
+    """
+
+    topology: Topology
+    partition: RowPartition
+    nap: NAPPlan
+    direct: StandardPlan
+    threshold: int
+    col_partition: Optional[RowPartition] = None
+
+    @property
+    def col_part(self) -> RowPartition:
+        return self.col_partition if self.col_partition is not None \
+            else self.partition
+
+
+def build_multistep_plan(indptr: np.ndarray, indices: np.ndarray,
+                         part: RowPartition, topo: Topology,
+                         pairing: str = "balanced",
+                         col_part: Optional[RowPartition] = None,
+                         threshold: Union[int, str] = "auto",
+                         pairs: Optional[Tuple[np.ndarray, np.ndarray,
+                                               np.ndarray]] = None
+                         ) -> MultistepPlan:
+    """Split the off-process triples by duplication and build both
+    sub-plans.  ``pairs`` optionally supplies precomputed triples (same
+    contract as :func:`build_nap_plan`)."""
+    thr = resolve_threshold(threshold, topo)
+    cpart = part if col_part is None else col_part
+    t, r, j = pairs if pairs is not None else \
+        _offproc_pairs(indptr, indices, part, cpart)
+    tn = topo.node_of_array(t)
+    rn = topo.node_of_array(r)
+    off_node = tn != rn
+    d = duplication_counts(t[off_node], j[off_node], topo, cpart.n_rows)
+    direct_mask = np.zeros(t.shape, dtype=bool)
+    direct_mask[np.flatnonzero(off_node)[d < thr]] = True
+    nap_sub = build_nap_plan(indptr, indices, part, topo, pairing=pairing,
+                             col_part=col_part,
+                             pairs=(t[~direct_mask], r[~direct_mask],
+                                    j[~direct_mask]))
+    direct_sub = build_standard_plan(indptr, indices, part, topo,
+                                     col_part=col_part,
+                                     pairs=(t[direct_mask], r[direct_mask],
+                                            j[direct_mask]))
+    return MultistepPlan(topology=topo, partition=part, nap=nap_sub,
+                         direct=direct_sub, threshold=thr,
+                         col_partition=col_part)
+
+
+def multistep_stats(plan: MultistepPlan,
+                    bytes_per_val: int = 8) -> Dict[str, PhaseStats]:
+    """NAP phase stats plus the direct exchange (every direct message
+    crosses the network by construction)."""
+    out = nap_stats(plan.nap, bytes_per_val)
+    out["direct"] = PhaseStats.of(plan.direct.sends, bytes_per_val)
+    return out

@@ -171,11 +171,20 @@ class StandardPlan:
 
 def build_standard_plan(indptr: np.ndarray, indices: np.ndarray,
                         part: RowPartition, topo: Topology,
-                        col_part: Optional[RowPartition] = None) -> StandardPlan:
+                        col_part: Optional[RowPartition] = None,
+                        pairs: Optional[Tuple[np.ndarray, np.ndarray,
+                                              np.ndarray]] = None) -> StandardPlan:
     """``part`` is the row partition; ``col_part`` the column/x partition
-    (defaults to ``part`` — the square single-partition case)."""
+    (defaults to ``part`` — the square single-partition case).
+
+    ``pairs`` optionally supplies precomputed deduped off-process triples
+    ``(t, r, j)`` (row owner, col owner, col) in place of extracting them
+    from the matrix structure — the multi-step strategy splits one
+    extraction between two sub-plans.  The default path is unchanged.
+    """
     cpart = part if col_part is None else col_part
-    t, r, j = _offproc_pairs(indptr, indices, part, cpart)
+    t, r, j = pairs if pairs is not None else \
+        _offproc_pairs(indptr, indices, part, cpart)
     sends: List[List[Message]] = [[] for _ in range(topo.n_procs)]
     recvs: List[List[Message]] = [[] for _ in range(topo.n_procs)]
     # group by sender r then receiver t
@@ -301,7 +310,9 @@ def _chunk(arr: np.ndarray, k: int, c: int) -> np.ndarray:
 
 def build_nap_plan(indptr: np.ndarray, indices: np.ndarray, part: RowPartition,
                    topo: Topology, pairing: str = "balanced",
-                   col_part: Optional[RowPartition] = None) -> NAPPlan:
+                   col_part: Optional[RowPartition] = None,
+                   pairs: Optional[Tuple[np.ndarray, np.ndarray,
+                                         np.ndarray]] = None) -> NAPPlan:
     """Build the full node-aware plan.
 
     ``part`` is the row partition, ``col_part`` the column/x partition
@@ -313,12 +324,18 @@ def build_nap_plan(indptr: np.ndarray, indices: np.ndarray, part: RowPartition,
       * ``"aligned"``  — TPU adaptation: receiver local id q equals sender
         local id p, so the inter-node phase is an all-to-all over the node
         mesh axis (documented in DESIGN.md §2).
+
+    ``pairs`` optionally supplies precomputed deduped off-process triples
+    ``(t, r, j)`` instead of extracting them from the structure — the
+    multi-step strategy routes only its low-duplication share elsewhere
+    and hands the rest here.  The default path is unchanged.
     """
     if pairing not in ("balanced", "aligned"):
         raise ValueError(pairing)
     cpart = part if col_part is None else col_part
     ppn, n_nodes, n_procs = topo.ppn, topo.n_nodes, topo.n_procs
-    t, r, j = _offproc_pairs(indptr, indices, part, cpart)
+    t, r, j = pairs if pairs is not None else \
+        _offproc_pairs(indptr, indices, part, cpart)
     tn = topo.node_of_array(t)  # receiver node m
     rn = topo.node_of_array(r)  # sender node n
     off_node = tn != rn

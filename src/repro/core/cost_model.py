@@ -155,10 +155,90 @@ def nap_cost(plan: NAPPlan, machine: MachineParams,
     return out
 
 
+def multistep_cost(plan, machine: MachineParams,
+                   bytes_per_val: int = 8) -> Dict[str, float]:
+    """Cost of a :class:`repro.comm.multistep.MultistepPlan`: the NAP
+    sub-plan's phase chain plus the direct exchange, which shares the
+    network with (and so serialises against) the aggregated inter
+    phase; the fully-local exchange still overlaps both."""
+    out = nap_cost(plan.nap, machine, bytes_per_val)
+    direct = standard_cost(plan.direct, machine, bytes_per_val)
+    # every direct message crosses nodes, and the shared network
+    # serialises it with the aggregated inter phase
+    out["direct"] = direct["inter"]
+    out["inter"] = out["inter"] + direct["inter"]
+    out["total"] = (out["intra_init"] + max(out["inter"], out["intra_full"])
+                    + out["intra_final"])
+    return out
+
+
 def compute_time(nnz: int, flop_rate: float = 2.0e9) -> float:
     """Local SpMV compute estimate: 2 flops per nonzero at an effective rate
     (memory-bound; ~2 GF/s/core is representative of Interlagos SpMV)."""
     return 2.0 * nnz / flop_rate
+
+
+# ---------------------------------------------------------------------------
+# Postal comm term for the comm-strategy autotuner (repro.comm)
+# ---------------------------------------------------------------------------
+#
+# The models above cost individual MPI-style messages at their EFFECTIVE
+# size.  The SPMD lowerings ship PADDED slots (every message in an
+# all_to_all stretches to the phase's max message), so the comm-strategy
+# chooser needs an alpha-beta term over the slot-granular padded bytes
+# that ``repro.comm.cost.planned_traffic`` reports — effective bytes say
+# what must move, padded bytes say what the program actually injects.
+
+@dataclasses.dataclass(frozen=True)
+class PostalParams:
+    """Flat two-level postal model: per-message start-up alpha plus
+    padded bytes at rate beta, separately for network (inter-node) and
+    intra-node hops.  TPU v5e-ish defaults (DCI vs ICI)."""
+
+    name: str = "tpu_v5e_postal"
+    alpha_inter: float = 1.0e-5
+    beta_inter: float = 6.25e9
+    alpha_intra: float = 1.0e-6
+    beta_intra: float = 5.0e10
+
+    def signature(self) -> tuple:
+        return dataclasses.astuple(self)
+
+
+TPU_V5E_POSTAL = PostalParams()
+
+
+def postal_phase_time(n_msgs: int, nbytes: float, inter: bool,
+                      params: PostalParams = TPU_V5E_POSTAL) -> float:
+    """alpha-beta time for one exchange phase at one rank: ``n_msgs``
+    start-ups plus ``nbytes`` (padded) at the level's rate."""
+    if n_msgs == 0:
+        return 0.0
+    alpha, beta = (params.alpha_inter, params.beta_inter) if inter \
+        else (params.alpha_intra, params.beta_intra)
+    return n_msgs * alpha + nbytes / beta
+
+
+def postal_comm_time(traffic: Dict, params: PostalParams = TPU_V5E_POSTAL
+                     ) -> Dict[str, float]:
+    """Modeled seconds for one exchange schedule.
+
+    ``traffic`` is a :func:`repro.comm.cost.planned_traffic` payload.
+    Phases run sequentially (the lowerings are bulk-synchronous); each
+    phase is charged at its bottleneck rank using the slot-granular
+    padded bytes plus the integrity side-channel when armed.
+    """
+    out: Dict[str, float] = {}
+    total = 0.0
+    for name, ph in traffic["phases"].items():
+        t = postal_phase_time(
+            ph["max_rank_msgs"],
+            ph["max_rank_padded_bytes"] + ph["checksum_bytes"],
+            ph["inter"], params)
+        out[name] = t
+        total += t
+    out["total"] = total
+    return out
 
 
 # ---------------------------------------------------------------------------

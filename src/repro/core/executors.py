@@ -19,13 +19,18 @@ direction consumes a ``col_part``-owned operand and yields a
 
 Backends registered here:
 
-* ``("shardmap", "nap" | "standard")`` — the jitted SPMD executors of
-  :mod:`repro.core.spmv_jax`, sharing ONE packed-x path
+* ``("shardmap", "nap" | "standard" | "multistep")`` — the jitted SPMD
+  executors of :mod:`repro.core.spmv_jax`, sharing ONE packed-x path
   (:func:`pack_vector` / :func:`unpack_vector`) for forward and
   transpose, with lazy per-direction compilation (the transpose program
   is only built when ``op.T`` is first applied).
-* ``("simulate", "nap" | "standard")`` — the exact numpy message-passing
-  simulators (float64 correctness oracles).
+* ``("simulate", "nap" | "standard" | "multistep")`` — the exact numpy
+  message-passing simulators (float64 correctness oracles).
+
+The comm-strategy subsystem (:mod:`repro.comm`) treats the method as a
+pluggable exchange strategy: ``repro.api.operator(comm=...)`` maps a
+strategy name onto the method here, and ``comm="auto"`` resolves one per
+operator (and per direction) from the modeled injected traffic.
 
 Future backends — a true-TPU Mosaic lowering, the collective-permute
 overlap executor of the roadmap's open item (d) — plug in with
@@ -43,7 +48,8 @@ import numpy as np
 from repro.core.comm_graph import (build_nap_plan, build_standard_plan,
                                    nap_stats, standard_stats)
 from repro.core.cost_model import (LocalComputeParams, MachineParams,
-                                   TPU_V5E_LOCAL, nap_cost, standard_cost)
+                                   TPU_V5E_LOCAL, multistep_cost, nap_cost,
+                                   standard_cost)
 from repro.core.integrity import (IntegrityError, IntegrityState, MessageFault,
                                   SimWire)
 from repro.core.partition import RowPartition
@@ -71,6 +77,9 @@ class OperatorSpec:
     cache: bool = True
     tuner: LocalComputeParams = TPU_V5E_LOCAL
     integrity: str = "off"          # "off" | "detect" | "recover"
+    # duplication threshold for method="multistep" ("auto" or int >= 1);
+    # ignored by the single-strategy methods
+    threshold: object = "auto"
 
 
 # ---------------------------------------------------------------------------
@@ -299,11 +308,55 @@ class NapShardmapExecutor(_ShardmapExecutor):
         from repro.core.spmv_jax import padded_traffic
         out = {f"messages_{k}": v for k, v in
                nap_stats(self.compiled.plan).items()}
-        out.update(padded_traffic(self.compiled))
+        out.update(padded_traffic(self.compiled,
+                                  integrity=self.spec.integrity))
         return out
 
     def cost(self, machine: MachineParams) -> Dict[str, float]:
         return nap_cost(self.compiled.plan, machine)
+
+
+@register_executor("shardmap", "multistep")
+class MultistepShardmapExecutor(_ShardmapExecutor):
+    """Multi-step plan on the SAME shard_map builders as the nap
+    executor — :func:`nap_forward_shardmap` /
+    :func:`nap_transpose_shardmap` add the fifth "direct" exchange when
+    the compiled plan carries ``comm="multistep"``."""
+
+    method = "multistep"
+
+    def _compile(self):
+        from repro.core.spmv_jax import compile_multistep
+        return compile_multistep(self.a, self.row_part, self.topo,
+                                 block_shape=self.spec.block_shape,
+                                 cache=self.spec.cache,
+                                 local_compute=self.spec.local_compute,
+                                 tuner=self.spec.tuner,
+                                 col_part=self.col_part,
+                                 threshold=self.spec.threshold)
+
+    def _build(self, direction: str):
+        from repro.core.spmv_jax import (nap_forward_shardmap,
+                                         nap_transpose_shardmap)
+        kw = dict(local_compute=self.spec.local_compute,
+                  nv_block=self.spec.nv_block, interpret=self.spec.interpret)
+        if self._integrity is not None:
+            kw.update(integrity=True, fault_fetch=self._integrity.fetch_spec)
+        if direction == "forward":
+            return nap_forward_shardmap(self.compiled, self.mesh, **kw)
+        return nap_transpose_shardmap(self.compiled, self.mesh, **kw)
+
+    def stats(self) -> Dict[str, object]:
+        from repro.comm.multistep import multistep_stats
+        from repro.core.spmv_jax import padded_traffic
+        out = {f"messages_{k}": v for k, v in
+               multistep_stats(self.compiled.ms_plan).items()}
+        out.update(padded_traffic(self.compiled,
+                                  integrity=self.spec.integrity))
+        return out
+
+    def cost(self, machine: MachineParams) -> Dict[str, float]:
+        return multistep_cost(self.compiled.ms_plan, machine)
 
 
 @register_executor("shardmap", "standard")
@@ -330,8 +383,12 @@ class StandardShardmapExecutor(_ShardmapExecutor):
         return standard_transpose_shardmap(self.compiled, self.mesh, **kw)
 
     def stats(self) -> Dict[str, object]:
-        return {f"messages_{k}": v for k, v in
-                standard_stats(self.compiled.plan).items()}
+        from repro.core.spmv_jax import padded_traffic
+        out = {f"messages_{k}": v for k, v in
+               standard_stats(self.compiled.plan).items()}
+        out.update(padded_traffic(self.compiled,
+                                  integrity=self.spec.integrity))
+        return out
 
     def cost(self, machine: MachineParams) -> Dict[str, float]:
         return standard_cost(self.compiled.plan, machine)
@@ -466,6 +523,35 @@ class NapSimulateExecutor(_SimulateExecutor):
 
     def cost(self, machine: MachineParams) -> Dict[str, float]:
         return nap_cost(self.plan, machine)
+
+
+@register_executor("simulate", "multistep")
+class MultistepSimulateExecutor(_SimulateExecutor):
+    method = "multistep"
+
+    def _build_plan(self):
+        from repro.comm.multistep import build_multistep_plan
+        return build_multistep_plan(self.a.indptr, self.a.indices,
+                                    self.row_part, self.topo,
+                                    pairing=self.spec.pairing,
+                                    col_part=self.col_part,
+                                    threshold=self.spec.threshold)
+
+    def _forward(self, v, wire=None):
+        from repro.comm.simulate import simulate_multistep_spmv
+        return simulate_multistep_spmv(self.a, v, self.plan, wire=wire)
+
+    def _transpose(self, u):
+        from repro.comm.simulate import simulate_multistep_spmv_transpose
+        return simulate_multistep_spmv_transpose(self.a, u, self.plan)
+
+    def stats(self) -> Dict[str, object]:
+        from repro.comm.multistep import multistep_stats
+        return {f"messages_{k}": v for k, v in
+                multistep_stats(self.plan).items()}
+
+    def cost(self, machine: MachineParams) -> Dict[str, float]:
+        return multistep_cost(self.plan, machine)
 
 
 @register_executor("simulate", "standard")

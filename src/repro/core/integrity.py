@@ -65,7 +65,7 @@ __all__ = [
     "FAULT_KINDS", "KIND_CODE", "MessageFault", "Mismatch", "IntegrityError",
     "checksum_np", "corrupt_payload_np", "message_phases", "phase_index",
     "build_fault_spec", "scope_for", "verify_wire", "verify_abft",
-    "IntegrityState", "SimWire",
+    "IntegrityState", "SimWire", "MULTISTEP_MESSAGE_PHASES",
 ]
 
 _MASK32 = 0xFFFFFFFF
@@ -80,11 +80,18 @@ KIND_CODE: Dict[str, int] = {k: i + 1 for i, k in enumerate(FAULT_KINDS)}
 #: order the instrumented programs stack their checksum rows.
 NAP_MESSAGE_PHASES: Tuple[str, ...] = ("full", "init", "inter", "final")
 STD_MESSAGE_PHASES: Tuple[str, ...] = ("pair",)
+#: Multi-step NAP = the four NAP phases plus the "direct" exchange that
+#: carries the low-duplication columns owner -> requester in one hop.
+MULTISTEP_MESSAGE_PHASES: Tuple[str, ...] = NAP_MESSAGE_PHASES + ("direct",)
 COMPUTE_PHASE = "compute"
 
 
 def message_phases(method: str) -> Tuple[str, ...]:
-    return NAP_MESSAGE_PHASES if method == "nap" else STD_MESSAGE_PHASES
+    if method == "nap":
+        return NAP_MESSAGE_PHASES
+    if method == "multistep":
+        return MULTISTEP_MESSAGE_PHASES
+    return STD_MESSAGE_PHASES
 
 
 def phase_index(method: str) -> Dict[str, int]:
@@ -182,7 +189,8 @@ class MessageFault:
     direction: str = "forward"   # "forward" | "transpose" | "any"
 
     def __post_init__(self) -> None:
-        known = NAP_MESSAGE_PHASES + STD_MESSAGE_PHASES + (COMPUTE_PHASE,)
+        known = MULTISTEP_MESSAGE_PHASES + STD_MESSAGE_PHASES \
+            + (COMPUTE_PHASE,)
         if self.phase not in known:
             raise ValueError(f"unknown phase {self.phase!r}; one of {known}")
         if self.phase != COMPUTE_PHASE and self.kind not in FAULT_KINDS:
@@ -427,7 +435,7 @@ class IntegrityState:
         intra-node phases stay on the receiver's node)."""
         if m.check == "wire" and m.phase == "inter":
             return f"node{m.slot}"
-        if m.check == "wire" and m.phase == "pair":
+        if m.check == "wire" and m.phase in ("pair", "direct"):
             return f"node{m.slot // self.topo.ppn}"
         return f"node{m.node}"
 
@@ -483,7 +491,7 @@ class SimWire:
                 continue
             if phase == "inter":
                 ok = self.topo.node_of(dst) == f.slot
-            elif phase == "pair":
+            elif phase in ("pair", "direct"):
                 ok = dst == f.slot
             else:
                 ok = self.topo.local_of(dst) == f.slot
@@ -508,7 +516,7 @@ class SimWire:
             return
         ppn = self.topo.ppn
         slot = (self.topo.node_of(msg.src) if phase == "inter"
-                else msg.src if phase == "pair"
+                else msg.src if phase in ("pair", "direct")
                 else self.topo.local_of(msg.src))
         self.mismatches.append(Mismatch(
             check="wire", phase=phase,

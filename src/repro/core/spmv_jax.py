@@ -99,7 +99,8 @@ from repro.compat import shard_map
 from repro.core.comm_graph import (Message, NAPPlan, StandardPlan,
                                    build_nap_plan, build_standard_plan,
                                    lookup_slots)
-from repro.core.integrity import (NAP_MESSAGE_PHASES, STD_MESSAGE_PHASES,
+from repro.core.integrity import (MULTISTEP_MESSAGE_PHASES,
+                                  NAP_MESSAGE_PHASES, STD_MESSAGE_PHASES,
                                   phase_index)
 from repro.core.cost_model import (LOCAL_FORMATS, LocalComputeParams,
                                    TPU_V5E_LOCAL, choose_local_format,
@@ -209,6 +210,14 @@ class CompiledNAP:
     requested_local_compute: str = "auto"
     ell_kmax: int = 0
     ell_t_kmax: int = 0
+    # exchange strategy this plan lowers: "nap" (single aggregated
+    # inter-node all_to_all) or "multistep" (adds the fifth "direct"
+    # exchange for low-duplication columns; pads["direct"] + the
+    # direct_send array exist, and ms_plan holds the full
+    # repro.comm.multistep.MultistepPlan — ``plan`` stays the NAP
+    # sub-plan so every nap-shaped consumer keeps working).
+    comm: str = "nap"
+    ms_plan: Optional[object] = None
     # per-name device-array memo (see _memo_device_arrays)
     _dev_cache: Dict[str, jnp.ndarray] = dataclasses.field(
         default_factory=dict, repr=False, compare=False)
@@ -802,6 +811,181 @@ def compile_nap(a: CSR, part: RowPartition, topo: Topology,
     return compiled
 
 
+def compile_multistep(a: CSR, part: RowPartition, topo: Topology,
+                      plan=None, block_shape: Tuple[int, int] = (8, 128),
+                      cache: bool = True, local_compute: str = "auto",
+                      tuner: LocalComputeParams = TPU_V5E_LOCAL,
+                      col_part: Optional[RowPartition] = None,
+                      threshold="auto") -> CompiledNAP:
+    """Compile the multi-step plan (``repro.comm.multistep``) to static
+    shard_map arrays.
+
+    Produces a :class:`CompiledNAP` with ``comm="multistep"``: the four
+    NAP arrays are built from the high-duplication sub-plan exactly as
+    :func:`compile_nap` builds them, plus a ``direct_send``
+    ``[n_procs, direct_pad]`` gather for the fifth (flat, low-duplication)
+    exchange, and ``boff_gather`` resolves off-node columns against the
+    concatenation of all THREE recv buffers
+    ``[inter | final | direct]``.  ``plan`` optionally supplies a
+    prebuilt :class:`repro.comm.multistep.MultistepPlan`.
+    """
+    from repro.comm.multistep import build_multistep_plan, resolve_threshold
+    if local_compute not in ("auto",) + LOCAL_FORMATS:
+        raise ValueError(local_compute)
+    cpart = part if col_part is None else col_part
+    if part.n_rows != a.shape[0] or cpart.n_rows != a.shape[1]:
+        raise ValueError(
+            f"partition/matrix mismatch: a is {a.shape}, row partition has "
+            f"{part.n_rows} rows, column partition {cpart.n_rows}")
+    thr = resolve_threshold(threshold, topo)
+    key = None
+    if plan is None and cache:
+        # the threshold changes the split, so it is part of the plan family
+        key = _cache_key(a, part, topo, block_shape, local_compute, tuner,
+                         f"multistep:{thr}", col_part=col_part)
+        hit = _cache_get(key)
+        if hit is not None:
+            return hit
+    if plan is None:
+        plan = build_multistep_plan(a.indptr, a.indices, part, topo,
+                                    pairing="aligned", col_part=col_part,
+                                    threshold=thr)
+    nap_plan, direct = plan.nap, plan.direct
+    n_procs, ppn, n_nodes = topo.n_procs, topo.ppn, topo.n_nodes
+    blocks = split_all_blocks(a, part, topo, col_part=cpart)
+    local_index = cpart.local_index()
+    bn = block_shape[1]
+    if bn % 8 != 0:
+        raise ValueError(f"bn must be a multiple of the 8-wide sublane "
+                         f"tile, got {bn}")
+    rows_pad = _ceil_to(max(1, int(part.counts().max())), bn)
+    cols_pad = _ceil_to(max(1, int(cpart.counts().max())), bn)
+    bnode_pad = _ceil_to(max(1, max(b.on_node_cols.size for b in blocks)), bn)
+    boff_pad = _ceil_to(max(1, max(b.off_node_cols.size for b in blocks)), bn)
+
+    def msg_pad(phase: List[List[Message]]) -> int:
+        sizes = [m.size for msgs in phase for m in msgs]
+        return max(1, max(sizes, default=1))
+
+    full_pad = msg_pad(nap_plan.local_full_sends)
+    init_pad = msg_pad(nap_plan.local_init_sends)
+    inter_pad = msg_pad(nap_plan.inter_sends)
+    final_pad = msg_pad(nap_plan.local_final_sends)
+    direct_pad = msg_pad(direct.sends)
+    nnz_pads = {
+        "on_proc": max(1, max(b.on_proc.nnz for b in blocks)),
+        "on_node": max(1, max(b.on_node.nnz for b in blocks)),
+        "off_node": max(1, max(b.off_node.nnz for b in blocks)),
+    }
+
+    arrays: Dict[str, np.ndarray] = {}
+
+    def stack_int(name: str, per_rank: List[np.ndarray], shape: Tuple[int, ...]) -> None:
+        out = np.zeros((n_procs,) + shape, dtype=np.int32)
+        for r, arr in enumerate(per_rank):
+            out[r] = arr
+        arrays[name] = out
+
+    full_send, init_send, final_send, direct_send = [], [], [], []
+    inter_gather, bnode_gather, boff_gather = [], [], []
+    coo = {k: {"rows": [], "cols": [], "vals": []} for k in nnz_pads}
+
+    for r in range(n_procs):
+        blk = blocks[r]
+
+        fs = np.zeros((ppn, full_pad), dtype=np.int32)
+        for m in nap_plan.local_full_sends[r]:
+            fs[topo.local_of(m.dst), : m.size] = local_index[m.idx]
+        full_send.append(fs)
+
+        isnd = np.zeros((ppn, init_pad), dtype=np.int32)
+        for m in nap_plan.local_init_sends[r]:
+            isnd[topo.local_of(m.dst), : m.size] = local_index[m.idx]
+        init_send.append(isnd)
+
+        init_map = nap_plan.recv_slot_map(r, "init", init_pad)
+        ig = np.zeros((n_nodes, inter_pad), dtype=np.int32)
+        for m in nap_plan.inter_sends[r]:
+            owners = cpart.owner[m.idx]
+            own = owners == r
+            pos = np.empty(m.size, dtype=np.int64)
+            pos[own] = local_index[m.idx[own]]
+            if not own.all():
+                pos[~own] = cols_pad + lookup_slots(init_map, m.idx[~own])
+            ig[topo.node_of(m.dst), : m.size] = pos
+        inter_gather.append(ig)
+
+        inter_map = nap_plan.recv_slot_map(r, "inter", inter_pad)
+        fsnd = np.zeros((ppn, final_pad), dtype=np.int32)
+        for m in nap_plan.local_final_sends[r]:
+            fsnd[topo.local_of(m.dst), : m.size] = lookup_slots(inter_map, m.idx)
+        final_send.append(fsnd)
+
+        # -- direct sends: [n_procs, direct_pad] source local-row positions,
+        #    one slot per destination rank in the flat fifth exchange.
+        ds = np.zeros((n_procs, direct_pad), dtype=np.int32)
+        for m in direct.sends[r]:
+            ds[m.dst, : m.size] = local_index[m.idx]
+        direct_send.append(ds)
+
+        full_map = nap_plan.recv_slot_map(r, "full", full_pad)
+        bg = np.zeros((bnode_pad,), dtype=np.int32)
+        bg[: blk.on_node_cols.size] = lookup_slots(full_map, blk.on_node_cols)
+        bnode_gather.append(bg)
+
+        # -- off-node gather over concat(inter | final | direct) recvs -------
+        final_map = nap_plan.recv_slot_map(r, "final", final_pad)
+        direct_map = direct.recv_slot_map(r, direct_pad)
+        comb_idx = np.concatenate([inter_map[0], final_map[0], direct_map[0]])
+        comb_pos = np.concatenate([
+            inter_map[1],
+            n_nodes * inter_pad + final_map[1],
+            n_nodes * inter_pad + ppn * final_pad + direct_map[1]])
+        order = np.argsort(comb_idx, kind="stable")
+        og = np.zeros((boff_pad,), dtype=np.int32)
+        og[: blk.off_node_cols.size] = lookup_slots(
+            (comb_idx[order], comb_pos[order]), blk.off_node_cols)
+        boff_gather.append(og)
+
+        for key_c, block in (("on_proc", blk.on_proc), ("on_node", blk.on_node),
+                             ("off_node", blk.off_node)):
+            rows_i, cols_i, vals_i = block.to_coo()
+            coo[key_c]["rows"].append(rows_i.astype(np.int32))
+            coo[key_c]["cols"].append(cols_i.astype(np.int32))
+            coo[key_c]["vals"].append(vals_i)
+
+    stack_int("full_send", full_send, (ppn, full_pad))
+    stack_int("init_send", init_send, (ppn, init_pad))
+    stack_int("final_send", final_send, (ppn, final_pad))
+    stack_int("direct_send", direct_send, (n_procs, direct_pad))
+    stack_int("inter_gather", inter_gather, (n_nodes, inter_pad))
+    stack_int("bnode_gather", bnode_gather, (bnode_pad,))
+    stack_int("boff_gather", boff_gather, (boff_pad,))
+    for key_c in coo:
+        arrays[f"{key_c}_rows"] = _pad_to(coo[key_c]["rows"], nnz_pads[key_c]).astype(np.int32)
+        arrays[f"{key_c}_cols"] = _pad_to(coo[key_c]["cols"], nnz_pads[key_c]).astype(np.int32)
+        arrays[f"{key_c}_vals"] = _pad_to(
+            [v.astype(np.float32) for v in coo[key_c]["vals"]], nnz_pads[key_c], fill=0.0)
+
+    pads = dict(full=full_pad, init=init_pad, inter=inter_pad, final=final_pad,
+                direct=direct_pad, bnode=bnode_pad, boff=boff_pad,
+                **{f"nnz_{k}": v for k, v in nnz_pads.items()})
+    autotune = _autotune_stats(blocks, rows_pad, cols_pad, bnode_pad, boff_pad,
+                               sum(nnz_pads.values()), tuple(block_shape),
+                               tuner)
+    compiled = CompiledNAP(topo=topo, part=part, col_part=cpart,
+                           rows_pad=rows_pad, cols_pad=cols_pad, pads=pads,
+                           arrays=arrays, plan=nap_plan,
+                           block_shape=tuple(block_shape),
+                           local_blocks=blocks, autotune=autotune,
+                           requested_local_compute=local_compute,
+                           comm="multistep", ms_plan=plan,
+                           a_ref=a, _cache_token=key)
+    if key is not None:
+        _cache_put(key, compiled)
+    return compiled
+
+
 # ---------------------------------------------------------------------------
 # Vector packing
 # ---------------------------------------------------------------------------
@@ -1068,8 +1252,13 @@ def nap_forward_shardmap(compiled: CompiledNAP, mesh: Mesh,
     rows_pad = compiled.rows_pad
     bn = compiled.block_shape[1]
     cols_pad, bnode_pad = compiled.cols_pad, compiled.pads["bnode"]
-    ph = phase_index("nap")
-    max_slots = max(topo.ppn, topo.n_nodes)
+    # multistep plans add the fifth "direct" exchange; with comm="nap"
+    # every ms branch below is dead at trace time and the emitted program
+    # is bit-for-bit the single-step one.
+    ms = compiled.comm == "multistep"
+    ph = phase_index("multistep" if ms else "nap")
+    msg_phases = MULTISTEP_MESSAGE_PHASES if ms else NAP_MESSAGE_PHASES
+    max_slots = topo.n_procs if ms else max(topo.ppn, topo.n_nodes)
     if integrity:
         compiled.ensure_abft()
 
@@ -1081,7 +1270,8 @@ def nap_forward_shardmap(compiled: CompiledNAP, mesh: Mesh,
         v_loc = squeeze(v_loc)                              # [rows_pad, nv]
         (full_send, init_send, final_send, inter_gather, bnode_gather,
          boff_gather) = map(squeeze, args[:6])
-        tail = tuple(map(squeeze, args[6:]))
+        direct_send = squeeze(args[6]) if ms else None
+        tail = tuple(map(squeeze, args[7 if ms else 6:]))
         if integrity:
             abft_col, abft_abs = tail[-2:]
             tail = tail[:-2]
@@ -1123,7 +1313,15 @@ def nap_forward_shardmap(compiled: CompiledNAP, mesh: Mesh,
 
         # Buffers of Algorithm 3's three local_spmv calls.
         bnode = full_recv.reshape(-1, nv)[bnode_gather]   # [bnode_pad, nv]
-        boff = jnp.concatenate([inter_flat, final_recv.reshape(-1, nv)])[boff_gather]
+        boff_parts = [inter_flat, final_recv.reshape(-1, nv)]
+        if ms:
+            # Phase E (multistep only): the low-duplication columns ship
+            # owner -> requester in one flat exchange, bypassing the
+            # aggregation; boff_gather resolves against all three buffers.
+            direct_out = v_loc[direct_send]           # [n_procs, direct_pad, nv]
+            direct_recv = exchange(direct_out, "direct", ("node", "proc"))
+            boff_parts.append(direct_recv.reshape(-1, nv))
+        boff = jnp.concatenate(boff_parts)[boff_gather]
 
         if fmt == "bsr":
             fused_cols, fused_blocks = tail
@@ -1173,13 +1371,15 @@ def nap_forward_shardmap(compiled: CompiledNAP, mesh: Mesh,
              + abft_abs[cols_pad: cols_pad + bnode_pad] @ jnp.abs(bnode)
              + abft_abs[cols_pad + bnode_pad:] @ jnp.abs(boff))
         abft = jnp.stack([jnp.sum(w, axis=0), d, s])
-        chk = _stack_chk([chks[p] for p in NAP_MESSAGE_PHASES], max_slots)
+        chk = _stack_chk([chks[p] for p in msg_phases], max_slots)
         return (w.reshape(1, 1, rows_pad, -1),
                 chk.reshape((1, 1) + chk.shape),
                 abft.reshape((1, 1) + abft.shape))
 
     names = ["full_send", "init_send", "final_send", "inter_gather",
              "bnode_gather", "boff_gather"]
+    if ms:
+        names.insert(6, "direct_send")
     if fmt == "bsr":
         names += ["fused_cols", "fused_blocks"]
     elif fmt == "ell":
@@ -1235,11 +1435,17 @@ def nap_transpose_shardmap(compiled: CompiledNAP, mesh: Mesh,
     rows_pad, cols_pad = compiled.rows_pad, compiled.cols_pad
     pads = compiled.pads
     nn, ppn = topo.n_nodes, topo.ppn
+    n_procs = topo.n_procs
     full_pad, init_pad = pads["full"], pads["init"]
     inter_pad, final_pad = pads["inter"], pads["final"]
     bnode_pad, boff_pad = pads["bnode"], pads["boff"]
-    ph = phase_index("nap")
-    max_slots = max(ppn, nn)
+    # see nap_forward_shardmap: with comm="nap" the ms branches are dead
+    # at trace time and the program is bit-for-bit the single-step one.
+    ms = compiled.comm == "multistep"
+    direct_pad = pads.get("direct", 0)
+    ph = phase_index("multistep" if ms else "nap")
+    msg_phases = MULTISTEP_MESSAGE_PHASES if ms else NAP_MESSAGE_PHASES
+    max_slots = n_procs if ms else max(ppn, nn)
     if integrity:
         compiled.ensure_abft()
 
@@ -1251,7 +1457,8 @@ def nap_transpose_shardmap(compiled: CompiledNAP, mesh: Mesh,
         u_loc = squeeze(u_loc)                              # [rows_pad, nv]
         (full_send, init_send, final_send, inter_gather, bnode_gather,
          boff_gather) = map(squeeze, args[:6])
-        tail = tuple(map(squeeze, args[6:]))
+        direct_send = squeeze(args[6]) if ms else None
+        tail = tuple(map(squeeze, args[7 if ms else 6:]))
         if integrity:
             abft_row, abft_abs = tail[-2:]
             tail = tail[:-2]
@@ -1308,11 +1515,24 @@ def nap_transpose_shardmap(compiled: CompiledNAP, mesh: Mesh,
             c_node = packed_c[cols_pad: cols_pad + bnode_pad]
             c_off = packed_c[cols_pad + bnode_pad:]
 
-        # -- reverse of boff = concat(inter_flat, final_recv_flat)[boff_gather]
-        comb = segment_sum(c_off, boff_gather,
-                           num_segments=nn * inter_pad + ppn * final_pad)
+        # -- reverse of boff = concat(inter | final [| direct])[boff_gather]
+        comb = segment_sum(
+            c_off, boff_gather,
+            num_segments=(nn * inter_pad + ppn * final_pad
+                          + (n_procs * direct_pad if ms else 0)))
         inter_c = comb[: nn * inter_pad]
-        final_recv_c = comb[nn * inter_pad:].reshape(ppn, final_pad, nv)
+        final_recv_c = comb[nn * inter_pad: nn * inter_pad + ppn * final_pad
+                            ].reshape(ppn, final_pad, nv)
+        z_direct = None
+        if ms:
+            # -- reverse phase E: direct contributions ride the adjoint flat
+            #    all_to_all straight back and scatter into the owners' rows.
+            direct_recv_c = comb[nn * inter_pad + ppn * final_pad:
+                                 ].reshape(n_procs, direct_pad, nv)
+            direct_out_c = exchange(direct_recv_c, "direct", ("node", "proc"))
+            z_direct = segment_sum(direct_out_c.reshape(-1, nv),
+                                   direct_send.reshape(-1),
+                                   num_segments=cols_pad)
 
         # -- reverse phase D: adjoint all_to_all + scatter over final_send
         final_out_c = exchange(final_recv_c, "final", "proc")
@@ -1342,15 +1562,19 @@ def nap_transpose_shardmap(compiled: CompiledNAP, mesh: Mesh,
                               "full", "proc")
         z = z + segment_sum(full_out_c.reshape(-1, nv),
                             full_send.reshape(-1), num_segments=cols_pad)
+        if ms:
+            z = z + z_direct
         if not integrity:
             return z.reshape(1, 1, cols_pad, -1)
-        chk = _stack_chk([chks[p] for p in NAP_MESSAGE_PHASES], max_slots)
+        chk = _stack_chk([chks[p] for p in msg_phases], max_slots)
         return (z.reshape(1, 1, cols_pad, -1),
                 chk.reshape((1, 1) + chk.shape),
                 abft.reshape((1, 1) + abft.shape))
 
     names = ["full_send", "init_send", "final_send", "inter_gather",
              "bnode_gather", "boff_gather"]
+    if ms:
+        names.insert(6, "direct_send")
     if fmt == "ell":
         names += ["ell_t_cols", "ell_t_vals"]
     else:
@@ -1825,26 +2049,88 @@ def standard_transpose_shardmap(compiled: CompiledStandard, mesh: Mesh,
 # Traffic accounting
 # ---------------------------------------------------------------------------
 
-def padded_traffic(compiled: CompiledNAP) -> Dict[str, int]:
+def _phase_lists(compiled) -> Dict[str, Tuple[int, List, List]]:
+    """Per message phase: (n_slots per rank, send lists, recv lists).
+
+    Dispatches on the compiled family: NAP phases for ``comm="nap"``,
+    NAP + "direct" for ``comm="multistep"``, the single "pair" exchange
+    for :class:`CompiledStandard`.  Phases whose plan was dropped (plans
+    are optional on a compiled object) are omitted.
+    """
+    topo = compiled.topo
+    if isinstance(compiled, CompiledStandard):
+        if compiled.plan is None:
+            return {}
+        return {"pair": (topo.n_procs, compiled.plan.sends,
+                         compiled.plan.recvs)}
+    plan = compiled.plan
+    if plan is None:
+        return {}
+    out = {
+        "full": (topo.ppn, plan.local_full_sends, plan.local_full_recvs),
+        "init": (topo.ppn, plan.local_init_sends, plan.local_init_recvs),
+        "inter": (topo.n_nodes, plan.inter_sends, plan.inter_recvs),
+        "final": (topo.ppn, plan.local_final_sends, plan.local_final_recvs),
+    }
+    if getattr(compiled, "comm", "nap") == "multistep" \
+            and compiled.ms_plan is not None:
+        direct = compiled.ms_plan.direct
+        out["direct"] = (topo.n_procs, direct.sends, direct.recvs)
+    return out
+
+
+def padded_traffic(compiled, integrity: str = "off") -> Dict[str, object]:
     """Padded (SPMD-actual) vs effective bytes per phase, float32 payloads.
 
     Padded bytes are what the static all-to-alls actually move (every rank
     sends its full padded buffer every time); effective bytes are the plan's
     true message payloads — the gap is the padding the paper's T/U balancing
     minimises.  Effective ≤ padded always.
+
+    Works for every compiled family: NAP (full/init/inter/final),
+    multistep (+ the "direct" exchange), and standard (the single "pair"
+    exchange).  Two per-direction extras ride along:
+
+    * ``{phase}_max_rank_effective`` — the bottleneck rank's true payload
+      for the FORWARD program (sender side), with the transpose twins
+      (computed from the recv lists, since every message reverses) under
+      ``out["transpose"]``.  Phase totals are direction-independent.
+    * with ``integrity != "off"``, ``{phase}_checksum`` counts the
+      side-channel all_to_all the instrumented program runs per phase
+      (one u32 per slot per rank), and ``checksum_total`` sums them —
+      the wires the integrity mode adds are not free.
     """
-    topo, pads, plan = compiled.topo, compiled.pads, compiled.plan
+    topo = compiled.topo
+    pads = getattr(compiled, "pads", None)
     n = topo.n_procs
-    out = {
-        "inter_padded": n * topo.n_nodes * pads["inter"] * 4,
-        "full_padded": n * topo.ppn * pads["full"] * 4,
-        "init_padded": n * topo.ppn * pads["init"] * 4,
-        "final_padded": n * topo.ppn * pads["final"] * 4,
-    }
-    if plan is not None:
-        phases = {"inter": plan.inter_sends, "full": plan.local_full_sends,
-                  "init": plan.local_init_sends, "final": plan.local_final_sends}
-        for name, sends in phases.items():
-            out[f"{name}_effective"] = 4 * sum(
-                m.size for msgs in sends for m in msgs)
+
+    def pad_of(phase: str) -> int:
+        if pads is not None:
+            return pads[phase]
+        return compiled.pair_pad  # CompiledStandard
+
+    out: Dict[str, object] = {}
+    transpose: Dict[str, int] = {}
+    checksum_total = 0
+    for name, (n_slots, sends, recvs) in _phase_lists(compiled).items():
+        pad = pad_of(name)
+        out[f"{name}_padded"] = n * n_slots * pad * 4
+        out[f"{name}_effective"] = 4 * sum(
+            m.size for msgs in sends for m in msgs)
+        out[f"{name}_max_rank_effective"] = 4 * max(
+            (sum(m.size for m in msgs) for msgs in sends), default=0)
+        transpose[f"{name}_padded"] = out[f"{name}_padded"]
+        transpose[f"{name}_effective"] = 4 * sum(
+            m.size for msgs in recvs for m in msgs)
+        transpose[f"{name}_max_rank_effective"] = 4 * max(
+            (sum(m.size for m in msgs) for msgs in recvs), default=0)
+        if integrity != "off":
+            chk = n * n_slots * 4
+            out[f"{name}_checksum"] = chk
+            transpose[f"{name}_checksum"] = chk
+            checksum_total += chk
+    if integrity != "off":
+        out["checksum_total"] = checksum_total
+        transpose["checksum_total"] = checksum_total
+    out["transpose"] = transpose
     return out

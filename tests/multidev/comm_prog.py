@@ -1,0 +1,192 @@
+"""Multi-device sweep of the comm-strategy subsystem (subprocess).
+
+On a forced 8-device host platform: every strategy's shard_map program
+(standard / nap / multistep) must match its own float64 message-passing
+simulator BIT-FOR-BIT on integer-valued data, forward and transpose;
+``comm="nap"`` must be bit-identical to the pre-existing nap operator
+(same compiled plan family, no direct phase); ``comm="auto"`` resolves
+to multistep on the skewed near-dense structure and still matches the
+oracle; rectangular operators with empty ranks ride the multistep
+program end-to-end.
+"""
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import numpy as np
+
+import repro.api as nap
+from repro.comm import (build_multistep_plan, simulate_multistep_spmv,
+                        simulate_multistep_spmv_transpose)
+from repro.core.comm_graph import build_nap_plan, build_standard_plan
+from repro.core.partition import contiguous_partition
+from repro.core.spmv import (simulate_nap_spmv, simulate_nap_spmv_transpose,
+                             simulate_standard_spmv,
+                             simulate_standard_spmv_transpose)
+from repro.core.topology import Topology
+from repro.sparse import random_fixed_nnz
+from repro.sparse.csr import CSR
+
+TOPO = Topology(2, 4)
+
+
+def intify(a: CSR, scale: int = 8) -> CSR:
+    a.data[:] = np.round(a.data * scale)
+    return a
+
+
+def skewed_matrix(topo, rows_per_rank=32, bulk=24, seed=0):
+    """Same shape as tests/test_comm.py: shared d=ppn background plus a
+    d=1 bulk in one node-pair direction only."""
+    n = rows_per_rank * topo.n_procs
+    part = contiguous_partition(n, topo.n_procs)
+    rng = np.random.default_rng(seed)
+    rows = [[] for _ in range(n)]
+    lo = lambda r: r * rows_per_rank
+    for r in range(topo.n_procs):
+        node, lr = topo.node_of(r), topo.local_of(r)
+        remote = [q for q in range(topo.n_procs) if topo.node_of(q) != node]
+        base = lo(r)
+        for i in range(rows_per_rank):
+            rows[base + i].append(base + i)
+        for src in remote:
+            for i in range(rows_per_rank):
+                rows[base + i].append(lo(src))
+        if node == 0:
+            src = remote[lr]
+            for k in range(bulk):
+                gi = base + int(rng.integers(rows_per_rank))
+                rows[gi].append(lo(src) + 1 + k)
+    indptr = [0]
+    indices = []
+    for rr in rows:
+        cols = sorted(set(rr))
+        indices.extend(cols)
+        indptr.append(len(indices))
+    data = rng.standard_normal(len(indices))
+    return intify(CSR(np.array(indptr, np.int64),
+                      np.array(indices, np.int64), data, (n, n))), part
+
+
+SIMULATORS = {
+    "standard": (build_standard_plan, simulate_standard_spmv,
+                 simulate_standard_spmv_transpose),
+    "nap": (build_nap_plan, simulate_nap_spmv, simulate_nap_spmv_transpose),
+    "multistep": (build_multistep_plan, simulate_multistep_spmv,
+                  simulate_multistep_spmv_transpose),
+}
+
+
+def check_strategies_bitwise(a: CSR, part, label: str) -> None:
+    """Each strategy's shardmap program == its float64 simulator, bitwise."""
+    rng = np.random.default_rng(42)
+    n, m = a.shape[1], a.shape[0]
+    v = np.round(rng.standard_normal(n) * 4)
+    u = np.round(rng.standard_normal(m) * 4)
+    for comm, (builder, sim_f, sim_t) in SIMULATORS.items():
+        kw = {"pairing": "aligned"} if comm == "nap" else {}
+        plan = builder(a.indptr, a.indices, part, TOPO, **kw)
+        want_f, want_t = sim_f(a, v, plan), sim_t(a, u, plan)
+        op = nap.operator(a, topo=TOPO, part=part, backend="shardmap",
+                          comm=comm)
+        got_f = np.asarray(op @ v, dtype=np.float64)
+        got_t = np.asarray(op.T @ u, dtype=np.float64)
+        np.testing.assert_array_equal(got_f, want_f,
+                                      err_msg=f"{label}:{comm}:forward")
+        np.testing.assert_array_equal(got_t, want_t,
+                                      err_msg=f"{label}:{comm}:transpose")
+    print(f"  {label}: all strategies bitwise vs simulators")
+
+
+def check_nap_bit_identical() -> None:
+    """comm="nap" runs the exact pre-existing program: same executor
+    class, same compiled-plan family (no direct phase), bitwise outputs."""
+    a, part = skewed_matrix(TOPO, seed=1)
+    rng = np.random.default_rng(7)
+    v = np.round(rng.standard_normal(a.shape[1]) * 4)
+    base = nap.operator(a, topo=TOPO, part=part, backend="shardmap")
+    pinned = nap.operator(a, topo=TOPO, part=part, backend="shardmap",
+                          comm="nap")
+    assert type(pinned.executor) is type(base.executor)
+    np.testing.assert_array_equal(np.asarray(base @ v),
+                                  np.asarray(pinned @ v))
+    np.testing.assert_array_equal(np.asarray(base.T @ v),
+                                  np.asarray(pinned.T @ v))
+    cb, cp = base.executor.compiled, pinned.executor.compiled
+    assert cb.comm == cp.comm == "nap"
+    assert "direct" not in cb.pads and "direct" not in cp.pads
+    assert cb.pads == cp.pads
+    print("  comm='nap' bit-identical to the pre-existing program")
+
+
+def check_auto_end_to_end() -> None:
+    a, part = skewed_matrix(TOPO, seed=2)
+    rng = np.random.default_rng(8)
+    v = np.round(rng.standard_normal(a.shape[1]) * 4)
+    op = nap.operator(a, topo=TOPO, part=part, backend="shardmap",
+                      comm="auto")
+    rep = op.autotune_report()
+    assert rep["comm_resolved"] == "multistep", rep["comm_resolved"]
+    cand = rep["comm"]["forward"]["candidates"]
+    assert cand["multistep"]["injected_inter_bytes"] < \
+        cand["nap"]["injected_inter_bytes"]
+    plan = build_multistep_plan(a.indptr, a.indices, part, TOPO)
+    np.testing.assert_array_equal(np.asarray(op @ v, dtype=np.float64),
+                                  simulate_multistep_spmv(a, v, plan))
+    np.testing.assert_array_equal(np.asarray(op.T @ v, dtype=np.float64),
+                                  simulate_multistep_spmv_transpose(a, v,
+                                                                    plan))
+    # multi-RHS through the same program
+    vv = np.round(rng.standard_normal((a.shape[1], 4)) * 4)
+    want = np.stack([simulate_multistep_spmv(a, vv[:, i], plan)
+                     for i in range(4)], axis=1)
+    np.testing.assert_array_equal(np.asarray(op @ vv, dtype=np.float64),
+                                  want)
+    print("  comm='auto' resolves to multistep and matches bitwise")
+
+
+def check_rectangular_empty_ranks() -> None:
+    """Wide operator whose column partition leaves ranks empty, run
+    through the multistep shardmap program."""
+    m, n = 96, 6
+    row_part = contiguous_partition(m, TOPO.n_procs)
+    col_part = contiguous_partition(n, TOPO.n_procs)
+    assert min(np.bincount(col_part.owner, minlength=TOPO.n_procs)) == 0
+    base = random_fixed_nnz(m, 3, seed=5)
+    indptr, idx2 = [0], []
+    for i in range(m):
+        cols = sorted(set((base.indices[base.indptr[i]:base.indptr[i + 1]]
+                           % n).tolist()))
+        idx2.extend(cols)
+        indptr.append(len(idx2))
+    rng = np.random.default_rng(6)
+    a = intify(CSR(np.array(indptr, np.int64), np.array(idx2, np.int64),
+                   rng.standard_normal(len(idx2)), (m, n)))
+    v = np.round(rng.standard_normal(n) * 4)
+    u = np.round(rng.standard_normal(m) * 4)
+    plan = build_multistep_plan(a.indptr, a.indices, row_part, TOPO,
+                                col_part=col_part)
+    op = nap.operator(a, topo=TOPO, row_part=row_part, col_part=col_part,
+                      backend="shardmap", comm="multistep")
+    np.testing.assert_array_equal(np.asarray(op @ v, dtype=np.float64),
+                                  simulate_multistep_spmv(a, v, plan))
+    np.testing.assert_array_equal(np.asarray(op.T @ u, dtype=np.float64),
+                                  simulate_multistep_spmv_transpose(a, u,
+                                                                    plan))
+    print("  rectangular + empty ranks bitwise vs simulator")
+
+
+def main() -> None:
+    a, part = skewed_matrix(TOPO, seed=0)
+    check_strategies_bitwise(a, part, "skewed")
+    u = intify(random_fixed_nnz(256, 9, seed=3))
+    check_strategies_bitwise(u, contiguous_partition(256, TOPO.n_procs),
+                             "uniform")
+    check_nap_bit_identical()
+    check_auto_end_to_end()
+    check_rectangular_empty_ranks()
+    print("ALL OK")
+
+
+if __name__ == "__main__":
+    main()
