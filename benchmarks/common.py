@@ -47,6 +47,39 @@ def spmv_times(a: CSR, part, topo: Topology, bytes_per_val: int = 8
     }
 
 
+def measured_sweep(config: Dict) -> Dict:
+    """Run :mod:`repro.mesh.scaling` in its own process and return the
+    sweep payload.
+
+    A subprocess is mandatory, not a convenience: the harness must force
+    the XLA host device count for the ladder's largest shape before jax
+    initialises, and the figure driver's jax is already up on one
+    device.  Any inherited forced count is dropped so the child sizes
+    its own platform.
+    """
+    import json
+    import os
+    import subprocess
+    import sys
+    import tempfile
+
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    with tempfile.TemporaryDirectory() as td:
+        cfg_path = os.path.join(td, "config.json")
+        out_path = os.path.join(td, "out.json")
+        with open(cfg_path, "w") as f:
+            json.dump(config, f)
+        proc = subprocess.run(
+            [sys.executable, "-m", "repro.mesh.scaling", cfg_path, out_path],
+            env=env, capture_output=True, text=True)
+        if proc.returncode != 0:
+            raise RuntimeError(
+                f"repro.mesh.scaling failed:\n{proc.stderr[-4000:]}")
+        with open(out_path) as f:
+            return json.load(f)
+
+
 def message_stats(a: CSR, part, topo: Topology) -> Dict[str, Dict]:
     std = build_standard_plan(a.indptr, a.indices, part, topo)
     nap = build_nap_plan(a.indptr, a.indices, part, topo,

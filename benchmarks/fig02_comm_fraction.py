@@ -1,12 +1,20 @@
 """Fig. 2: % of SpMV time spent communicating vs nnz/process (nlpkkt240-like).
 
 The paper shows communication dominating as the strong-scaling limit is
-approached (500k -> 50k nnz/process).  We reproduce the trend with the
-nlpkkt240 surrogate and the Blue Waters cost model.
+approached (500k -> 50k nnz/process).  Two tables reproduce the trend
+with the nlpkkt240 surrogate:
+
+* :func:`run` — the Blue Waters cost model (Eqs. 10-12), at paper-like
+  process counts.
+* :func:`run_measured` — MEASURED walls through the real ``repro.api``
+  shardmap stack (``repro.mesh.scaling``), at the ladder this host can
+  actually address; the comm fraction comes from per-phase exchange
+  walls timed in isolation, not from a model.
 """
 from __future__ import annotations
 
-from benchmarks.common import Table, default_topology, spmv_times
+from benchmarks.common import (Table, default_topology, measured_sweep,
+                               spmv_times)
 from repro.core.partition import contiguous_partition
 from repro.core.topology import Topology
 from repro.sparse import suitesparse_like
@@ -29,5 +37,28 @@ def run() -> Table:
     return t
 
 
+def run_measured() -> Table:
+    t = Table("Fig 2 (measured) — comm fraction, shardmap stack "
+              "(nlpkkt240-like, strong scaling)",
+              ["shape", "n_procs", "wall std (s)", "wall NAP (s)",
+               "comm frac (standard)", "comm frac (NAP)"])
+    sweep = measured_sweep({
+        "mode": "strong",
+        "matrix": {"kind": "suitesparse_like", "name": "nlpkkt240",
+                   "scale": 8192},
+        "ladder": [[1, 2], [2, 2], [2, 4]],
+        "methods": ["standard", "nap"],
+        "repeats": 3,
+    })
+    for p in sweep["points"]:
+        std, nap = p["methods"]["standard"], p["methods"]["nap"]
+        t.add(f"{p['n_nodes']}x{p['ppn']}", p["n_nodes"] * p["ppn"],
+              std["wall_s"], nap["wall_s"],
+              std["comm_fraction"], nap["comm_fraction"])
+    return t
+
+
 if __name__ == "__main__":
     print(run().render())
+    print()
+    print(run_measured().render())

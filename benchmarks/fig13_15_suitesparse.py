@@ -4,6 +4,12 @@ Fig 13: NAP speedup over standard SpMV with STRIDED partitions (row r on
 process r mod np) at several nnz/core scales.  Fig 14: same with BALANCED
 (graph-partitioned) rows.  Fig 15: how many NAPSpMVs amortise the one-time
 graph-partitioning cost (crossover count).
+
+Those three tables are Blue Waters cost-model numbers at paper-like
+process counts; :func:`run_measured` adds MEASURED walls through the
+real ``repro.api`` shardmap stack (``repro.mesh.scaling``) for a subset
+of surrogates at the shape this host can address — standard vs nap vs
+multistep, strided vs balanced.
 """
 from __future__ import annotations
 
@@ -11,7 +17,7 @@ import time
 
 import numpy as np
 
-from benchmarks.common import Table, spmv_times
+from benchmarks.common import Table, measured_sweep, spmv_times
 from repro.configs.paper_spmv import CONFIG
 from repro.core.partition import make_partition
 from repro.core.topology import Topology
@@ -72,6 +78,31 @@ def run_fig15():
     return t
 
 
+def run_measured() -> Table:
+    t = Table("Fig 13/14 (measured) — NAP vs standard, shardmap stack (2x2)",
+              ["matrix", "partition", "standard (s)", "nap (s)",
+               "multistep (s)", "speedup (std/nap)"])
+    for name in MATRICES[:2]:
+        for kind in ("strided", "balanced"):
+            sweep = measured_sweep({
+                "mode": "strong",
+                "matrix": {"kind": "suitesparse_like", "name": name,
+                           "scale": 8192},
+                "partition": kind,
+                "ladder": [[2, 2]],
+                "methods": ["standard", "nap", "multistep"],
+                "repeats": 3,
+            })
+            for p in sweep["points"]:
+                m = p["methods"]
+                t.add(f"{name}-like", kind,
+                      m["standard"]["wall_s"], m["nap"]["wall_s"],
+                      m["multistep"]["wall_s"],
+                      m["standard"]["wall_s"] / max(m["nap"]["wall_s"],
+                                                    1e-12))
+    return t
+
+
 if __name__ == "__main__":
     a, b = run_fig13_14()
     print(a.render())
@@ -79,3 +110,5 @@ if __name__ == "__main__":
     print(b.render())
     print()
     print(run_fig15().render())
+    print()
+    print(run_measured().render())

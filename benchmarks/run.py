@@ -9,7 +9,10 @@ across PRs.  The gate walks EVERY key shared by the two ``spmv_wall.wall``
 dicts, which includes the operator-level end-to-end walls
 (``operator_forward_nv*_s`` / ``operator_transpose_nv*_s`` — the
 `repro.api` pack->run->unpack path) alongside the shard-level executor
-walls.
+walls.  The MEASURED scaling block (benchmarks/bench_scaling.py over
+repro.mesh.scaling) rides the same gate: every ``scaling.walls`` entry
+shared by baseline and fresh payloads is compared whenever the sweep
+configs match.
 """
 from __future__ import annotations
 
@@ -53,6 +56,12 @@ def check_regressions(baseline: dict, fresh: dict,
         new_wall = new_sw.get("wall", {})
         for k in sorted(set(old_wall) & set(new_wall)):
             compare(f"spmv_wall.wall.{k}", old_wall[k], new_wall[k])
+    old_sc, new_sc = baseline.get("scaling", {}), fresh.get("scaling", {})
+    if old_sc.get("config") and old_sc.get("config") == new_sc.get("config"):
+        old_walls = old_sc.get("walls", {})
+        new_walls = new_sc.get("walls", {})
+        for k in sorted(set(old_walls) & set(new_walls)):
+            compare(f"scaling.walls.{k}", old_walls[k], new_walls[k])
     return regs
 
 
@@ -75,6 +84,8 @@ def main() -> None:
 
     print(fig02_comm_fraction.run().render())
     print()
+    print(fig02_comm_fraction.run_measured().render())
+    print()
     print(fig05_message_model.run().render())
     print()
     for prob in ("anisotropic", "elasticity"):
@@ -94,6 +105,8 @@ def main() -> None:
         print()
         print(fig13_15_suitesparse.run_fig15().render())
         print()
+        print(fig13_15_suitesparse.run_measured().render())
+        print()
     print(roofline_cells.run().render())
 
     # machine-readable SpMV perf trajectory (own process: it forces the
@@ -110,6 +123,16 @@ def main() -> None:
     print(proc.stdout, end="")
     if proc.returncode != 0:
         print(f"bench_spmv FAILED:\n{proc.stderr}", flush=True)
+        raise SystemExit(proc.returncode)
+
+    # measured scaling walls merge into the same payload (own process:
+    # it too forces the host device count before jax initialises)
+    cmd = [sys.executable, "-m", "benchmarks.bench_scaling",
+           "--out", "BENCH_spmv.json"] + (["--quick"] if args.quick else [])
+    proc = subprocess.run(cmd, env=env, capture_output=True, text=True)
+    print(proc.stdout, end="")
+    if proc.returncode != 0:
+        print(f"bench_scaling FAILED:\n{proc.stderr}", flush=True)
         raise SystemExit(proc.returncode)
 
     if baseline is not None:

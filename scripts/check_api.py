@@ -222,6 +222,34 @@ def main() -> None:
     np.testing.assert_allclose(op @ v, a.matvec(v), rtol=1e-9, atol=1e-12)
     print("comm surface OK (multistep both backends, comm='nap' "
           "bit-identical, comm='auto' verdict on autotune_report)")
+
+    # -- the mesh runtime surface -------------------------------------------
+    # topology autodiscovery (operator(a) with no topo), the persistent
+    # buffer registry behind every compiled plan, and the launcher's env
+    # contract — all single-process here; the 2-process path is
+    # tests/multidev/mesh_prog.py.
+    from repro.mesh import (default_registry, discover_topology, launch,
+                            mesh_env, pick_coordinator)
+    from repro.mesh.buffers import is_multiprocess
+    from repro.mesh.launcher import ENV_COORDINATOR
+
+    assert not is_multiprocess()
+    disc = discover_topology()
+    assert disc.n_nodes == 1 and disc.ppn == 4, disc   # forced 4-device host
+    op_auto = nap.operator(a, backend="shardmap")       # topo autodiscovered
+    assert op_auto.topo == disc
+    oracle = nap.operator(a, topo=disc, backend="shardmap")
+    assert np.array_equal(np.asarray(op_auto @ v), np.asarray(oracle @ v)), \
+        "autodiscovered topo must be bit-identical to the declared one"
+    reg = default_registry()
+    rep = reg.report()
+    assert rep["staged"] > 0, rep                       # plans stage through it
+    assert rep["resident_bytes"] > 0, rep
+    env = mesh_env(pick_coordinator(), 2, 1, local_devices=3)
+    assert env[ENV_COORDINATOR].startswith("127.0.0.1:")
+    assert callable(launch)
+    print("mesh surface OK (autodiscovered topo bit-identical, buffer "
+          "registry live, launcher env contract)")
     print("API OK")
 
 

@@ -82,8 +82,14 @@ def operator(a, topo: Optional[Topology] = None,
     a : CSR
         Sparse ``[m, n]`` matrix — square or rectangular.
     topo : Topology, optional
-        Machine shape.  Defaults to a single node with one process —
-        pass the real (n_nodes, ppn) for anything distributed.
+        Machine shape.  ``None`` AUTODISCOVERS from the live runtime
+        (:func:`repro.mesh.discover.discover_topology`): one "node" per
+        jax process, ``ppn`` local devices — a plain single-device
+        process discovers ``Topology(1, 1)``, bit-identical to the old
+        declared default; after :func:`repro.mesh.launcher.attach` the
+        operator spans the whole multi-process mesh.  Pass an explicit
+        (n_nodes, ppn) to pin a layout (e.g. simulating a larger
+        machine than the one running).
     part : RowPartition, optional
         Square-case sugar: sets ``row_part`` AND ``col_part`` to the same
         partition (requires ``m == n``; mutually exclusive with passing
@@ -145,7 +151,8 @@ def operator(a, topo: Optional[Topology] = None,
                 f"partition); a is {a.shape} — pass row_part=/col_part=")
         row_part = col_part = part
     if topo is None:
-        topo = Topology(n_nodes=1, ppn=1)
+        from repro.mesh.discover import discover_topology
+        topo = discover_topology()
     if row_part is None:
         row_part = contiguous_partition(m, topo.n_procs)
     if col_part is None:

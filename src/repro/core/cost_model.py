@@ -204,6 +204,46 @@ class PostalParams:
     def signature(self) -> tuple:
         return dataclasses.astuple(self)
 
+    @classmethod
+    def calibrated(cls, walls: List[Dict],
+                   name: str = "calibrated") -> "PostalParams":
+        """Fit the postal constants from MEASURED per-phase exchange walls.
+
+        ``walls`` — records with ``n_msgs`` (bottleneck-rank messages),
+        ``nbytes`` (bottleneck-rank padded bytes), ``inter`` (bool level
+        flag) and ``seconds``, exactly what
+        :func:`repro.mesh.scaling.measure_phase_walls` emits.  Each level
+        solves the least-squares system ``seconds ≈ alpha*n_msgs +
+        nbytes/beta`` over its records; a level with fewer than two
+        usable records — or a fit with a non-positive coefficient (noise
+        at micro-benchmark scale) — keeps that constant's TPU_V5E
+        default, so a partial calibration degrades gracefully instead of
+        producing a nonsense machine model.
+        """
+        import numpy as np
+        d = cls()
+        fitted = {"inter": (d.alpha_inter, d.beta_inter),
+                  "intra": (d.alpha_intra, d.beta_intra)}
+        for level in ("inter", "intra"):
+            recs = [w for w in walls
+                    if bool(w["inter"]) == (level == "inter")
+                    and w["n_msgs"] > 0 and w["seconds"] > 0]
+            if len(recs) < 2:
+                continue
+            design = np.array([[r["n_msgs"], r["nbytes"]] for r in recs],
+                              dtype=np.float64)
+            t = np.array([r["seconds"] for r in recs], dtype=np.float64)
+            coef, *_ = np.linalg.lstsq(design, t, rcond=None)
+            alpha, inv_beta = (float(coef[0]), float(coef[1]))
+            da, db = fitted[level]
+            fitted[level] = (alpha if alpha > 0 else da,
+                             1.0 / inv_beta if inv_beta > 0 else db)
+        return cls(name=name,
+                   alpha_inter=fitted["inter"][0],
+                   beta_inter=fitted["inter"][1],
+                   alpha_intra=fitted["intra"][0],
+                   beta_intra=fitted["intra"][1])
+
 
 TPU_V5E_POSTAL = PostalParams()
 

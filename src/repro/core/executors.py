@@ -155,9 +155,10 @@ class _ShardmapExecutor:
     @property
     def mesh(self):
         if self._mesh is None:
-            from repro.compat import make_mesh
-            self._mesh = make_mesh((self.topo.n_nodes, self.topo.ppn),
-                                   ("node", "proc"))
+            # memoized per (n_nodes, ppn) — every executor on the same
+            # layout shares one mesh object (repro.mesh.buffers)
+            from repro.mesh.buffers import mesh_for
+            self._mesh = mesh_for(self.topo)
         return self._mesh
 
     @property
@@ -174,6 +175,7 @@ class _ShardmapExecutor:
     # -- the ONE packed-x path shared by all shard_map executors -----------
     def _apply(self, direction: str, v: np.ndarray, donate: bool) -> np.ndarray:
         from repro.core.spmv_jax import pack_vector, unpack_vector
+        from repro.mesh.buffers import fetch_mesh_array
 
         c = self.compiled
         if direction == "forward":
@@ -187,7 +189,9 @@ class _ShardmapExecutor:
             w = self._apply_verified(direction, shards)
         else:
             w = self._run(direction)(shards, donate=donate)
-        return unpack_vector(np.asarray(w), out_part, self.topo)
+        # fetch_mesh_array == np.asarray single-process; under a
+        # multi-process mesh it gathers the global shards bitwise-exactly
+        return unpack_vector(fetch_mesh_array(w), out_part, self.topo)
 
     def _apply_verified(self, direction: str, shards) -> np.ndarray:
         """Integrity path: arm any scripted faults, run the instrumented
@@ -196,6 +200,7 @@ class _ShardmapExecutor:
         the apply from the RETAINED packed shards with the fault consumed
         (never donated), which reproduces the fault-free result
         bit-for-bit.  Persistent mismatches raise after the retry."""
+        from repro.mesh.buffers import fetch_mesh_array
         st = self._integrity
         c = self.compiled
         n_terms = c.rows_pad + c.packed_x_len
@@ -203,8 +208,8 @@ class _ShardmapExecutor:
         st.arm(direction)
         try:
             w, chk, abft = self._run(direction)(shards, donate=False)
-            mism = st.verify(np.asarray(chk), np.asarray(abft), direction,
-                             n_terms)
+            mism = st.verify(fetch_mesh_array(chk), fetch_mesh_array(abft),
+                             direction, n_terms)
             if not mism:
                 return w
             if st.mode == "detect":
@@ -216,8 +221,8 @@ class _ShardmapExecutor:
             st.counters["retries"] += 1
             st.disarm()
             w, chk, abft = self._run(direction)(shards, donate=False)
-            mism = st.verify(np.asarray(chk), np.asarray(abft), direction,
-                             n_terms)
+            mism = st.verify(fetch_mesh_array(chk), fetch_mesh_array(abft),
+                             direction, n_terms)
             if mism:
                 raise IntegrityError(
                     f"integrity mismatch persisted through retry on "

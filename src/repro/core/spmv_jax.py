@@ -169,12 +169,27 @@ def _memo_device_arrays(topo: Topology, arrays: Dict[str, np.ndarray],
     plan reuse the device buffers instead of re-staging every host array
     on every bind (lazy format arrays appear later, so the cache fills
     incrementally — existing entries are never re-copied).
+
+    ``cache`` is normally a :class:`repro.mesh.buffers.BufferNamespace`
+    (dict protocol) so the persistent-buffer registry accounts staging,
+    reuse and eviction; placement goes through
+    :func:`repro.mesh.buffers.stage_mesh_array` — a plain ``jnp.asarray``
+    in a single process, a global ``jax.Array`` under a multi-process
+    ``jax.distributed`` mesh.
     """
+    from repro.mesh.buffers import stage_mesh_array
     nn, ppn = topo.n_nodes, topo.ppn
     for k, v in arrays.items():
         if k not in cache:
-            cache[k] = jnp.asarray(v.reshape((nn, ppn) + v.shape[1:]))
+            cache[k] = stage_mesh_array(v.reshape((nn, ppn) + v.shape[1:]),
+                                        topo)
     return {k: cache[k] for k in arrays}
+
+
+def _plan_namespace():
+    """Fresh buffer namespace for one compiled plan's ``_dev_cache``."""
+    from repro.mesh.buffers import default_registry
+    return default_registry().namespace("spmv-plan")
 
 
 @dataclasses.dataclass
@@ -218,9 +233,10 @@ class CompiledNAP:
     # sub-plan so every nap-shaped consumer keeps working).
     comm: str = "nap"
     ms_plan: Optional[object] = None
-    # per-name device-array memo (see _memo_device_arrays)
+    # per-name device-array memo (see _memo_device_arrays) — a registry
+    # namespace, so resident plan buffers are accounted and releasable
     _dev_cache: Dict[str, jnp.ndarray] = dataclasses.field(
-        default_factory=dict, repr=False, compare=False)
+        default_factory=_plan_namespace, repr=False, compare=False)
     # matrix whose VALUES this plan currently carries (swap_values target)
     a_ref: Optional[CSR] = dataclasses.field(
         default=None, repr=False, compare=False)
@@ -1117,7 +1133,7 @@ def _stack_chk(pairs: List[Tuple[jnp.ndarray, jnp.ndarray]],
     return jnp.stack(rows)
 
 
-def _make_run(call4, fmt: str, val_fetch=None, fault_fetch=None):
+def _make_run(call4, fmt: str, val_fetch=None, fault_fetch=None, stage=None):
     """Wrap a 4-D shard program into the public run callable.
 
     ``run(v_shards, donate=False)`` accepts [n_nodes, ppn, rows_pad] or
@@ -1134,6 +1150,11 @@ def _make_run(call4, fmt: str, val_fetch=None, fault_fetch=None):
     armed fault-spec array — same shape/dtype every call, so arming or
     clearing scripted faults never retraces either.  With it set, ``run``
     returns the instrumented triple ``(w_shards, chk, abft)``.
+
+    ``stage`` (multi-process jobs only — see
+    :func:`repro.mesh.buffers.input_stager`) places the packed operand as
+    a GLOBAL sharded array before the jit call; ``None`` keeps the
+    single-process ``jnp.asarray`` path bit-for-bit.
     """
     counter = {"n": 0}
 
@@ -1144,14 +1165,19 @@ def _make_run(call4, fmt: str, val_fetch=None, fault_fetch=None):
     jits = {False: jax.jit(traced)}
 
     def run(v_shards, donate: bool = False):
-        v_shards = jnp.asarray(v_shards, jnp.float32)
+        if stage is None:
+            v_shards = jnp.asarray(v_shards, jnp.float32)
+        else:
+            v_shards = stage(v_shards)
         donate = bool(donate)
         if donate and donate not in jits:
             jits[True] = jax.jit(traced, donate_argnums=(0,))
         fn = jits[donate]
         vals = val_fetch() if val_fetch is not None else ()
         if fault_fetch is not None:
-            spec_arg = jnp.asarray(np.asarray(fault_fetch()), jnp.int32)
+            spec_np = np.asarray(fault_fetch())
+            spec_arg = (jnp.asarray(spec_np, jnp.int32) if stage is None
+                        else stage(spec_np, np.int32))
             if v_shards.ndim == 3:
                 w, chk, abft = fn(v_shards[..., None], spec_arg, *vals)
                 return w[..., 0], chk, abft
@@ -1188,10 +1214,19 @@ def _bind_shard_program(smapped, compiled, names: List[str],
     ``swap_values`` takes effect on the next call without retracing.
     ``with_fault`` inserts the integrity fault-spec as the second
     positional argument (the instrumented-program calling convention).
+
+    Multi-process jobs pass EVERY named array as an argument instead:
+    jax forbids closing over a ``jax.Array`` that spans non-addressable
+    devices, and the plan's device buffers are global under a
+    ``jax.distributed`` mesh.  The single-process split is unchanged.
     """
+    from repro.mesh.buffers import is_multiprocess
     dev = compiled.device_arrays()
-    val_names = [k for k in names if k in VALUE_ARRAY_NAMES]
-    struct = {k: dev[k] for k in names if k not in VALUE_ARRAY_NAMES}
+    if is_multiprocess():
+        val_names = list(names)
+    else:
+        val_names = [k for k in names if k in VALUE_ARRAY_NAMES]
+    struct = {k: dev[k] for k in names if k not in val_names}
 
     if with_fault:
         def call4(v_shards, fault_spec, *vals):
@@ -1398,8 +1433,10 @@ def nap_forward_shardmap(compiled: CompiledNAP, mesh: Mesh,
                         check_vma=False)
     call4, val_fetch = _bind_shard_program(smapped, compiled, names,
                                            with_fault=integrity)
+    from repro.mesh.buffers import input_stager
     return _make_run(call4, fmt, val_fetch,
-                     fault_fetch=fault_fetch if integrity else None)
+                     fault_fetch=fault_fetch if integrity else None,
+                     stage=input_stager(compiled.topo))
 
 
 def nap_transpose_shardmap(compiled: CompiledNAP, mesh: Mesh,
@@ -1591,8 +1628,10 @@ def nap_transpose_shardmap(compiled: CompiledNAP, mesh: Mesh,
                         check_vma=False)
     call4, val_fetch = _bind_shard_program(smapped, compiled, names,
                                            with_fault=integrity)
+    from repro.mesh.buffers import input_stager
     return _make_run(call4, fmt, val_fetch,
-                     fault_fetch=fault_fetch if integrity else None)
+                     fault_fetch=fault_fetch if integrity else None,
+                     stage=input_stager(compiled.topo))
 
 
 # ---------------------------------------------------------------------------
@@ -1627,7 +1666,7 @@ class CompiledStandard:
     requested_local_compute: str = "auto"
     ell_t_kmax: int = 0
     _dev_cache: Dict[str, jnp.ndarray] = dataclasses.field(
-        default_factory=dict, repr=False, compare=False)
+        default_factory=_plan_namespace, repr=False, compare=False)
     # see the identically-named CompiledNAP fields (swap_values support)
     a_ref: Optional[CSR] = dataclasses.field(
         default=None, repr=False, compare=False)
@@ -1944,8 +1983,10 @@ def standard_forward_shardmap(compiled: CompiledStandard, mesh: Mesh,
                         check_vma=False)
     call4, val_fetch = _bind_shard_program(smapped, compiled, names,
                                            with_fault=integrity)
+    from repro.mesh.buffers import input_stager
     return _make_run(call4, fmt, val_fetch,
-                     fault_fetch=fault_fetch if integrity else None)
+                     fault_fetch=fault_fetch if integrity else None,
+                     stage=input_stager(compiled.topo))
 
 
 def standard_transpose_shardmap(compiled: CompiledStandard, mesh: Mesh,
@@ -2041,8 +2082,10 @@ def standard_transpose_shardmap(compiled: CompiledStandard, mesh: Mesh,
                         check_vma=False)
     call4, val_fetch = _bind_shard_program(smapped, compiled, names,
                                            with_fault=integrity)
+    from repro.mesh.buffers import input_stager
     return _make_run(call4, fmt, val_fetch,
-                     fault_fetch=fault_fetch if integrity else None)
+                     fault_fetch=fault_fetch if integrity else None,
+                     stage=input_stager(compiled.topo))
 
 
 # ---------------------------------------------------------------------------

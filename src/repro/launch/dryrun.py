@@ -51,8 +51,11 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
         rec.update(skipped=True, reason=why, ok=True)
         return rec
     try:
-        mesh = make_production_mesh(multi_pod=multi_pod)
         chips = 512 if multi_pod else 256
+        # pin the chip budget: the dry-run cells are defined at 256/512
+        # regardless of how many host devices back them
+        mesh = make_production_mesh(multi_pod=multi_pod, n_devices=chips,
+                                    n_pods=2 if multi_pod else None)
         t0 = time.time()
         cell = build_cell(arch, shape_name, mesh, multi_pod,
                           overrides=overrides)

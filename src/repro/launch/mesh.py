@@ -3,13 +3,64 @@ module never touches jax device state (required so smoke tests keep their
 single CPU device)."""
 from __future__ import annotations
 
+import math
+from typing import Optional, Tuple
+
 from repro.compat import make_mesh
 
 
-def make_production_mesh(*, multi_pod: bool = False):
-    shape = (2, 16, 16) if multi_pod else (16, 16)
-    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return make_mesh(shape, axes)
+def _square_factor(n: int) -> Tuple[int, int]:
+    """Most-square ``(data, model)`` factorization of ``n`` devices."""
+    d = int(math.isqrt(n))
+    while n % d:
+        d -= 1
+    return (d, n // d)
+
+
+def production_mesh_shape(n_devices: int, *, multi_pod: bool = False,
+                          n_pods: int = 2) -> Tuple[int, ...]:
+    """Mesh shape for ``n_devices`` — pure, no jax.
+
+    Single-pod: the most-square ``(data, model)`` factorization (256
+    devices → the classic ``(16, 16)``).  Multi-pod: a leading ``pod``
+    axis of ``n_pods`` over the per-pod factorization.  Raises a
+    ``ValueError`` naming the device count when no layout exists.
+    """
+    if n_devices < 1:
+        raise ValueError(
+            f"cannot derive a production mesh from {n_devices} devices")
+    if multi_pod:
+        if n_pods < 2:
+            raise ValueError(f"multi_pod needs n_pods >= 2, got {n_pods}")
+        if n_devices % n_pods:
+            raise ValueError(
+                f"cannot derive a multi-pod mesh from {n_devices} devices: "
+                f"not divisible by {n_pods} pods")
+        return (n_pods,) + _square_factor(n_devices // n_pods)
+    return _square_factor(n_devices)
+
+
+def make_production_mesh(*, multi_pod: bool = False,
+                         n_devices: Optional[int] = None,
+                         n_pods: Optional[int] = None):
+    """Build the production mesh over the devices actually present.
+
+    The shape is DERIVED (:func:`production_mesh_shape`), not declared:
+    ``n_devices`` defaults to ``len(jax.devices())`` and ``n_pods`` to
+    the ``jax.distributed`` process count when the job is multi-process
+    (else the classic dual-pod 2).  Pass either explicitly to pin a
+    sub-fleet (the roofline dry-run pins its 256/512-chip cells).  jax is
+    only touched here, at call time.
+    """
+    import jax
+    if n_devices is None:
+        n_devices = len(jax.devices())
+    if n_pods is None:
+        n_procs = int(jax.process_count())
+        n_pods = n_procs if n_procs > 1 else 2
+    shape = production_mesh_shape(n_devices, multi_pod=multi_pod,
+                                  n_pods=n_pods)
+    return make_mesh(shape, mesh_axes(multi_pod))
 
 
 def mesh_axes(multi_pod: bool):

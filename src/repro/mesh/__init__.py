@@ -1,0 +1,35 @@
+"""Multi-host mesh runtime: launcher, topology discovery, buffers, scaling.
+
+The distributed runtime under the operator stack:
+
+* :mod:`repro.mesh.launcher` — ``jax.distributed`` multi-process
+  launcher (subprocess fan-out for CI, ``REPRO_MESH_*`` env attach for
+  clusters).
+* :mod:`repro.mesh.discover` — ``discover_topology()`` derives
+  ``Topology(n_nodes, ppn)`` from the live mesh; ``repro.api.operator``
+  autodiscovers when ``topo`` is omitted.
+* :mod:`repro.mesh.buffers` — persistent device-buffer registry +
+  single/multi-process array placement (the one seam that knows about
+  global ``jax.Array`` layout).
+* :mod:`repro.mesh.scaling` — measured weak/strong-scaling harness over
+  the real operator stack (per-phase exchange walls, standard vs nap vs
+  multistep).
+
+Submodules import lazily where it matters: ``repro.mesh`` itself never
+touches jax.
+"""
+from repro.mesh.buffers import (BufferNamespace, BufferRegistry,
+                                default_registry, fetch_mesh_array,
+                                is_multiprocess, stage_mesh_array)
+from repro.mesh.discover import (DiscoveryError, discover_topology,
+                                 discovery_report)
+from repro.mesh.launcher import (LaunchError, LaunchResult, attach, launch,
+                                 mesh_env, pick_coordinator)
+
+__all__ = [
+    "BufferNamespace", "BufferRegistry", "default_registry",
+    "fetch_mesh_array", "is_multiprocess", "stage_mesh_array",
+    "DiscoveryError", "discover_topology", "discovery_report",
+    "LaunchError", "LaunchResult", "attach", "launch",
+    "mesh_env", "pick_coordinator",
+]

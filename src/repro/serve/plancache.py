@@ -23,6 +23,12 @@ fingerprint per entry:
 the moment the node layout changes (the paper's premise — comm plans are
 functions of the topology), so the cache drops them wholesale and
 retargets its factory at the survivor topology.
+
+Device-buffer lifecycle: every compiled plan pins its mesh-shaped
+arrays in a :mod:`repro.mesh.buffers` registry namespace.  LRU eviction
+and elastic rebuilds RELEASE those namespaces explicitly (the bytes
+show up in the registry's eviction stats, surfaced via
+:meth:`PlanCache.buffer_report`) instead of waiting on the collector.
 """
 from __future__ import annotations
 
@@ -54,6 +60,20 @@ def structure_key(a, row_part: RowPartition, col_part: RowPartition,
 def values_fingerprint(a) -> str:
     """Digest of the matrix values alone (hot-swap change detection)."""
     return hashlib.sha1(np.ascontiguousarray(a.data).tobytes()).hexdigest()
+
+
+def release_operator_buffers(op) -> int:
+    """Release every device-buffer namespace an operator's executors pin
+    (forward AND transpose, when split).  Returns bytes released; safe on
+    simulate-backend operators (which pin nothing)."""
+    freed = 0
+    for ex in (getattr(op, "executor", None),
+               getattr(op, "transpose_executor", None)):
+        cache = getattr(getattr(ex, "_compiled", None), "_dev_cache", None)
+        release = getattr(cache, "release", None)
+        if release is not None:
+            freed += release()
+    return freed
 
 
 class PlanCache:
@@ -108,7 +128,10 @@ class PlanCache:
                           local_compute=self.local_compute, mesh=self.mesh,
                           integrity=self.integrity, **self.operator_kwargs)
         while len(self._entries) >= self.max_entries:
-            self._entries.popitem(last=False)
+            _, old = self._entries.popitem(last=False)
+            self.stats["buffer_bytes_released"] = (
+                self.stats.get("buffer_bytes_released", 0)
+                + release_operator_buffers(old["op"]))
             self.stats["evictions"] += 1
         self._entries[key] = {"op": op, "fingerprint": values_fingerprint(a)}
         return op
@@ -119,8 +142,18 @@ class PlanCache:
         Returns the number of plans dropped; subsequent ``operator_for``
         calls recompile against the survivor layout."""
         dropped = len(self._entries)
+        for ent in self._entries.values():
+            self.stats["buffer_bytes_released"] = (
+                self.stats.get("buffer_bytes_released", 0)
+                + release_operator_buffers(ent["op"]))
         self._entries.clear()
         self.topo = new_topo
         self.mesh = None   # a mesh built for the old fleet shape is stale too
         self.stats["rebuilds"] += 1
         return dropped
+
+    def buffer_report(self) -> Dict[str, object]:
+        """The process-wide buffer registry's accounting (staged/reused/
+        evicted counts and bytes, live namespaces, resident bytes)."""
+        from repro.mesh.buffers import default_registry
+        return default_registry().report()

@@ -69,6 +69,12 @@ def _default_mesh(topo: Topology):
     return _MESH_CACHE[key]
 
 
+def _spgemm_namespace():
+    """Registry-backed device memo (repro.mesh.buffers), like SpMV plans."""
+    from repro.mesh.buffers import default_registry
+    return default_registry().namespace("spgemm-plan")
+
+
 @dataclasses.dataclass
 class CompiledSpGemm:
     """Static arrays for the shard_map SpGEMM, stacked over ranks.
@@ -94,7 +100,7 @@ class CompiledSpGemm:
     c_nnz: List[int]
     plan: Optional[SpGemmPlan] = None
     _dev_cache: Dict[str, object] = dataclasses.field(
-        default_factory=dict, repr=False, compare=False)
+        default_factory=_spgemm_namespace, repr=False, compare=False)
     # jitted program memo per (mesh id, payload dtype): repeated
     # applications (AMG setup sweeps, benchmarks) re-use one trace
     _run_cache: Dict[tuple, object] = dataclasses.field(

@@ -1,0 +1,99 @@
+"""Multi-process mesh runtime end to end (run as its own process).
+
+Parent (no argv): forces 4 host devices, computes the single-process
+declared-topo ``Topology(2, 2)`` SpMV oracle, then uses
+``repro.mesh.launcher.launch`` to spawn TWO coordinator-connected
+processes with 2 devices each running this same file in child mode.
+
+Child (``child <out.json>``): attaches via the ``REPRO_MESH_*`` env,
+asserts ``discover_topology()`` sees ``(n_nodes=2, ppn=2)``, builds the
+operator with ``topo=None`` (autodiscovery) and runs a cross-process
+``op @ x`` on the jitted shardmap stack; process 0 writes the result.
+
+The parent asserts the 2-process result is BIT-IDENTICAL to its
+single-process declared-topo oracle and within f32 tolerance of the
+float64 message-passing simulator.  Prints "ALL OK" at the end —
+tests/test_mesh.py greps for it.
+"""
+import json
+import os
+import sys
+import tempfile
+
+import numpy as np
+
+N = 64
+SEED = 0
+
+
+def problem():
+    from repro.sparse import random_fixed_nnz
+    a = random_fixed_nnz(N, 6, seed=SEED)
+    v = np.random.default_rng(SEED).standard_normal(N)
+    return a, v
+
+
+def child(out_path: str) -> None:
+    from repro.mesh.launcher import attach
+    info = attach(verbose=True)
+    assert info["attached"], "child must find the REPRO_MESH_* env"
+    from repro.mesh.discover import discover_topology
+    topo = discover_topology()
+    assert (topo.n_nodes, topo.ppn) == (2, 2), \
+        f"discovered {topo}, wanted (2, 2)"
+
+    import repro.api as nap
+    a, v = problem()
+    op = nap.operator(a)          # topo autodiscovered from the live mesh
+    assert op.topo is not None and (op.topo.n_nodes, op.topo.ppn) == (2, 2)
+    w = np.asarray(op @ v, np.float64)
+    if info["process_id"] == 0:
+        with open(out_path, "w") as f:
+            json.dump({"topo": [topo.n_nodes, topo.ppn],
+                       "w": w.tolist()}, f)
+    print(f"CHILD {info['process_id']} OK", flush=True)
+
+
+def parent() -> None:
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    import repro.api as nap
+    from repro.core.comm_graph import build_nap_plan
+    from repro.core.partition import contiguous_partition
+    from repro.core.spmv import simulate_nap_spmv
+    from repro.core.topology import Topology
+    from repro.mesh.launcher import launch
+
+    a, v = problem()
+    topo = Topology(n_nodes=2, ppn=2)
+    op = nap.operator(a, topo=topo, backend="shardmap")
+    w_oracle = np.asarray(op @ v, np.float64)
+
+    out_path = os.path.join(tempfile.mkdtemp(prefix="mesh_prog_"), "w.json")
+    res = launch(os.path.abspath(__file__), 2, args=["child", out_path],
+                 local_devices=2, timeout_s=560)
+    for pid in range(2):
+        assert f"CHILD {pid} OK" in "".join(res.outputs), res.outputs[pid]
+    with open(out_path) as f:
+        payload = json.load(f)
+    assert payload["topo"] == [2, 2], payload["topo"]
+    w_mesh = np.asarray(payload["w"], np.float64)
+
+    assert np.array_equal(w_mesh, w_oracle), \
+        "2-process launcher result must be BIT-IDENTICAL to the " \
+        f"single-process declared-topo oracle (max delta " \
+        f"{np.abs(w_mesh - w_oracle).max():.3e})"
+    part = contiguous_partition(N, topo.n_procs)
+    plan = build_nap_plan(a.indptr, a.indices, part, topo)
+    want = simulate_nap_spmv(a, v, plan)
+    err = np.abs(w_mesh - want).max()
+    assert err < 1e-4, f"vs float64 simulator: {err:.3e}"
+    print(f"2-process op @ x bit-identical to the declared-topo oracle; "
+          f"max err vs float64 simulator = {err:.3e}", flush=True)
+    print("ALL OK", flush=True)
+
+
+if __name__ == "__main__":
+    if len(sys.argv) > 1 and sys.argv[1] == "child":
+        child(sys.argv[2])
+    else:
+        parent()

@@ -38,6 +38,35 @@ def test_mesh_module_is_lazy():
     assert callable(m.make_production_mesh)
 
 
+def test_production_mesh_shape_derives_from_device_count():
+    from repro.launch.mesh import production_mesh_shape
+    assert production_mesh_shape(256) == (16, 16)      # the classic pod
+    assert production_mesh_shape(512) == (16, 32)
+    assert production_mesh_shape(8) == (2, 4)
+    assert production_mesh_shape(1) == (1, 1)
+    assert production_mesh_shape(512, multi_pod=True) == (2, 16, 16)
+    assert production_mesh_shape(512, multi_pod=True, n_pods=4) == (4, 8, 16)
+
+
+def test_production_mesh_shape_errors_name_device_count():
+    from repro.launch.mesh import production_mesh_shape
+    with pytest.raises(ValueError, match="0 devices"):
+        production_mesh_shape(0)
+    with pytest.raises(ValueError, match="7 devices"):
+        production_mesh_shape(7, multi_pod=True)
+    with pytest.raises(ValueError, match="n_pods"):
+        production_mesh_shape(8, multi_pod=True, n_pods=1)
+
+
+def test_make_production_mesh_uses_live_devices():
+    """On this single-device host the derived production mesh is (1, 1) —
+    no hard-coded (16, 16) demanding 256 devices."""
+    from repro.launch.mesh import dp_size, make_production_mesh
+    mesh = make_production_mesh()
+    assert mesh.shape == {"data": 1, "model": 1}
+    assert dp_size(mesh) == 1
+
+
 def test_sharded_gb_math():
     tree = {"a": jax.ShapeDtypeStruct((16, 32), jnp.float32)}
     spec = {"a": P("data", "model")}

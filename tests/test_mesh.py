@@ -1,0 +1,217 @@
+"""repro.mesh runtime: discovery, buffers, launcher plumbing, calibration.
+
+Single-process tier-1 checks; the real 2-process jax.distributed run is
+the @multidev test at the bottom (tests/multidev/mesh_prog.py).
+"""
+import os
+import pathlib
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+import jax
+
+import repro.api as nap
+from repro.core.cost_model import PostalParams, TPU_V5E_POSTAL
+from repro.core.topology import Topology
+from repro.mesh.buffers import (BufferRegistry, default_registry,
+                                fetch_mesh_array, is_multiprocess,
+                                stage_mesh_array)
+from repro.mesh.discover import discover_topology, discovery_report
+from repro.mesh.launcher import (ENV_COORDINATOR, ENV_LOCAL_DEVICES,
+                                 ENV_NUM_PROCESSES, ENV_PROCESS_ID,
+                                 attach, launch, mesh_env, pick_coordinator)
+from repro.sparse import random_fixed_nnz
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+
+
+# ---------------------------------------------------------------------------
+# discovery
+# ---------------------------------------------------------------------------
+
+def test_discover_topology_single_process_fallback():
+    """One process, no jax.distributed: Topology(1, n_local_devices)."""
+    topo = discover_topology()
+    assert topo == Topology(n_nodes=1, ppn=jax.local_device_count())
+
+
+def test_discovery_report_fields():
+    rep = discovery_report()
+    assert rep["jax"] and rep["n_nodes"] == 1
+    assert rep["device_count"] == jax.device_count()
+
+
+def test_operator_autodiscovers_topology_bit_identical():
+    """operator(a) with topo omitted must equal the declared-topo build
+    bit for bit (the single-process half of the mesh_prog oracle)."""
+    a = random_fixed_nnz(48, 5, seed=3)
+    v = np.random.default_rng(3).standard_normal(48)
+    auto = nap.operator(a, backend="shardmap")
+    assert auto.topo == discover_topology()
+    declared = nap.operator(a, topo=auto.topo, backend="shardmap")
+    assert np.array_equal(np.asarray(auto @ v), np.asarray(declared @ v))
+
+
+# ---------------------------------------------------------------------------
+# buffer registry
+# ---------------------------------------------------------------------------
+
+def test_buffer_namespace_lifecycle_and_stats():
+    reg = BufferRegistry(name="t")
+    ns = reg.namespace("plan-a")
+    x = np.zeros(16, np.float32)
+    assert "k" not in ns
+    ns["k"] = x
+    assert "k" in ns and ns["k"] is x
+    assert reg.stats["staged"] == 1
+    assert reg.stats["reused"] == 1          # the read above
+    assert reg.resident_bytes() == x.nbytes
+    ns.pop("k")
+    assert reg.stats["evicted"] == 1 and reg.resident_bytes() == 0
+    ns["k2"] = x
+    freed = ns.release()
+    assert freed == x.nbytes and len(ns) == 0
+    assert ns.release() == 0                 # idempotent
+    rep = reg.report()
+    assert rep["namespaces_created"] == 1 and rep["namespaces_released"] == 1
+
+
+def test_compiled_plan_buffers_live_in_default_registry():
+    reg = default_registry()
+    staged_before = reg.stats["staged"]
+    a = random_fixed_nnz(48, 5, seed=1)
+    op = nap.operator(a, topo=Topology(1, jax.local_device_count()),
+                      backend="shardmap")
+    _ = op @ np.ones(48)
+    assert reg.stats["staged"] > staged_before
+    assert reg.resident_bytes() > 0
+
+
+def test_plancache_eviction_releases_buffers():
+    from repro.serve.plancache import PlanCache, release_operator_buffers
+    topo = Topology(1, jax.local_device_count())
+    cache = PlanCache(topo, backend="shardmap", max_entries=1)
+    a = random_fixed_nnz(48, 5, seed=1)
+    b = random_fixed_nnz(48, 7, seed=2)
+    from repro.core.partition import contiguous_partition
+    part = contiguous_partition(48, topo.n_procs)
+    op_a = cache.operator_for(a, part)
+    _ = op_a @ np.ones(48)
+    assert release_operator_buffers(op_a) >= 0   # callable on a live op
+    _ = op_a @ np.ones(48)                       # restages on next apply
+    cache.operator_for(b, part)                  # evicts op_a's entry
+    assert cache.stats["evictions"] == 1
+    assert "buffer_bytes_released" in cache.stats
+    assert "resident_bytes" in cache.buffer_report()
+
+
+def test_stage_and_fetch_single_process_bit_identical():
+    topo = Topology(1, jax.local_device_count())
+    g = np.random.default_rng(0).standard_normal(
+        (1, topo.ppn, 6)).astype(np.float32)
+    w = stage_mesh_array(g, topo)
+    assert np.array_equal(fetch_mesh_array(w), g)
+    assert not is_multiprocess()
+
+
+# ---------------------------------------------------------------------------
+# launcher plumbing (no jax.distributed in tier 1)
+# ---------------------------------------------------------------------------
+
+def test_mesh_env_and_pick_coordinator():
+    coord = pick_coordinator()
+    host, port = coord.rsplit(":", 1)
+    assert host == "127.0.0.1" and 0 < int(port) < 65536
+    env = mesh_env(coord, 4, 2, local_devices=3)
+    assert env[ENV_COORDINATOR] == coord
+    assert env[ENV_NUM_PROCESSES] == "4"
+    assert env[ENV_PROCESS_ID] == "2"
+    assert env[ENV_LOCAL_DEVICES] == "3"
+    assert ENV_LOCAL_DEVICES not in mesh_env(coord, 4, 2)
+
+
+def test_attach_is_noop_without_env(monkeypatch):
+    monkeypatch.delenv(ENV_COORDINATOR, raising=False)
+    info = attach()
+    assert info == {"attached": False, "process_id": 0, "num_processes": 1}
+
+
+def test_launch_fans_out_env(tmp_path):
+    """launch() runs a plain script per process with the REPRO_MESH_*
+    contract wired (no jax in the children — pure plumbing check)."""
+    script = tmp_path / "child.py"
+    script.write_text(
+        "import os\n"
+        "print('pid', os.environ['REPRO_MESH_PROCESS_ID'],\n"
+        "      'of', os.environ['REPRO_MESH_NUM_PROCESSES'],\n"
+        "      'xla', os.environ['XLA_FLAGS'])\n")
+    res = launch(str(script), 2, local_devices=3, timeout_s=60)
+    assert res.returncodes == [0, 0]
+    for pid in (0, 1):
+        assert f"pid {pid} of 2" in res.output(pid)
+        assert "device_count=3" in res.output(pid)
+
+
+def test_launch_surfaces_child_failure(tmp_path):
+    from repro.mesh.launcher import LaunchError
+    script = tmp_path / "boom.py"
+    script.write_text("import sys; print('going down'); sys.exit(3)\n")
+    with pytest.raises(LaunchError) as ei:
+        launch(str(script), 2, timeout_s=60)
+    assert "going down" in str(ei.value)
+
+
+# ---------------------------------------------------------------------------
+# calibration
+# ---------------------------------------------------------------------------
+
+def test_postal_calibrated_recovers_planted_constants():
+    alpha_i, beta_i = 2.0e-4, 1.0e8
+    alpha_l, beta_l = 3.0e-6, 4.0e9
+    rng = np.random.default_rng(0)
+    walls = []
+    for _ in range(12):
+        n, b = int(rng.integers(1, 9)), int(rng.integers(1, 64)) * 4096
+        walls.append({"inter": True, "n_msgs": n, "nbytes": b,
+                      "seconds": n * alpha_i + b / beta_i})
+        walls.append({"inter": False, "n_msgs": n, "nbytes": b,
+                      "seconds": n * alpha_l + b / beta_l})
+    p = PostalParams.calibrated(walls)
+    assert p.alpha_inter == pytest.approx(alpha_i, rel=1e-6)
+    assert p.beta_inter == pytest.approx(beta_i, rel=1e-6)
+    assert p.alpha_intra == pytest.approx(alpha_l, rel=1e-6)
+    assert p.beta_intra == pytest.approx(beta_l, rel=1e-6)
+    assert p.name == "calibrated"
+
+
+def test_postal_calibrated_degrades_to_defaults():
+    # fewer than two records per level: every constant stays the default
+    p = PostalParams.calibrated([{"inter": True, "n_msgs": 1,
+                                  "nbytes": 4096, "seconds": 1e-4}])
+    d = TPU_V5E_POSTAL
+    assert (p.alpha_inter, p.beta_inter) == (d.alpha_inter, d.beta_inter)
+    assert (p.alpha_intra, p.beta_intra) == (d.alpha_intra, d.beta_intra)
+
+
+# ---------------------------------------------------------------------------
+# the real thing: 2 jax.distributed processes vs the declared-topo oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.multidev
+def test_mesh_launcher_2proc_bit_identical():
+    """tests/multidev/mesh_prog.py: launch() 2 coordinator-connected
+    processes (2 devices each), run op @ x through the autodiscovered
+    (2, 2) topology, and require the gathered result to be BIT-IDENTICAL
+    to a single-process declared-topo shardmap oracle."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(ROOT / "src")
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run(
+        [sys.executable, str(ROOT / "tests" / "multidev" / "mesh_prog.py")],
+        capture_output=True, text=True, env=env, timeout=600)
+    assert proc.returncode == 0, \
+        f"stdout:\n{proc.stdout}\nstderr:\n{proc.stderr}"
+    assert "ALL OK" in proc.stdout
