@@ -48,6 +48,12 @@ Measures, on a forced 8-device host platform (2 nodes x 4 ppn):
   ``rap_assemble.speedup`` (distributed/host ratio) is THE claim source
   for any RAP-assembly number quoted in docs; the walls sit under
   run.py's 1.5x regression gate like every other entry.
+* ``moe_dispatch`` — the MoE NAP-dispatch subsystem: measured
+  pod-crossing bytes of the compiled shard_map island per dispatch mode
+  and wire dtype (nap < flat and fp8 <= 0.55x f32 are asserted),
+  plan-layer modeled inter-pod bytes, the executor f32 bit-identity
+  flag, and island-apply walls under the same regression gate (keyed on
+  the block's ``config``).
 
     PYTHONPATH=src python -m benchmarks.bench_spmv [--quick] [--out PATH]
 
@@ -533,6 +539,115 @@ def bench_comm_autotune(quick: bool) -> dict:
     return {"wall": walls, "comm_autotune": block}
 
 
+def bench_moe_dispatch(quick: bool) -> dict:
+    """The MoE NAP-dispatch block: measured + modeled traffic and walls.
+
+    ``measured_dci_bytes``: pod-crossing bytes of the compiled shard_map
+    island (``analyze_hlo`` with ``pod_boundary=4`` on the 2x4 mesh) for
+    flat/f32, nap/f32 and the quantized nap wires — the claim source for
+    the dispatch traffic numbers in docs (nap < flat, fp8 <= 0.55x f32
+    are ASSERTED here, so a regression breaks the bench).
+    ``modeled_inter_bytes``: the plan layer's slot-granular injected
+    inter-pod bytes for the same geometry.  ``walls``: steady-state
+    island applies per mode/wire, gated by run.py's 1.5x rule whenever
+    the ``config`` matches the committed baseline.
+    """
+    import jax
+    import jax.numpy as jnp
+    import repro.api as nap_api
+    from repro.compat import make_mesh, set_mesh
+    from repro.configs import get_reduced
+    from repro.core.hlo_analysis import analyze_hlo
+    from repro.models.moe import EPInfo, moe_apply_sharded, moe_init
+    from repro.moe.dispatch import topology_of_mesh
+    from repro.moe.plan import (dispatch_partitions, dispatch_traffic,
+                                build_dispatch_plans, representative_routing,
+                                routing_matrix)
+    from repro.moe.wire import wire_bytes
+
+    d = 32 if quick else 64
+    cfg0 = get_reduced("qwen3-moe-235b-a22b").replace(
+        n_experts=8, top_k=4, moe_dff=d, d_model=d, capacity_factor=8.0)
+    mesh = make_mesh((2, 4), ("pod", "model"))
+    ep = EPInfo(inner_axis="model", pod_axis="pod")
+    params = moe_init(jax.random.key(0), cfg0, jnp.float32)
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((4, 16, d)) * 0.3, jnp.float32)
+    iters = 3 if quick else 10
+
+    walls, measured = {}, {}
+    with set_mesh(mesh):
+        for mode, wd in (("flat", "f32"), ("nap", "f32"),
+                         ("nap", "bf16"), ("nap", "fp8_e4m3")):
+            cfg = cfg0.replace(moe_dispatch=mode, wire_dtype=wd)
+            fn = jax.jit(lambda p, xx, c=cfg: moe_apply_sharded(p, c, xx,
+                                                                ep, mesh))
+            compiled = fn.lower(params, x).compile()
+            # pod_boundary=4: devices 0-3 are pod 0, 4-7 pod 1
+            measured[f"{mode}_{wd}"] = analyze_hlo(
+                compiled.as_text(), pod_boundary=4).dci_bytes
+            for _ in range(WARMUP_ITERS):
+                jax.block_until_ready(fn(params, x))
+            best = float("inf")
+            for _ in range(iters):
+                t0 = time.perf_counter()
+                jax.block_until_ready(fn(params, x))
+                best = min(best, time.perf_counter() - t0)
+            walls[f"island_{mode}_{wd}_s"] = round(best, 5)
+
+    # the acceptance inequalities are load-bearing: fail the bench loudly
+    # rather than record a payload that contradicts the claims
+    assert measured["nap_f32"] < measured["flat_f32"], measured
+    assert measured["nap_fp8_e4m3"] <= 0.55 * measured["nap_f32"], measured
+
+    # plan-layer modeled traffic for the same geometry (per token batch:
+    # nv = d_model values per routed copy)
+    topo = topology_of_mesh(mesh)
+    T, E = 64, cfg0.n_experts
+    ids, w = representative_routing(T, E, cfg0.top_k, seed=0)
+    r = routing_matrix(ids, w, E)
+    ep_, tp_ = dispatch_partitions(E, T, topo)
+    plans = build_dispatch_plans(r, ep_, tp_, topo)
+    modeled = {}
+    for name, wd in (("flat_f32", "f32"), ("nap_f32", "f32"),
+                     ("nap_fp8_e4m3", "fp8_e4m3")):
+        plan = plans[name.split("_", 1)[0]]
+        modeled[name] = dispatch_traffic(plan, wire_dtype=wd,
+                                         nv=d)["injected_inter_bytes"]
+    assert modeled["nap_f32"] < modeled["flat_f32"], modeled
+    assert modeled["nap_fp8_e4m3"] * 4 == modeled["nap_f32"], modeled
+
+    # executor f32 path must be bitwise the simulate oracle
+    xv = rng.standard_normal((T, d))
+    sim = nap_api.operator(r, topo=topo, row_part=ep_, col_part=tp_,
+                           backend="simulate", method="nap")
+    moe = nap_api.operator(r, topo=topo, row_part=ep_, col_part=tp_,
+                           backend="moe", method="nap")
+    f32_bit_identical = bool(
+        np.array_equal(moe @ xv, sim @ xv)
+        and np.array_equal(moe.T @ (sim @ xv), sim.T @ (sim @ xv)))
+    assert f32_bit_identical
+
+    return {
+        "config": {"n_experts": E, "top_k": cfg0.top_k, "d_model": d,
+                   "capacity_factor": cfg0.capacity_factor,
+                   "mesh": [2, 4], "n_tokens_modeled": T},
+        "measured_dci_bytes": measured,
+        "dci_reduction_nap_vs_flat": round(
+            measured["flat_f32"] / measured["nap_f32"], 2),
+        "fp8_vs_f32_wire_ratio": round(
+            measured["nap_fp8_e4m3"] / measured["nap_f32"], 3),
+        "modeled_inter_bytes": modeled,
+        "wire_bytes_per_val": {wd: wire_bytes(wd)
+                               for wd in ("f32", "bf16", "fp8_e4m3")},
+        "f32_bit_identical": f32_bit_identical,
+        "walls": walls,
+        "note": "measured_dci_bytes comes from analyze_hlo(pod_boundary=4) "
+                "over the compiled island; quote dci_reduction_nap_vs_flat "
+                "and fp8_vs_f32_wire_ratio, not rounded slogans",
+    }
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
@@ -555,6 +670,9 @@ def main() -> None:
     comm = bench_comm_autotune(args.quick)
     result["spmv_wall"]["wall"].update(comm["wall"])
     result["comm_autotune"] = comm["comm_autotune"]
+    # MoE dispatch block: own walls subdict (gated by run.py whenever the
+    # committed baseline's config matches), measured + modeled traffic
+    result["moe_dispatch"] = bench_moe_dispatch(args.quick)
     result["total_s"] = round(time.time() - t0, 1)
     with open(args.out, "w") as f:
         json.dump(result, f, indent=2)
@@ -577,8 +695,18 @@ def main() -> None:
           f"{ca['forward']['multistep_injected_inter_bytes']} B, "
           f"reduction {ca['forward']['reduction']}); per-level "
           f"{[r['a_forward'] for r in ca['per_level']]}")
+    md = result["moe_dispatch"]
+    print(f"moe dispatch (E={md['config']['n_experts']} "
+          f"top_k={md['config']['top_k']} on 2x4): measured DCI "
+          f"flat {md['measured_dci_bytes']['flat_f32']:.0f} B -> "
+          f"nap {md['measured_dci_bytes']['nap_f32']:.0f} B "
+          f"({md['dci_reduction_nap_vs_flat']}x), fp8 wire "
+          f"{md['fp8_vs_f32_wire_ratio']}x of f32, "
+          f"f32_bit_identical={md['f32_bit_identical']}")
     for k, v in result["spmv_wall"]["wall"].items():
         print(f"  {k}: {v}")
+    for k, v in md["walls"].items():
+        print(f"  moe_dispatch.{k}: {v}")
     print(f"wrote {args.out} in {result['total_s']}s")
 
 

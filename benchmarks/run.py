@@ -12,7 +12,8 @@ dicts, which includes the operator-level end-to-end walls
 walls.  The MEASURED scaling block (benchmarks/bench_scaling.py over
 repro.mesh.scaling) rides the same gate: every ``scaling.walls`` entry
 shared by baseline and fresh payloads is compared whenever the sweep
-configs match.
+configs match, and so do the MoE dispatch island walls
+(``moe_dispatch.walls``) whenever that block's config matches.
 """
 from __future__ import annotations
 
@@ -62,6 +63,14 @@ def check_regressions(baseline: dict, fresh: dict,
         new_walls = new_sc.get("walls", {})
         for k in sorted(set(old_walls) & set(new_walls)):
             compare(f"scaling.walls.{k}", old_walls[k], new_walls[k])
+    # MoE dispatch island walls: same config (geometry + token count) ->
+    # same workload, comparable
+    old_md, new_md = baseline.get("moe_dispatch", {}), fresh.get("moe_dispatch", {})
+    if old_md.get("config") and old_md.get("config") == new_md.get("config"):
+        old_walls = old_md.get("walls", {})
+        new_walls = new_md.get("walls", {})
+        for k in sorted(set(old_walls) & set(new_walls)):
+            compare(f"moe_dispatch.walls.{k}", old_walls[k], new_walls[k])
     return regs
 
 

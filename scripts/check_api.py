@@ -250,6 +250,51 @@ def main() -> None:
     assert callable(launch)
     print("mesh surface OK (autodiscovered topo bit-identical, buffer "
           "registry live, launcher env contract)")
+
+    # -- the MoE dispatch subsystem -----------------------------------------
+    # backend="moe" executors registered; f32 wire is the identity codec
+    # (bitwise vs the matching simulator); quantized byte accounting on
+    # stats(); dispatch_operator resolves "auto" per direction.
+    from repro.models.config import ModelConfig
+    from repro.moe import (dispatch_partitions, representative_routing,
+                           routing_matrix, wire_bytes)
+    from repro.moe.dispatch import dispatch_operator
+
+    for m in ("flat", "nap", "auto"):
+        assert ("moe", m) in nap.available_executors(), \
+            f"moe/{m} executor must be registered"
+    tt = Topology(n_nodes=2, ppn=2)
+    ids, w = representative_routing(64, 4, 2, seed=1)
+    r = routing_matrix(ids, w, 4)
+    ep_, tp_ = dispatch_partitions(4, 64, tt)
+    xt = rng.standard_normal((64, 3))
+    ref = nap.operator(r, topo=tt, row_part=ep_, col_part=tp_,
+                       backend="simulate", method="nap")
+    moe_op = nap.operator(r, topo=tt, row_part=ep_, col_part=tp_,
+                          backend="moe", method="nap")
+    assert np.array_equal(moe_op @ xt, ref @ xt), \
+        "f32 wire must be bit-identical to the simulate oracle"
+    assert np.array_equal(moe_op.T @ (ref @ xt), ref.T @ (ref @ xt))
+    st = {wd: nap.operator(r, topo=tt, row_part=ep_, col_part=tp_,
+                           backend="moe", method="nap",
+                           wire_dtype=wd).stats()
+          for wd in ("f32", "bf16", "fp8_e4m3")}
+    for wd, s in st.items():
+        assert s["bytes_per_val"] == wire_bytes(wd), (wd, s["bytes_per_val"])
+    assert st["fp8_e4m3"]["dispatch_injected_inter_bytes"] * 4 == \
+        st["f32"]["dispatch_injected_inter_bytes"], \
+        "quantized byte accounting must scale with the wire width"
+    cfg_moe = ModelConfig(name="t", family="moe", n_layers=1, d_model=3,
+                          n_heads=1, n_kv_heads=1, d_ff=8, vocab=8,
+                          n_experts=4, top_k=2, moe_dff=8,
+                          moe_dispatch="auto", wire_dtype="bf16")
+    rep = dispatch_operator(cfg_moe, topo=tt, routing=(ids, w)).autotune_report()
+    assert rep["dispatch_resolved"] in ("flat", "nap") and \
+        rep["combine_resolved"] in ("flat", "nap") and \
+        rep["wire_dtype"] == "bf16", rep
+    print("moe dispatch surface OK (moe/flat|nap|auto registered, f32 "
+          "bit-identical, wire-width byte accounting, auto per-direction "
+          "verdicts)")
     print("API OK")
 
 

@@ -74,7 +74,8 @@ def operator(a, topo: Optional[Topology] = None,
              block_shape: Tuple[int, int] = (8, 128), nv_block: int = 128,
              interpret: bool = True, cache: bool = True,
              tuner: LocalComputeParams = TPU_V5E_LOCAL,
-             integrity: str = "off") -> "NapOperator":
+             integrity: str = "off",
+             wire_dtype: str = "f32") -> "NapOperator":
     """Build a :class:`NapOperator` for ``a`` on a (topo, partitions) layout.
 
     Parameters
@@ -139,6 +140,14 @@ def operator(a, topo: Optional[Topology] = None,
         and only raises when the mismatch persists).  Inspect with
         ``op.integrity_report()``; script deterministic faults with
         ``op.inject_fault(...)``.
+    wire_dtype : wire payload encoding — ``"f32"`` (default; identity
+        codec, bit-for-bit today's path) | ``"bf16"`` | ``"fp8_e4m3"``.
+        Consumed by the ``backend="moe"`` dispatch executors
+        (:mod:`repro.moe`): payloads are quantized at every wire
+        crossing and accumulated at full width on receive, the modeled
+        traffic/verdicts charge the narrow width, and integrity
+        checksums run over the quantized words.  Other backends accept
+        only ``"f32"`` (their programs never quantize).
     """
     m, n = a.shape
     if part is not None:
@@ -168,6 +177,13 @@ def operator(a, topo: Optional[Topology] = None,
     if integrity not in ("off", "detect", "recover"):
         raise ValueError(f"integrity must be off|detect|recover, "
                          f"got {integrity!r}")
+    from repro.moe.wire import check_wire_dtype
+    check_wire_dtype(wire_dtype)
+    if wire_dtype != "f32" and backend != "moe":
+        raise ValueError(
+            f"wire_dtype={wire_dtype!r} is a moe-backend feature (the "
+            f"quantized dispatch wire); backend={backend!r} programs "
+            f"never quantize — pass wire_dtype='f32'")
     comm_report = None
     t_method = None
     if comm is not None:
@@ -197,7 +213,8 @@ def operator(a, topo: Optional[Topology] = None,
                         local_compute=local_compute, pairing=pairing,
                         block_shape=tuple(block_shape), nv_block=nv_block,
                         interpret=interpret, cache=cache, tuner=tuner,
-                        integrity=integrity, threshold=threshold)
+                        integrity=integrity, threshold=threshold,
+                        wire_dtype=wire_dtype)
     exec_ = bind_executor(backend, method, a, row_part, col_part, topo, spec,
                          mesh=mesh)
     t_exec = None
@@ -578,7 +595,8 @@ class ComposedOperator:
                         pairing=spec.pairing, block_shape=spec.block_shape,
                         nv_block=spec.nv_block, interpret=spec.interpret,
                         cache=spec.cache, tuner=spec.tuner,
-                        integrity=spec.integrity, threshold=spec.threshold)
+                        integrity=spec.integrity, threshold=spec.threshold,
+                        wire_dtype=spec.wire_dtype)
 
     # -- per-stage introspection, rolled up --------------------------------
     def stats(self) -> List[object]:

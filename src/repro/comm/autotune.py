@@ -46,12 +46,21 @@ def build_candidate_plans(indptr: np.ndarray, indices: np.ndarray, part,
 def comm_verdict(plans: Dict, direction: str = "forward",
                  bytes_per_val: int = 4, nv: int = 1,
                  integrity: str = "off",
-                 params: PostalParams = TPU_V5E_POSTAL) -> Dict:
-    """Score prebuilt candidate plans for one exchange direction."""
+                 params: PostalParams = TPU_V5E_POSTAL,
+                 wire_dtype: str = "f32") -> Dict:
+    """Score prebuilt candidate plans for one exchange direction.
+
+    ``wire_dtype`` scores the quantized payload width (see
+    :func:`repro.comm.cost.planned_traffic`) — a narrower wire shrinks
+    every candidate's modeled bytes by the same factor, but the postal
+    alpha term does not shrink, so the verdict can flip toward
+    message-frugal strategies as payloads thin out.
+    """
     candidates: Dict[str, Dict] = {}
     for name, plan in plans.items():
         traffic = planned_traffic(plan, bytes_per_val=bytes_per_val, nv=nv,
-                                  direction=direction, integrity=integrity)
+                                  direction=direction, integrity=integrity,
+                                  wire_dtype=wire_dtype)
         times = postal_comm_time(traffic, params)
         candidates[name] = {
             "injected_inter_bytes": traffic["injected_inter_bytes"],
@@ -69,6 +78,7 @@ def comm_verdict(plans: Dict, direction: str = "forward",
     return {
         "chosen": chosen,
         "direction": direction,
+        "wire_dtype": wire_dtype,
         "postal_params": params.name,
         "candidates": candidates,
     }
@@ -80,7 +90,8 @@ def choose_comm(indptr: np.ndarray, indices: np.ndarray, part, topo,
                 bytes_per_val: int = 4, nv: int = 1,
                 integrity: str = "off",
                 params: PostalParams = TPU_V5E_POSTAL,
-                plans: Optional[Dict] = None) -> Dict:
+                plans: Optional[Dict] = None,
+                wire_dtype: str = "f32") -> Dict:
     """Full per-direction verdict for one operator's structure.
 
     Returns ``{"forward": verdict, "transpose": verdict, "threshold"}``;
@@ -93,10 +104,12 @@ def choose_comm(indptr: np.ndarray, indices: np.ndarray, part, topo,
                                       pairing=pairing, col_part=col_part,
                                       threshold=threshold)
     fwd = comm_verdict(plans, direction="forward", bytes_per_val=bytes_per_val,
-                       nv=nv, integrity=integrity, params=params)
+                       nv=nv, integrity=integrity, params=params,
+                       wire_dtype=wire_dtype)
     bwd = comm_verdict(plans, direction="transpose",
                        bytes_per_val=bytes_per_val, nv=nv,
-                       integrity=integrity, params=params)
+                       integrity=integrity, params=params,
+                       wire_dtype=wire_dtype)
     ms = plans.get("multistep")
     return {
         "forward": fwd,

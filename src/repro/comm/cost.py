@@ -81,7 +81,8 @@ def _split_pair(plan: StandardPlan):
 
 def planned_traffic(plan, bytes_per_val: int = 4, nv: int = 1,
                     direction: str = "forward",
-                    integrity: str = "off") -> Dict:
+                    integrity: str = "off",
+                    wire_dtype: str = "f32") -> Dict:
     """Phase-by-phase injected traffic for a Standard/NAP/Multistep plan.
 
     Returns ``{"strategy", "direction", "phases": {name: entry},
@@ -90,9 +91,19 @@ def planned_traffic(plan, bytes_per_val: int = 4, nv: int = 1,
     entry carries padded/effective totals, per-rank maxima for the
     requested direction, the integrity side-channel bytes, and an
     ``inter`` flag.
+
+    ``wire_dtype`` (``"f32"`` | ``"bf16"`` | ``"fp8_e4m3"``) charges the
+    quantized payload width of :mod:`repro.moe.wire` instead of
+    ``bytes_per_val`` — halved/quartered wire bytes feed the comm
+    verdict the same way the NAP dedup does.  The integrity
+    side-channel stays one u32 per slot regardless: checksums are
+    computed OVER the quantized words, not widened by them.
     """
     if direction not in ("forward", "transpose"):
         raise ValueError(f"unknown direction {direction!r}")
+    if wire_dtype != "f32":
+        from repro.moe.wire import wire_bytes
+        bytes_per_val = wire_bytes(wire_dtype)
     topo = plan.topology
     phases: Dict[str, Dict] = {}
 
@@ -144,6 +155,8 @@ def planned_traffic(plan, bytes_per_val: int = 4, nv: int = 1,
     return {
         "strategy": strategy,
         "direction": direction,
+        "wire_dtype": wire_dtype,
+        "bytes_per_val": int(bytes_per_val),
         "phases": phases,
         "injected_inter_bytes": total("padded_bytes", True)
         + total("checksum_bytes", True),

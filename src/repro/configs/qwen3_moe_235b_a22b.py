@@ -9,12 +9,19 @@ CONFIG = ModelConfig(
     qk_norm=True, rope_theta=1_000_000.0, tie_embeddings=False,
     grad_accum=8,
     opt_state_dtype="int8",  # 8-bit Adam moments (fp32 master kept)
+    # production dispatch intent: resolve flat-vs-nap per geometry from
+    # modeled inter-pod bytes, bf16 payloads on the dispatch wire
+    # (repro/moe/README.md documents the error budgets)
+    moe_dispatch="auto", wire_dtype="bf16",
 )
 
 
 def reduced() -> ModelConfig:
+    # pins flat/f32 dispatch: the reduced config is the deterministic
+    # bitwise baseline the tier-1 tests and benchmarks compare against
     return CONFIG.replace(n_layers=4, d_model=64, n_heads=4, n_kv_heads=2,
                           d_head=16, d_ff=96, vocab=512, n_experts=8, top_k=2,
                           moe_dff=96, grad_accum=1,
                           attn_block_q=32, attn_block_kv=32, xent_chunk=32,
-                          dtype="float32", remat=False)
+                          dtype="float32", remat=False,
+                          moe_dispatch="flat", wire_dtype="f32")

@@ -26,6 +26,14 @@ Backends registered here:
   is only built when ``op.T`` is first applied).
 * ``("simulate", "nap" | "standard" | "multistep")`` — the exact numpy
   message-passing simulators (float64 correctness oracles).
+* ``("moe", "flat" | "nap" | "auto")`` — MoE token->expert dispatch over
+  a CSR routing matrix ``R [E, T]``: forward is the weighted
+  dispatch-sum ``R @ X`` with every x payload quantized to
+  ``spec.wire_dtype`` on the wire (f64 accumulation on receive),
+  transpose the weighted combine; ``"auto"`` resolves flat-vs-nap PER
+  DIRECTION from the modeled injected inter-pod bytes
+  (:func:`repro.moe.plan.choose_dispatch`).  Built on the simulate
+  mailboxes, so integrity checksums run over the QUANTIZED words.
 
 The comm-strategy subsystem (:mod:`repro.comm`) treats the method as a
 pluggable exchange strategy: ``repro.api.operator(comm=...)`` maps a
@@ -80,6 +88,9 @@ class OperatorSpec:
     # duplication threshold for method="multistep" ("auto" or int >= 1);
     # ignored by the single-strategy methods
     threshold: object = "auto"
+    # wire payload encoding for the moe dispatch backend ("f32" | "bf16" |
+    # "fp8_e4m3"); "f32" is the identity codec — bit-for-bit today's path
+    wire_dtype: str = "f32"
 
 
 # ---------------------------------------------------------------------------
@@ -580,3 +591,234 @@ class StandardSimulateExecutor(_SimulateExecutor):
 
     def cost(self, machine: MachineParams) -> Dict[str, float]:
         return standard_cost(self.plan, machine)
+
+
+# ---------------------------------------------------------------------------
+# MoE dispatch backend (routing matrix over the simulate mailboxes,
+# quantized wire payloads; see repro/moe/README.md)
+# ---------------------------------------------------------------------------
+
+class _MoeDispatchExecutor(_SimulateExecutor):
+    """Shared moe-dispatch plumbing over the numpy mailboxes.
+
+    Differences from the plain simulate backend:
+
+    * every forward apply threads a wire from
+      :func:`repro.moe.wire.make_wire` — narrow ``spec.wire_dtype``
+      payloads are quantized at each send and f64-accumulated on
+      receive; ``"f32"`` without integrity threads no wire at all
+      (bit-identical to the plain simulators);
+    * the transpose (weighted combine) quantizes the y operand once
+      before the algebraic reverse route — one combine hop in the
+      model; the in-graph nap path pays up to 2
+      (:func:`repro.moe.wire.wire_error_bound` budgets both);
+    * ``integrity="detect"|"recover"`` checksums the QUANTIZED words
+      (idempotent re-encode on the receive side), so scripted faults on
+      quantized messages attribute and retry exactly like f32 ones —
+      and the recover retry re-runs with a CLEAN quantizing wire, so
+      the retried result still reflects the wire encoding;
+    * ``stats()`` adds the per-direction dispatch/combine injected
+      byte accounting at the wire width.
+    """
+
+    backend = "moe"
+
+    def _wire(self, faults=()):
+        from repro.moe.wire import make_wire
+        return make_wire(self.topo, self.spec.wire_dtype, faults,
+                         force=self._integrity is not None)
+
+    def forward(self, v: np.ndarray, donate: bool = False) -> np.ndarray:
+        if self._integrity is None:
+            wire = self._wire()
+            return self._columnwise(lambda col: self._forward(col, wire=wire),
+                                    v, self.a.shape[1])
+        return self._forward_verified(v)
+
+    def _forward_verified(self, v: np.ndarray) -> np.ndarray:
+        st = self._integrity
+        st.counters["applies"] += 1
+        wire = self._wire(st.take_pending("forward"))
+        out = self._columnwise(lambda col: self._forward(col, wire=wire), v,
+                               self.a.shape[1])
+        mism = st.note_sim(wire)
+        if not mism:
+            return out
+        if st.mode == "detect":
+            raise IntegrityError(
+                f"{len(mism)} integrity mismatch(es) on forward apply: "
+                + "; ".join(str(m) for m in mism), mism)
+        st.counters["retries"] += 1
+        clean = self._wire()
+        out = self._columnwise(lambda col: self._forward(col, wire=clean), v,
+                               self.a.shape[1])
+        st.counters["recovered"] += 1
+        return out
+
+    def transpose(self, u: np.ndarray, donate: bool = False) -> np.ndarray:
+        from repro.moe.wire import quantize_np
+        u = np.asarray(check_operand(self.a.shape[0], u), dtype=np.float64)
+        return super().transpose(quantize_np(u, self.spec.wire_dtype), donate)
+
+    def stats(self) -> Dict[str, object]:
+        from repro.moe.plan import dispatch_traffic
+        out = {f"messages_{k}": v for k, v in self._plan_stats().items()}
+        for direction, name in (("forward", "dispatch"),
+                                ("transpose", "combine")):
+            t = dispatch_traffic(self.plan, wire_dtype=self.spec.wire_dtype,
+                                 nv=1, direction=direction,
+                                 integrity=self.spec.integrity)
+            out[f"{name}_injected_inter_bytes"] = t["injected_inter_bytes"]
+            out[f"{name}_injected_intra_bytes"] = t["injected_intra_bytes"]
+            out["bytes_per_val"] = t["bytes_per_val"]
+        out["wire_dtype"] = self.spec.wire_dtype
+        return out
+
+    def autotune_report(self) -> Dict[str, object]:
+        rep = super().autotune_report()
+        rep.update(wire_dtype=self.spec.wire_dtype,
+                   dispatch_resolved=type(self).method,
+                   combine_resolved=type(self).method)
+        return rep
+
+
+@register_executor("moe", "flat")
+class FlatMoeDispatchExecutor(_MoeDispatchExecutor):
+    """Algorithm-1 analogue: every (token, owning-chip) payload crosses
+    the flat pairwise exchange directly."""
+
+    method = "flat"
+
+    def _build_plan(self):
+        return build_standard_plan(self.a.indptr, self.a.indices,
+                                   self.row_part, self.topo,
+                                   col_part=self.col_part)
+
+    def _forward(self, v, wire=None):
+        return simulate_standard_spmv(self.a, v, self.plan, wire=wire)
+
+    def _transpose(self, u):
+        return simulate_standard_spmv_transpose(self.a, u, self.plan)
+
+    def _plan_stats(self):
+        return standard_stats(self.plan)
+
+    def cost(self, machine: MachineParams) -> Dict[str, float]:
+        return standard_cost(self.plan, machine)
+
+
+@register_executor("moe", "nap")
+class NapMoeDispatchExecutor(_MoeDispatchExecutor):
+    """NAPSpMV three-step dispatch: a token bound for several experts on
+    one remote pod crosses the inter-pod boundary ONCE (the paper's
+    E(n, m) dedup), via intra-gather -> one aggregated inter-pod
+    exchange -> intra-scatter; the combine reverses every message."""
+
+    method = "nap"
+
+    def _build_plan(self):
+        return build_nap_plan(self.a.indptr, self.a.indices, self.row_part,
+                              self.topo, pairing=self.spec.pairing,
+                              col_part=self.col_part)
+
+    def _forward(self, v, wire=None):
+        return simulate_nap_spmv(self.a, v, self.plan, wire=wire)
+
+    def _transpose(self, u):
+        return simulate_nap_spmv_transpose(self.a, u, self.plan)
+
+    def _plan_stats(self):
+        return nap_stats(self.plan)
+
+    def cost(self, machine: MachineParams) -> Dict[str, float]:
+        return nap_cost(self.plan, machine)
+
+
+@register_executor("moe", "auto")
+class AutoMoeDispatchExecutor:
+    """Per-direction flat-vs-nap resolution for MoE dispatch.
+
+    Binds :func:`repro.moe.plan.choose_dispatch` over the routing
+    structure once, then delegates: ``forward`` runs the chosen dispatch
+    executor, ``transpose`` the chosen combine executor (they may
+    differ, mirroring ``comm="auto"``'s per-direction split).  The
+    candidate plans are built once and shared with the sub-executors.
+    """
+
+    backend = "moe"
+    method = "auto"
+    local_compute = "numpy"
+    transpose_local_compute = "numpy"
+
+    def __init__(self, a, row_part: RowPartition, col_part: RowPartition,
+                 topo: Topology, spec: OperatorSpec, mesh=None):
+        from repro.moe.plan import build_dispatch_plans, choose_dispatch
+        self.a, self.topo, self.spec = a, topo, spec
+        self.row_part, self.col_part = row_part, col_part
+        plans = build_dispatch_plans(a, row_part, col_part, topo,
+                                     pairing=spec.pairing)
+        verdict = choose_dispatch(a, row_part, col_part, topo,
+                                  wire_dtype=spec.wire_dtype,
+                                  integrity=spec.integrity, plans=plans)
+        self.dispatch_report = {"dispatch": verdict["dispatch"],
+                                "combine": verdict["combine"]}
+
+        def sub(method: str):
+            s = dataclasses.replace(spec, method=method)
+            ex = _REGISTRY[("moe", method)](a, row_part, col_part, topo, s,
+                                            mesh=mesh)
+            ex._plan = plans[method]   # reuse the scored plan
+            return ex
+
+        fwd_m = verdict["dispatch"]["chosen"]
+        bwd_m = verdict["combine"]["chosen"]
+        self._fwd = sub(fwd_m)
+        self._bwd = self._fwd if bwd_m == fwd_m else sub(bwd_m)
+
+    def forward(self, v: np.ndarray, donate: bool = False) -> np.ndarray:
+        return self._fwd.forward(v, donate=donate)
+
+    def transpose(self, u: np.ndarray, donate: bool = False) -> np.ndarray:
+        return self._bwd.transpose(u, donate=donate)
+
+    def queue_fault(self, fault: MessageFault) -> None:
+        target = self._bwd if fault.direction == "transpose" else self._fwd
+        target.queue_fault(fault)
+
+    def integrity_report(self) -> Dict[str, object]:
+        rep = dict(self._fwd.integrity_report())
+        if self._bwd is not self._fwd:
+            rep["combine"] = self._bwd.integrity_report()
+        return rep
+
+    def swap_values(self, a_new) -> None:
+        self._fwd.swap_values(a_new)
+        if self._bwd is not self._fwd:
+            self._bwd.swap_values(a_new)
+        self.a = a_new
+
+    def trace_counts(self) -> Dict[str, int]:
+        return {}
+
+    def stats(self) -> Dict[str, object]:
+        out = dict(self._fwd.stats())
+        if self._bwd is not self._fwd:
+            b = self._bwd.stats()
+            out["combine_injected_inter_bytes"] = \
+                b["combine_injected_inter_bytes"]
+            out["combine_injected_intra_bytes"] = \
+                b["combine_injected_intra_bytes"]
+        out["dispatch_resolved"] = type(self._fwd).method
+        out["combine_resolved"] = type(self._bwd).method
+        return out
+
+    def cost(self, machine: MachineParams) -> Dict[str, float]:
+        return self._fwd.cost(machine)
+
+    def autotune_report(self) -> Dict[str, object]:
+        return {"resolved": "numpy", "transpose_resolved": "numpy",
+                "requested": "auto",
+                "wire_dtype": self.spec.wire_dtype,
+                "dispatch_resolved": type(self._fwd).method,
+                "combine_resolved": type(self._bwd).method,
+                "moe_dispatch": self.dispatch_report}

@@ -40,7 +40,9 @@ class ModelConfig:
     n_shared_experts: int = 0      # deepseek shared experts (x moe_dff each)
     first_dense_layers: int = 0    # deepseek: leading dense layers
     capacity_factor: float = 1.25
-    moe_dispatch: str = "flat"     # flat | nap  (see models/moe.py)
+    moe_dispatch: str = "flat"     # flat | nap | auto  (see repro/moe/README.md)
+    wire_dtype: str = "f32"        # dispatch wire payload: f32 | bf16 | fp8_e4m3
+                                   # ("f32" = identity codec, bit-identical)
 
     # --- SSM / hybrid -----------------------------------------------------------
     ssm_state: int = 0             # mamba2 N
@@ -74,6 +76,19 @@ class ModelConfig:
     sp_residuals: bool = True          # store residuals sequence-sharded (SP)
 
     # ------------------------------------------------------------------------
+    def __post_init__(self) -> None:
+        # fail at construction, not deep inside a traced dispatch
+        dispatch_modes = ("flat", "nap", "auto")
+        if self.moe_dispatch not in dispatch_modes:
+            raise ValueError(
+                f"moe_dispatch must be one of {'|'.join(dispatch_modes)}, "
+                f"got {self.moe_dispatch!r}")
+        wire_dtypes = ("f32", "bf16", "fp8_e4m3")
+        if self.wire_dtype not in wire_dtypes:
+            raise ValueError(
+                f"wire_dtype must be one of {'|'.join(wire_dtypes)}, "
+                f"got {self.wire_dtype!r}")
+
     @property
     def head_dim(self) -> int:
         return self.d_head or (self.d_model // self.n_heads)

@@ -1,40 +1,46 @@
-"""Mixture-of-Experts with NAPSpMV-style hierarchical dispatch.
+"""Mixture-of-Experts layer: params + local oracle over the NAP
+dispatch subsystem.
 
-The token -> expert routing matrix is a sparse matrix, so MoE dispatch *is*
-a distributed SpMV gather (DESIGN.md §2): tokens are the vector entries,
-experts the matrix rows.  The three dispatch modes mirror the paper:
+The distributed dispatch machinery that used to live here is now the
+first-class subsystem :mod:`repro.moe` (see ``src/repro/moe/README.md``)
+— the token -> expert routing matrix is a sparse matrix, so MoE dispatch
+*is* a distributed SpMV gather (DESIGN.md §2): tokens are the vector
+entries, experts the matrix rows.  This module keeps the model-facing
+pieces:
 
-* ``local``  — single-device reference (dense-masked einsum over all experts);
-               the correctness oracle for the distributed paths.
-* ``flat``   — Algorithm 1 analogue: one capacity-padded all-to-all over the
-               *flat* expert-parallel axis; every (token, expert-choice) pair
-               crosses the network separately.
-* ``nap``    — Algorithms 2+3 analogue: per-destination-POD deduplication
-               (a token bound for several experts on one remote pod crosses
-               DCI once, the paper's E(n, m)), one aggregated inter-pod
-               all-to-all, then intra-pod fan-out + expert compute, with the
-               transpose route for the weighted combine.
+* :func:`moe_init` — parameter init (router + expert FFNs + optional
+  shared experts);
+* :func:`moe_apply_local` — the single-device dense-masked reference,
+  the correctness oracle for the distributed paths;
+* re-exports of the distributed path (:class:`EPInfo`,
+  :func:`moe_apply_sharded`, the island internals) from
+  :mod:`repro.moe.dispatch`, so every existing caller — the
+  transformer stack, the serve registry, the multidev programs — keeps
+  importing from here unchanged.
 
-The distributed paths run inside a *partial-auto* shard_map: manual over the
-expert-parallel axes, auto over the data axis, so they embed directly in the
-pjit train/serve programs.
-
-Static-shape realisation: all buffers are capacity-padded; FIFO slots are
-assigned by cumsum and overflowing copies are dropped (standard MoE token
-dropping; capacity_factor controls the padding the paper's T/U balancing
-minimises).
+Dispatch modes (``cfg.moe_dispatch``): ``flat`` (Algorithm-1 analogue,
+every (token, expert-choice) copy crosses separately), ``nap``
+(Algorithms 2+3 — per-destination-POD dedup, ONE aggregated inter-pod
+all-to-all, transpose route for the combine), ``auto`` (per-geometry
+resolution from modeled injected inter-pod bytes).  ``cfg.wire_dtype``
+quantizes the dispatch payloads on the wire (``f32`` is the identity
+codec — bit-for-bit the unquantized program).
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Dict, Optional, Sequence, Tuple
+from typing import Dict
 
 import jax
 import jax.numpy as jnp
-from jax import lax
 
-from repro import compat
 from repro.models.common import dense_init
+# Back-compat surface: the distributed dispatch path moved to the
+# repro.moe subsystem; these names keep their historical import site.
+from repro.moe.dispatch import (EPInfo, _expert_compute, _fifo_slots,  # noqa: F401
+                                _moe_island, _router, _shared_ffn,
+                                moe_apply_sharded)
+
+__all__ = ["EPInfo", "moe_init", "moe_apply_local", "moe_apply_sharded"]
 
 
 # ---------------------------------------------------------------------------
@@ -64,20 +70,6 @@ def _expert_init(key, E, d_in, d_out, dtype):
     return (jax.random.normal(key, (E, d_in, d_out), jnp.float32) * scale).astype(dtype)
 
 
-def _router(p, cfg, x2d: jax.Array) -> Tuple[jax.Array, jax.Array]:
-    """Return (weights [T, K], expert ids [T, K]); normalized top-k softmax."""
-    logits = (x2d.astype(jnp.float32) @ p["router"]).astype(jnp.float32)
-    probs = jax.nn.softmax(logits, axis=-1)
-    w, ids = lax.top_k(probs, cfg.top_k)
-    w = w / jnp.maximum(w.sum(-1, keepdims=True), 1e-9)
-    return w, ids.astype(jnp.int32)
-
-
-def _shared_ffn(p, x):
-    s = p["shared"]
-    return (jax.nn.silu(x @ s["w_gate"]) * (x @ s["w_up"])) @ s["w_down"]
-
-
 # ---------------------------------------------------------------------------
 # local reference (oracle; also the smoke-test path on 1 device)
 # ---------------------------------------------------------------------------
@@ -98,235 +90,3 @@ def moe_apply_local(p, cfg, x: jax.Array) -> jax.Array:
     if cfg.n_shared_experts:
         out = out + _shared_ffn(p, x2)
     return out.reshape(B, S, d)
-
-
-# ---------------------------------------------------------------------------
-# distributed dispatch (shard_map; flat and nap modes)
-# ---------------------------------------------------------------------------
-
-@dataclasses.dataclass(frozen=True)
-class EPInfo:
-    """Expert-parallel geometry: which mesh axes hold experts.
-
-    axes ordering is (outer, inner) = (pod, model); single-pod meshes pass
-    pod_axis=None and the nap mode degenerates to flat over `inner`.
-    """
-    inner_axis: str = "model"
-    pod_axis: Optional[str] = None
-
-    @property
-    def manual_axes(self) -> Tuple[str, ...]:
-        return ((self.pod_axis,) if self.pod_axis else ()) + (self.inner_axis,)
-
-
-def _fifo_slots(need: jax.Array, capacity: int) -> jax.Array:
-    """need [T, n_dst] bool -> slot [T, n_dst] in [0, capacity) or `capacity`
-    (dropped; scatter mode='drop' discards it)."""
-    slots = jnp.cumsum(need.astype(jnp.int32), axis=0) - 1
-    return jnp.where(need & (slots < capacity), slots, capacity)
-
-
-def _expert_compute(p_loc, cfg, tokens: jax.Array, meta_e: jax.Array,
-                    meta_w: jax.Array, e_base: jax.Array, E_loc: int,
-                    capacity: int) -> jax.Array:
-    """Run this chip's experts over arrived copies.
-
-    tokens [R, d]; meta_e [R, K] global expert ids (-1 pad); meta_w [R, K]
-    router weights; e_base scalar — first global expert id on this chip.
-    p_loc: expert weights [E_loc, d, ff] etc.
-    Returns per-copy outputs [R, d] = sum over my experts hit by the copy.
-    """
-    R, d = tokens.shape
-    out = jnp.zeros((R, d), jnp.float32)
-    for el in range(E_loc):                      # static small loop
-        gid = e_base + el
-        hit = (meta_e == gid)
-        w = (meta_w * hit).sum(-1)               # [R] combined weight
-        need = hit.any(-1)
-        slot = _fifo_slots(need[:, None], capacity)[:, 0]
-        buf = jnp.zeros((capacity + 1, d), tokens.dtype).at[slot].set(
-            tokens, mode="drop")[:capacity]
-        h = jax.nn.silu(buf @ p_loc["w_gate"][el]) * (buf @ p_loc["w_up"][el])
-        y = (h @ p_loc["w_down"][el]).astype(jnp.float32)
-        back = jnp.where(slot[:, None] < capacity, y[jnp.minimum(slot, capacity - 1)], 0.0)
-        out = out + back * w[:, None]
-    return out
-
-
-def moe_apply_sharded(p, cfg, x: jax.Array, ep: EPInfo, mesh) -> jax.Array:
-    """Distributed MoE: x [B, S, d] (batch sharded over dp axes, replicated
-    over the EP axes); experts sharded over ep.manual_axes."""
-    B, S, d = x.shape
-    in_dtype = x.dtype
-
-    def island(x_blk, router, w_gate, w_up, w_down):
-        # f32 at the shard_map boundary: the transpose-of-replication psum
-        # the autodiff inserts for x must be f32 — XLA:CPU's
-        # all-reduce-promotion pass CHECK-fails on bf16 psums whose reduction
-        # computation carries a trailing `copy` (backend bug, documented in
-        # DESIGN.md); compute inside stays in the model dtype.
-        y = _moe_island(cfg, ep, x_blk.astype(in_dtype), router,
-                        w_gate, w_up, w_down)
-        return y.astype(jnp.float32)
-
-    from jax.sharding import PartitionSpec as P
-    pod = ep.pod_axis
-    x_spec = P(pod, None, None) if pod else P(None, None, None)
-    e_spec = P(ep.manual_axes if pod else ep.inner_axis)
-    out = compat.shard_map(
-        island, mesh=mesh,
-        in_specs=(x_spec, P(), e_spec, e_spec, e_spec),
-        out_specs=x_spec,
-        axis_names=set(ep.manual_axes),
-        check_vma=False,
-    )(x.astype(jnp.float32), p["router"], p["w_gate"], p["w_up"],
-      p["w_down"]).astype(in_dtype)
-    if cfg.n_shared_experts:
-        out = out + _shared_ffn(p, x.reshape(-1, d)).reshape(B, S, d)
-    return out
-
-
-def _moe_island(cfg, ep, x, router, w_gate, w_up, w_down):
-    """Manual-collective MoE over the EP axes; runs per (pod?, model) chip."""
-    n_in = compat.axis_size(ep.inner_axis)
-    n_out = compat.axis_size(ep.pod_axis) if ep.pod_axis else 1
-    my_in = lax.axis_index(ep.inner_axis)
-    my_out = lax.axis_index(ep.pod_axis) if ep.pod_axis else 0
-    n_chips = n_in * n_out
-    E, E_loc = cfg.n_experts, cfg.n_experts // n_chips
-    B, S, d = x.shape
-    T = B * S
-    x2 = x.reshape(T, d)
-
-    # every inner-axis instance holds the same tokens (activations are
-    # replicated over TP); instance m becomes the *gateway* for chunk m —
-    # the paper's T/U distribution of node-level sends over local processes.
-    Tc = T // n_in
-    chunk = lax.dynamic_slice_in_dim(x2, my_in * Tc, Tc, 0)
-    w, ids = _router({"router": router}, cfg, chunk)       # [Tc, K]
-    K = cfg.top_k
-    dst_chip = ids // E_loc                                # global EP chip
-    # NB: global chip id c = pod * n_in + inner  (experts laid out pod-major)
-
-    cap_factor = cfg.capacity_factor
-    mode = cfg.moe_dispatch if (ep.pod_axis and n_out > 1) else "flat"
-
-    if mode == "flat":
-        # ---- Algorithm 1 analogue: per-(token, k) copies, flat a2a --------
-        capacity = max(1, int(Tc * K * cap_factor / n_chips))
-        need = jnp.zeros((Tc, n_chips), bool)
-        send_slot = jnp.full((Tc, K), capacity, jnp.int32)
-        # sequential-k FIFO so each (t, k) copy gets its own slot
-        counts = jnp.zeros((n_chips,), jnp.int32)
-        toks = jnp.zeros((n_chips, capacity, d), x.dtype)
-        meta_e = jnp.full((n_chips, capacity, K), -1, jnp.int32)
-        meta_w = jnp.zeros((n_chips, capacity, K), jnp.float32)
-        for k in range(K):                                  # static loop
-            c = dst_chip[:, k]
-            onehot = jax.nn.one_hot(c, n_chips, dtype=jnp.int32)
-            slot = counts[None, :] + jnp.cumsum(onehot, 0) - onehot
-            slot_k = (slot * onehot).sum(-1)                # [Tc]
-            slot_k = jnp.where(slot_k < capacity, slot_k, capacity)
-            toks = toks.at[c, slot_k].set(chunk, mode="drop")
-            me = jnp.full((Tc, K), -1, jnp.int32).at[:, 0].set(ids[:, k])
-            mw = jnp.zeros((Tc, K), jnp.float32).at[:, 0].set(w[:, k])
-            meta_e = meta_e.at[c, slot_k].set(me, mode="drop")
-            meta_w = meta_w.at[c, slot_k].set(mw, mode="drop")
-            send_slot = send_slot.at[:, k].set(slot_k)
-            counts = counts + onehot.sum(0)
-        axes = ep.manual_axes if ep.pod_axis else ep.inner_axis
-        r_toks = lax.all_to_all(toks, axes, 0, 0, tiled=True)
-        r_me = lax.all_to_all(meta_e, axes, 0, 0, tiled=True)
-        r_mw = lax.all_to_all(meta_w, axes, 0, 0, tiled=True)
-        e_base = (my_out * n_in + my_in) * E_loc
-        cap_e = max(1, int(Tc * K * cap_factor / E_loc))
-        y = _expert_compute({"w_gate": w_gate, "w_up": w_up, "w_down": w_down},
-                            cfg, r_toks.reshape(-1, d),
-                            r_me.reshape(-1, K), r_mw.reshape(-1, K),
-                            e_base, E_loc, cap_e)
-        # transpose route back: outputs in the same slots
-        y = lax.all_to_all(y.reshape(n_chips, capacity, d), axes, 0, 0,
-                           tiled=True)
-        out_chunk = jnp.zeros((Tc, d), jnp.float32)
-        for k in range(K):
-            c, s = dst_chip[:, k], send_slot[:, k]
-            val = jnp.where((s < capacity)[:, None],
-                            y[c, jnp.minimum(s, capacity - 1)], 0.0)
-            out_chunk = out_chunk + val
-    else:
-        # ---- NAPSpMV 3-step: pod-dedup -> one DCI a2a -> local fan-out -----
-        # dedup bound: a token crosses to pod o at most ONCE, so cap_pod = Tc
-        # is exact (no drops at the DCI stage) — vs Tc*K/n_out copies in flat.
-        cap_pod = Tc
-        dst_pod = dst_chip // n_in
-        need_pod = jnp.zeros((Tc, n_out), bool)
-        for k in range(K):
-            need_pod = need_pod | (dst_pod[:, k:k + 1] == jnp.arange(n_out)[None])
-        pod_slot = _fifo_slots(need_pod, cap_pod)           # [Tc, n_out]
-        toks = jnp.zeros((n_out, cap_pod, d), x.dtype)
-        meta_e = jnp.full((n_out, cap_pod, K), -1, jnp.int32)
-        meta_w = jnp.zeros((n_out, cap_pod, K), jnp.float32)
-        for o in range(n_out):                              # static tiny loop
-            sel = pod_slot[:, o]
-            toks = toks.at[o, sel].set(chunk, mode="drop")
-            # ship only the expert choices that live on pod o (E(n,m) dedup)
-            on_o = dst_pod == o
-            meta_e = meta_e.at[o, sel].set(jnp.where(on_o, ids, -1), mode="drop")
-            meta_w = meta_w.at[o, sel].set(jnp.where(on_o, w, 0.0), mode="drop")
-        # step 2: ONE aggregated inter-pod exchange (same inner slot pairing)
-        toks = lax.all_to_all(toks, ep.pod_axis, 0, 0, tiled=True)
-        meta_e = lax.all_to_all(meta_e, ep.pod_axis, 0, 0, tiled=True)
-        meta_w = lax.all_to_all(meta_w, ep.pod_axis, 0, 0, tiled=True)
-        # step 3: fan out to owning chips within this pod
-        R0 = n_out * cap_pod
-        ft, fe, fw = (toks.reshape(R0, d), meta_e.reshape(R0, K),
-                      meta_w.reshape(R0, K))
-        cap_loc = max(1, int(Tc * K * cap_factor / n_in))
-        loc_of = jnp.where(fe >= 0, (fe // E_loc) % n_in, -1)
-        need_loc = jnp.zeros((R0, n_in), bool)
-        for k in range(K):
-            need_loc = need_loc | (loc_of[:, k:k + 1] == jnp.arange(n_in)[None])
-        loc_slot = _fifo_slots(need_loc, cap_loc)
-        lt = jnp.zeros((n_in, cap_loc, d), x.dtype)
-        le = jnp.full((n_in, cap_loc, K), -1, jnp.int32)
-        lw = jnp.zeros((n_in, cap_loc, K), jnp.float32)
-        for i in range(n_in):
-            sel = loc_slot[:, i]
-            on_i = loc_of == i
-            lt = lt.at[i, sel].set(ft, mode="drop")
-            le = le.at[i, sel].set(jnp.where(on_i, fe, -1), mode="drop")
-            lw = lw.at[i, sel].set(jnp.where(on_i, fw, 0.0), mode="drop")
-        lt = lax.all_to_all(lt, ep.inner_axis, 0, 0, tiled=True)
-        le = lax.all_to_all(le, ep.inner_axis, 0, 0, tiled=True)
-        lw = lax.all_to_all(lw, ep.inner_axis, 0, 0, tiled=True)
-        e_base = (my_out * n_in + my_in) * E_loc
-        cap_e = max(1, int(Tc * K * cap_factor / E_loc))
-        y = _expert_compute({"w_gate": w_gate, "w_up": w_up, "w_down": w_down},
-                            cfg, lt.reshape(-1, d), le.reshape(-1, K),
-                            lw.reshape(-1, K), e_base, E_loc, cap_e)
-        # ---- transpose route: local gather-back, pod a2a back, combine ----
-        y = lax.all_to_all(y.reshape(n_in, cap_loc, d), ep.inner_axis, 0, 0,
-                           tiled=True).reshape(n_in * cap_loc, d)
-        # each original pod-copy slot sums its local fan-out returns
-        pod_back = jnp.zeros((R0, d), jnp.float32)
-        for i in range(n_in):
-            sel = loc_slot[:, i]
-            val = jnp.where((sel < cap_loc)[:, None],
-                            y[i * cap_loc + jnp.minimum(sel, cap_loc - 1)], 0.0)
-            pod_back = pod_back + val
-        pod_back = lax.all_to_all(pod_back.reshape(n_out, cap_pod, d),
-                                  ep.pod_axis, 0, 0, tiled=True)
-        out_chunk = jnp.zeros((Tc, d), jnp.float32)
-        for o in range(n_out):
-            sel = pod_slot[:, o]
-            val = jnp.where((sel < cap_pod)[:, None],
-                            pod_back[o, jnp.minimum(sel, cap_pod - 1)], 0.0)
-            out_chunk = out_chunk + val
-
-    # reassemble this pod's token set across its gateways (chunks were split
-    # over the inner axis; pods hold different batch shards, no pod gather).
-    # NB stays f32: a bf16 all_gather here transposes to a bf16 reduce-scatter
-    # whose copy-rooted reduction trips the XLA:CPU promotion bug (see
-    # moe_apply_sharded).
-    full = lax.all_gather(out_chunk, ep.inner_axis, axis=0, tiled=True)
-    return full.reshape(B, S, d)

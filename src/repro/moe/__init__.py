@@ -1,0 +1,47 @@
+"""First-class MoE NAP-dispatch subsystem.
+
+Token -> expert routing compiled into the repo's NAP plan machinery
+(:mod:`repro.moe.plan`), quantized wire payload codecs + error-budget
+oracles (:mod:`repro.moe.wire`), and the in-graph / registered-executor
+dispatch paths (:mod:`repro.moe.dispatch`).  See README.md in this
+directory for the mode and wire-dtype contracts.
+
+Importing this package pulls only numpy; the jax-facing dispatch
+symbols resolve lazily so the plan and wire layers (and the
+``backend="moe"`` simulate executors built on them) work on a jax-free
+installation.
+"""
+from repro.moe.plan import (DISPATCH_MODES, DISPATCH_PREFERENCE,
+                            build_dispatch_plans, choose_dispatch,
+                            dispatch_partitions, dispatch_traffic,
+                            dispatch_verdict, representative_routing,
+                            routing_matrix)
+from repro.moe.wire import (FP8_MAX, WIRE_DTYPES, QuantSimWire,
+                            check_wire_dtype, corrupt_wire_np,
+                            decode_np, dispatch_error_budget, encode_np,
+                            make_wire, quantize_np, wire_bytes,
+                            wire_error_bound, wire_eps)
+
+__all__ = [
+    # plan layer
+    "DISPATCH_MODES", "DISPATCH_PREFERENCE", "routing_matrix",
+    "dispatch_partitions", "build_dispatch_plans", "dispatch_traffic",
+    "dispatch_verdict", "choose_dispatch", "representative_routing",
+    # wire layer
+    "WIRE_DTYPES", "FP8_MAX", "check_wire_dtype", "wire_bytes", "wire_eps",
+    "encode_np", "decode_np", "quantize_np", "wire_error_bound",
+    "dispatch_error_budget", "corrupt_wire_np", "QuantSimWire", "make_wire",
+    # dispatch layer (lazy; needs jax)
+    "EPInfo", "moe_apply_sharded", "dispatch_operator",
+    "resolve_dispatch_mode", "topology_of_mesh",
+]
+
+_DISPATCH_SYMBOLS = ("EPInfo", "moe_apply_sharded", "dispatch_operator",
+                     "resolve_dispatch_mode", "topology_of_mesh")
+
+
+def __getattr__(name):
+    if name in _DISPATCH_SYMBOLS:
+        from repro.moe import dispatch as _dispatch
+        return getattr(_dispatch, name)
+    raise AttributeError(f"module 'repro.moe' has no attribute {name!r}")

@@ -1,0 +1,308 @@
+"""Quantized wire codecs for the MoE dispatch subsystem.
+
+The paper's NAP exchange cuts inter-node traffic by sending each value
+ONCE per destination node; this module cuts the bytes of the value
+itself.  A dispatch payload is encoded to a narrow wire dtype at the
+pack boundary (the gateway that builds the per-destination send buffer),
+ships through every hop in that form, and is decoded back to f32 on the
+receive side before any accumulation — so the two levers compound:
+fewer values on the expensive axis, and fewer bytes per value.
+
+Wire dtypes::
+
+    f32       4 B/value  identity codec — the program is bit-for-bit the
+                         unquantized one (no cast is ever inserted)
+    bf16      2 B/value  round-to-nearest bfloat16 (8-bit significand)
+    fp8_e4m3  1 B/value  float8 e4m3fn, clipped to +-FP8_MAX before the
+                         cast (e4m3fn overflows to NaN, not inf)
+
+Error model (the budget the tests assert against the float64
+simulator): one encode/decode roundtrip perturbs a value x by at most
+``u * |x| + d`` where ``u`` is the wire dtype's unit roundoff and ``d``
+half its smallest subnormal step (the absolute floor that matters for
+fp8's narrow range).  A dispatch-sum ``y_e = sum_t w_et x_t`` whose x
+payloads crossed the wire ``hops`` times is therefore off by at most
+``hops * (u * (|W| @ |x|)_e + d * (|W| @ 1)_e)`` — see
+:func:`dispatch_error_budget`.  Quantization is IDEMPOTENT (re-encoding
+a decoded wire value reproduces the same wire word), so relaying an
+already-quantized payload through the intra-node phases adds nothing;
+only genuine re-accumulation points (the nap combine's local
+gather-back) count as extra hops.
+
+This module is numpy-only at import; the in-graph codecs
+(:func:`encode_jnp` / :func:`decode_jnp`) import jax lazily so the
+simulate/plan layers stay usable on a jax-free installation.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.integrity import Mismatch, MessageFault, SimWire, checksum_np
+
+__all__ = [
+    "WIRE_DTYPES", "FP8_MAX", "check_wire_dtype", "wire_bytes", "wire_eps",
+    "encode_np", "decode_np", "quantize_np", "encode_jnp", "decode_jnp",
+    "wire_error_bound", "dispatch_error_budget", "corrupt_wire_np",
+    "QuantSimWire", "make_wire",
+]
+
+#: Supported wire encodings, in preference order (widest first).
+WIRE_DTYPES: Tuple[str, ...] = ("f32", "bf16", "fp8_e4m3")
+
+#: Largest finite float8_e4m3fn magnitude; encode clips to this so
+#: out-of-range values saturate instead of becoming NaN.
+FP8_MAX = 448.0
+
+_WIRE_BYTES: Dict[str, int] = {"f32": 4, "bf16": 2, "fp8_e4m3": 1}
+
+#: (unit roundoff u, half min-subnormal d) per wire dtype.  f32 is the
+#: identity codec — it adds NO wire error (the program never casts).
+_WIRE_EPS: Dict[str, Tuple[float, float]] = {
+    "f32": (0.0, 0.0),
+    "bf16": (2.0 ** -8, 0.0),        # 8-bit significand; subnormals ~2^-133
+    "fp8_e4m3": (2.0 ** -4, 2.0 ** -10),  # 4-bit significand; min subnormal 2^-9
+}
+
+
+def check_wire_dtype(wire_dtype: str) -> str:
+    if wire_dtype not in WIRE_DTYPES:
+        raise ValueError(
+            f"wire_dtype must be one of {'|'.join(WIRE_DTYPES)}, "
+            f"got {wire_dtype!r}")
+    return wire_dtype
+
+
+def wire_bytes(wire_dtype: str) -> int:
+    """Bytes per value on the wire (what planned_traffic charges)."""
+    return _WIRE_BYTES[check_wire_dtype(wire_dtype)]
+
+
+def wire_eps(wire_dtype: str) -> Tuple[float, float]:
+    """(unit roundoff, half min-subnormal) of one encode/decode roundtrip."""
+    return _WIRE_EPS[check_wire_dtype(wire_dtype)]
+
+
+# ---------------------------------------------------------------------------
+# numpy codecs (simulate backend / plan layer / oracles)
+# ---------------------------------------------------------------------------
+
+def _np_wire_dtype(wire_dtype: str):
+    import ml_dtypes
+    return {"bf16": ml_dtypes.bfloat16,
+            "fp8_e4m3": ml_dtypes.float8_e4m3fn}[wire_dtype]
+
+
+def encode_np(values: np.ndarray, wire_dtype: str) -> np.ndarray:
+    """Encode a float payload into its wire representation.
+
+    ``f32`` returns the input UNTOUCHED (identity, not a cast) — the
+    bit-identity contract of the default wire.
+    """
+    check_wire_dtype(wire_dtype)
+    if wire_dtype == "f32":
+        return values
+    v = np.asarray(values)
+    if wire_dtype == "fp8_e4m3":
+        v = np.clip(v, -FP8_MAX, FP8_MAX)
+    return v.astype(_np_wire_dtype(wire_dtype))
+
+
+def decode_np(wire_values: np.ndarray, wire_dtype: str,
+              out_dtype=np.float64) -> np.ndarray:
+    """Decode wire words back to an accumulation dtype (f64 default —
+    the simulators accumulate at full width)."""
+    check_wire_dtype(wire_dtype)
+    if wire_dtype == "f32":
+        return wire_values
+    return np.asarray(wire_values).astype(out_dtype)
+
+
+def quantize_np(values: np.ndarray, wire_dtype: str) -> np.ndarray:
+    """One encode/decode roundtrip in the input's own dtype — what a
+    receiver accumulates after the payload crossed the wire once."""
+    if wire_dtype == "f32":
+        return values
+    v = np.asarray(values)
+    return decode_np(encode_np(v, wire_dtype), wire_dtype, out_dtype=v.dtype)
+
+
+# ---------------------------------------------------------------------------
+# in-graph codecs (shard_map dispatch path; lazy jax import)
+# ---------------------------------------------------------------------------
+
+def jnp_wire_dtype(wire_dtype: str):
+    """The jnp dtype a wire encoding ships as (None for the f32 identity)."""
+    check_wire_dtype(wire_dtype)
+    if wire_dtype == "f32":
+        return None
+    import jax.numpy as jnp
+    return {"bf16": jnp.bfloat16, "fp8_e4m3": jnp.float8_e4m3fn}[wire_dtype]
+
+
+def encode_jnp(x, wire_dtype: str):
+    """In-graph encode at the pack boundary.  ``f32`` inserts NOTHING —
+    the jaxpr is identical to the unquantized program."""
+    wd = jnp_wire_dtype(wire_dtype)
+    if wd is None:
+        return x
+    import jax.numpy as jnp
+    if wire_dtype == "fp8_e4m3":
+        x = jnp.clip(x, -FP8_MAX, FP8_MAX)
+    return x.astype(wd)
+
+
+def decode_jnp(q, wire_dtype: str, out_dtype=None):
+    """In-graph decode + promote to the accumulation dtype (f32 default)."""
+    if wire_dtype == "f32":
+        return q
+    import jax.numpy as jnp
+    return q.astype(out_dtype or jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# error-budget oracle
+# ---------------------------------------------------------------------------
+
+def wire_error_bound(cfg=None, *, wire_dtype: Optional[str] = None,
+                     hops: Optional[int] = None) -> float:
+    """Scalar relative error budget of quantized dispatch vs the float64
+    simulator, relative to the dispatched mass ``max (|W| @ |x|)``.
+
+    ``max|y_quant - y_oracle| <= wire_error_bound(cfg) * max(|W| @ |x|)
+    + hops * d * max(|W| @ 1)`` — the second (absolute-floor) term only
+    matters for fp8 and is folded in elementwise by
+    :func:`dispatch_error_budget`; this scalar keeps a one-line assert
+    honest for well-scaled inputs by returning ``hops * (u + d)``.
+
+    Pass a :class:`repro.models.config.ModelConfig` (reads
+    ``cfg.wire_dtype`` and derives hops from ``cfg.moe_dispatch`` — the
+    nap combine re-accumulates at the pod gateway, so nap pays 2 hops
+    worst-case, flat pays 1) or explicit ``wire_dtype=`` / ``hops=``.
+    """
+    if wire_dtype is None:
+        wire_dtype = cfg.wire_dtype
+    if hops is None:
+        hops = 2 if (cfg is not None
+                     and cfg.moe_dispatch in ("nap", "auto")) else 1
+    u, d = wire_eps(wire_dtype)
+    return float(hops) * (u + d)
+
+
+def dispatch_error_budget(r, x: np.ndarray, wire_dtype: str,
+                          hops: int = 1) -> np.ndarray:
+    """Elementwise error budget for a dispatch-sum ``y = R @ x`` whose x
+    payloads crossed the wire ``hops`` times.
+
+    ``r`` is the CSR routing matrix (values = router weights), ``x`` the
+    global token payload ``[T]`` or ``[T, nv]``.  Returns an array
+    shaped like ``R @ x``: ``hops * (u * (|R| @ |x|) + d * (|R| @ 1))``
+    plus a tiny floor so an exactly-zero row never asserts on noise.
+    """
+    u, d = wire_eps(wire_dtype)
+    import dataclasses
+    r_abs = dataclasses.replace(r, data=np.abs(r.data))
+    x = np.asarray(x, dtype=np.float64)
+
+    def mass(col: np.ndarray) -> np.ndarray:
+        return r_abs.matvec(np.abs(col))
+
+    if x.ndim == 1:
+        m = mass(x)
+    else:
+        m = np.stack([mass(x[:, i]) for i in range(x.shape[1])], axis=1)
+    ones = r_abs.matvec(np.ones(r.shape[1]))
+    wmass = ones if x.ndim == 1 else ones[:, None]
+    return float(hops) * (u * m + d * wmass) + 1e-12
+
+
+# ---------------------------------------------------------------------------
+# integrity over quantized words
+# ---------------------------------------------------------------------------
+
+def corrupt_wire_np(wire_values: np.ndarray, kind: str, element: int = 0,
+                    bit: int = 0,
+                    other: Optional[np.ndarray] = None) -> np.ndarray:
+    """Fault transform applied WITHIN the wire words (the quantized
+    payload is what travels, so that is what a transport fault hits).
+    A ``bitflip`` flips a bit of the element's own wire word — 16 bits
+    wide for bf16, 8 for fp8 — instead of a 32-bit float word."""
+    from repro.core.integrity import corrupt_payload_np
+    v = np.array(wire_values, copy=True)
+    if kind != "bitflip":
+        return corrupt_payload_np(v, kind, element, bit, other=other)
+    flat = v.reshape(-1)
+    e = int(element) % max(flat.size, 1)
+    width = flat.dtype.itemsize * 8
+    word = flat[e: e + 1].view({8: np.uint8, 16: np.uint16,
+                                32: np.uint32, 64: np.uint64}[width])
+    word ^= word.dtype.type(1) << word.dtype.type(int(bit) % width)
+    return v
+
+
+class QuantSimWire(SimWire):
+    """Quantizing wire for the numpy message simulators.
+
+    ``send``: encode the payload to the wire dtype, checksum the
+    QUANTIZED words (the Fletcher fold views any dtype as raw bytes),
+    apply a matching scripted fault to the wire words, and hand the
+    decoded f64 values back to the mailbox.  ``recv``: RE-encode the
+    received values (idempotent — reproduces the wire words bit-for-bit,
+    including corrupted ones) and compare checksums.  So
+    ``integrity="detect"|"recover"`` attributes and retries quantized
+    messages exactly as it does f32 ones, with zero side-channel growth:
+    still one u32 per message.
+    """
+
+    def __init__(self, topo, wire_dtype: str,
+                 faults: Sequence[MessageFault] = ()) -> None:
+        super().__init__(topo, faults)
+        self.wire_dtype = check_wire_dtype(wire_dtype)
+
+    def send(self, phase: str, msg, values: np.ndarray) -> np.ndarray:
+        q = encode_np(values, self.wire_dtype)
+        self.sent[(phase, msg.src, msg.dst)] = checksum_np(q)
+        fault = self._match(phase, msg.src, msg.dst)
+        prev = self.last_payload.get((phase, msg.src))
+        self.last_payload[(phase, msg.src)] = np.array(q, copy=True)
+        if fault is not None:
+            self.injected += 1
+            q = corrupt_wire_np(q, fault.kind, fault.element, fault.bit,
+                                other=prev)
+        return decode_np(q, self.wire_dtype,
+                         out_dtype=np.asarray(values).dtype)
+
+    def recv(self, phase: str, msg, values: np.ndarray) -> None:
+        self.checks += 1
+        q = encode_np(values, self.wire_dtype)
+        if checksum_np(q) == self.sent[(phase, msg.src, msg.dst)]:
+            return
+        from repro.core.integrity import scope_for
+        slot = (self.topo.node_of(msg.src) if phase == "inter"
+                else msg.src if phase in ("pair", "direct")
+                else self.topo.local_of(msg.src))
+        self.mismatches.append(Mismatch(
+            check="wire", phase=phase,
+            scope=scope_for(phase, self.topo.node_of(msg.dst),
+                            self.topo.local_of(msg.dst), slot,
+                            self.topo.ppn),
+            node=self.topo.node_of(msg.dst), proc=self.topo.local_of(msg.dst),
+            slot=slot, direction="forward"))
+
+
+def make_wire(topo, wire_dtype: str, faults: Sequence[MessageFault] = (),
+              force: bool = False) -> Optional[SimWire]:
+    """The wire a simulate apply threads through its mailboxes.
+
+    f32 with no faults and ``force=False`` returns ``None`` (the
+    uninstrumented simulators — bit-identical to the pre-wire path);
+    f32 with faults or ``force=True`` (integrity armed) returns the
+    plain :class:`SimWire` (full-width f64 checksums, today's
+    behavior); narrow dtypes always get the quantizing wire so the
+    payload is degraded whether or not integrity is on.
+    """
+    check_wire_dtype(wire_dtype)
+    if wire_dtype == "f32":
+        return SimWire(topo, faults) if (faults or force) else None
+    return QuantSimWire(topo, wire_dtype, faults)

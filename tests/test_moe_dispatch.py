@@ -1,0 +1,323 @@
+"""The MoE NAP-dispatch subsystem (repro.moe): plan layer + executors.
+
+Single-process tier-1 sweep — the simulate-backed moe executors, the
+routing-matrix plan layer, the quantized wire codecs and their error
+budgets, and the integrity threading over QUANTIZED messages.  The
+in-graph shard_map face is tests/multidev/moe_dispatch_prog.py.
+"""
+import numpy as np
+import pytest
+
+import repro.api as nap
+from repro.core.topology import Topology
+from repro.models.config import ModelConfig
+from repro.moe.dispatch import dispatch_operator
+from repro.moe.plan import (DISPATCH_MODES, choose_dispatch,
+                            dispatch_partitions, dispatch_traffic,
+                            representative_routing, routing_matrix)
+from repro.moe.wire import (WIRE_DTYPES, check_wire_dtype, decode_np,
+                            dispatch_error_budget, encode_np, quantize_np,
+                            wire_bytes, wire_error_bound)
+
+TOPO = Topology(n_nodes=2, ppn=4)
+T, E, K, NV = 128, 8, 4, 8
+
+
+@pytest.fixture(scope="module")
+def routing():
+    ids, w = representative_routing(T, E, K, seed=3)
+    return ids, w, routing_matrix(ids, w, E)
+
+
+@pytest.fixture(scope="module")
+def parts():
+    return dispatch_partitions(E, T, TOPO)
+
+
+@pytest.fixture(scope="module")
+def data():
+    rng = np.random.default_rng(1)
+    return rng.standard_normal((T, NV)) * 0.5, rng.standard_normal((E, NV))
+
+
+def _moe_op(r, parts, **kw):
+    ep, tp = parts
+    return nap.operator(r, topo=TOPO, row_part=ep, col_part=tp,
+                        backend="moe", **kw)
+
+
+def _sim_op(r, parts, method):
+    ep, tp = parts
+    return nap.operator(r, topo=TOPO, row_part=ep, col_part=tp,
+                        backend="simulate", method=method)
+
+
+# ---------------------------------------------------------------------------
+# plan layer
+# ---------------------------------------------------------------------------
+
+def test_routing_matrix_shape_and_weights(routing):
+    ids, w, r = routing
+    assert r.shape == (E, T)
+    dense = r.to_dense()
+    # column t holds token t's router weights at its expert rows
+    for t in (0, 17, T - 1):
+        for k in range(K):
+            assert dense[ids[t, k], t] == pytest.approx(w[t, k])
+    # normalized top-k weights sum to 1 per token
+    np.testing.assert_allclose(dense.sum(axis=0), 1.0, rtol=1e-12)
+
+
+def test_routing_matrix_rejects_out_of_range():
+    ids = np.array([[0, E]], np.int32)     # E is out of range
+    w = np.array([[0.5, 0.5]])
+    with pytest.raises(ValueError):
+        routing_matrix(ids, w, E)
+
+
+def test_routing_matrix_drops_negative_ids():
+    # a dropped (capacity-overflowed) token copy is encoded as id -1:
+    # it must simply vanish from the matrix, not raise
+    ids = np.array([[0, -1], [1, 2]], np.int32)
+    w = np.array([[1.0, 0.25], [0.5, 0.5]])
+    r = routing_matrix(ids, w, E)
+    assert r.nnz == 3
+    assert r.to_dense()[0, 0] == 1.0
+
+
+def test_dispatch_partitions_divisibility():
+    with pytest.raises(ValueError):
+        dispatch_partitions(E + 1, T, TOPO)   # 9 experts over 8 chips
+
+
+def test_choose_dispatch_prefers_fewer_inter_bytes(routing):
+    _, _, r = routing
+    ep, tp = dispatch_partitions(E, T, TOPO)
+    verdict = choose_dispatch(r, ep, tp, TOPO, nv=NV)
+    for d in ("dispatch", "combine"):
+        v = verdict[d]
+        assert v["chosen"] in ("flat", "nap")
+        chosen = v["candidates"][v["chosen"]]["injected_inter_bytes"]
+        for s in v["candidates"].values():
+            assert chosen <= s["injected_inter_bytes"]
+
+
+def test_dispatch_traffic_scales_with_wire_dtype(routing, parts):
+    _, _, r = routing
+    ep, tp = parts
+    from repro.moe.plan import build_dispatch_plans
+    plan = build_dispatch_plans(r, ep, tp, TOPO)["nap"]
+    t32 = dispatch_traffic(plan, wire_dtype="f32", nv=NV)
+    t8 = dispatch_traffic(plan, wire_dtype="fp8_e4m3", nv=NV)
+    assert t8["injected_inter_bytes"] * 4 == t32["injected_inter_bytes"]
+    assert t8["injected_intra_bytes"] * 4 == t32["injected_intra_bytes"]
+
+
+# ---------------------------------------------------------------------------
+# wire codecs
+# ---------------------------------------------------------------------------
+
+def test_f32_codec_is_identity():
+    x = np.random.default_rng(0).standard_normal(64).astype(np.float32)
+    assert encode_np(x, "f32") is x or np.array_equal(encode_np(x, "f32"), x)
+    assert np.array_equal(quantize_np(x, "f32"), x)
+    assert wire_bytes("f32") == 4
+
+
+def test_codec_roundtrip_error_bounds():
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal(4096) * 3.0
+    for wd, u in (("bf16", 2.0 ** -8), ("fp8_e4m3", 2.0 ** -4)):
+        q = decode_np(encode_np(x, wd), wd)
+        d = 2.0 ** -10 if wd == "fp8_e4m3" else 0.0
+        assert np.all(np.abs(q - x) <= u * np.abs(x) + d + 1e-12), wd
+        assert not np.array_equal(q, x)
+
+
+def test_fp8_saturates():
+    x = np.array([1e6, -1e6, 500.0], np.float64)
+    q = quantize_np(x, "fp8_e4m3")
+    assert np.all(np.isfinite(q)) and np.abs(q).max() <= 448.0
+
+
+def test_check_wire_dtype_rejects_unknown():
+    with pytest.raises(ValueError, match="f32|bf16|fp8_e4m3"):
+        check_wire_dtype("int4")
+
+
+# ---------------------------------------------------------------------------
+# executors: f32 bitwise vs the MATCHING float64 simulator
+# ---------------------------------------------------------------------------
+
+def test_f32_bitwise_vs_matching_simulator(routing, parts, data):
+    _, _, r = routing
+    x, y = data
+    oracle = {"flat": _sim_op(r, parts, "standard"),
+              "nap": _sim_op(r, parts, "nap")}
+    oracle["auto"] = oracle["nap"]          # nap wins both directions here
+    for method in DISPATCH_MODES:
+        op = _moe_op(r, parts, method=method)
+        ref = oracle[method]
+        assert np.array_equal(op @ x, ref @ x), (method, "forward")
+        assert np.array_equal(op.T @ y, ref.T @ y), (method, "combine")
+
+
+def test_flat_and_nap_agree_within_roundoff(routing, parts, data):
+    _, _, r = routing
+    x, _ = data
+    flat = _moe_op(r, parts, method="flat") @ x
+    napd = _moe_op(r, parts, method="nap") @ x
+    np.testing.assert_allclose(flat, napd, rtol=1e-12, atol=1e-13)
+
+
+def test_wire_none_matches_forced_f32_wire(routing, parts, data):
+    # f32 with no faults uses wire=None (no SimWire in the loop); arming
+    # integrity forces a checksummed f32 wire — results must be bitwise equal
+    _, _, r = routing
+    x, _ = data
+    plain = _moe_op(r, parts, method="nap") @ x
+    forced = _moe_op(r, parts, method="nap", integrity="detect") @ x
+    assert np.array_equal(plain, forced)
+
+
+def test_quantized_within_error_budget(routing, parts, data):
+    _, _, r = routing
+    x, _ = data
+    ref = {"flat": _sim_op(r, parts, "standard") @ x,
+           "nap": _sim_op(r, parts, "nap") @ x}
+    for wd in ("bf16", "fp8_e4m3"):
+        budget = dispatch_error_budget(r, x, wd, hops=1)
+        for method in ("flat", "nap"):
+            out = _moe_op(r, parts, method=method, wire_dtype=wd) @ x
+            assert np.all(np.abs(out - ref[method]) <= budget), (method, wd)
+            assert not np.array_equal(out, ref[method]), \
+                f"{method}/{wd} must actually quantize"
+
+
+def test_byte_accounting_tracks_wire_dtype(routing, parts):
+    _, _, r = routing
+    stats = {wd: _moe_op(r, parts, method="nap", wire_dtype=wd).stats()
+             for wd in WIRE_DTYPES}
+    for wd in WIRE_DTYPES:
+        assert stats[wd]["bytes_per_val"] == wire_bytes(wd)
+        assert stats[wd]["wire_dtype"] == wd
+    # the acceptance inequality: fp8 wire <= 0.55x the f32 wire
+    ratio = (stats["fp8_e4m3"]["dispatch_injected_inter_bytes"]
+             / stats["f32"]["dispatch_injected_inter_bytes"])
+    assert ratio <= 0.55
+
+
+def test_wire_error_bound_scales_with_hops():
+    cfg_flat = _cfg(moe_dispatch="flat", wire_dtype="bf16")
+    cfg_nap = _cfg(moe_dispatch="nap", wire_dtype="bf16")
+    assert wire_error_bound(cfg_nap) == 2 * wire_error_bound(cfg_flat)
+    assert wire_error_bound(wire_dtype="fp8_e4m3", hops=1) > \
+        wire_error_bound(wire_dtype="bf16", hops=1)
+
+
+# ---------------------------------------------------------------------------
+# edges: empty experts and dropped tokens
+# ---------------------------------------------------------------------------
+
+def test_empty_expert_rows(parts, data):
+    # all tokens route to experts {0, 1}: six expert rows are EMPTY and the
+    # plan layer must not choke on zero-traffic destinations
+    rng = np.random.default_rng(5)
+    ids = rng.integers(0, 2, size=(T, 2)).astype(np.int32)
+    ids[:, 1] = 1 - ids[:, 0]               # distinct experts per token
+    w = np.full((T, 2), 0.5)
+    r = routing_matrix(ids, w, E)
+    x, _ = data
+    out = _moe_op(r, parts, method="nap") @ x
+    ref = _sim_op(r, parts, "nap") @ x
+    assert np.array_equal(out, ref)
+    assert np.array_equal(out[2:], np.zeros_like(out[2:]))  # empty experts
+
+
+def test_dropped_tokens(parts, data):
+    # capacity-dropped copies (-1 ids) vanish: the matching columns are
+    # empty and the combine still matches the simulator bitwise
+    ids, w = representative_routing(T, E, K, seed=3)
+    ids[::7] = -1                           # drop every 7th token entirely
+    r = routing_matrix(ids, w, E)
+    x, y = data
+    op = _moe_op(r, parts, method="nap")
+    ref = _sim_op(r, parts, "nap")
+    assert np.array_equal(op @ x, ref @ x)
+    back = op.T @ y
+    assert np.array_equal(back[::7], np.zeros_like(back[::7]))
+
+
+# ---------------------------------------------------------------------------
+# integrity over QUANTIZED messages
+# ---------------------------------------------------------------------------
+
+FAULT = dict(node=1, proc=0, slot=0, element=2, bit=6)
+
+
+def test_detect_attributes_quantized_fault(routing, parts, data):
+    _, _, r = routing
+    x, _ = data
+    op = _moe_op(r, parts, method="nap", wire_dtype="fp8_e4m3",
+                 integrity="detect")
+    _ = op @ x                              # clean apply passes
+    op.inject_fault("inter", kind="bitflip", **FAULT)
+    with pytest.raises(nap.IntegrityError) as ei:
+        op @ x
+    assert ei.value.mismatches and ei.value.mismatches[0].phase == "inter"
+    rep = op.integrity_report()
+    assert rep["faults_injected"] == 1      # the fault actually fired
+    assert rep["wire_mismatches"] == 1 and rep["by_scope"]["off_node"] == 1
+
+
+def test_recover_bit_identical_quantized(routing, parts, data):
+    _, _, r = routing
+    x, _ = data
+    op = _moe_op(r, parts, method="nap", wire_dtype="fp8_e4m3",
+                 integrity="recover")
+    base = op @ x                           # fault-free quantized result
+    op.inject_fault("inter", kind="bitflip", **FAULT)
+    assert np.array_equal(op @ x, base), \
+        "recover must retry through a clean quantizing wire"
+    rep = op.integrity_report()
+    assert rep["faults_injected"] == 1 and rep["retries"] == 1 \
+        and rep["recovered"] == 1
+
+
+# ---------------------------------------------------------------------------
+# config + api validation
+# ---------------------------------------------------------------------------
+
+def _cfg(**kw):
+    return ModelConfig(name="t", family="moe", n_layers=1, d_model=NV,
+                       n_heads=1, n_kv_heads=1, d_ff=8, vocab=8, n_experts=E,
+                       top_k=K, moe_dff=8, **kw)
+
+
+def test_model_config_validates_dispatch_fields():
+    with pytest.raises(ValueError, match="flat|nap|auto"):
+        _cfg(moe_dispatch="bogus")
+    with pytest.raises(ValueError, match="f32|bf16|fp8_e4m3"):
+        _cfg(wire_dtype="int4")
+    _cfg(moe_dispatch="auto", wire_dtype="fp8_e4m3")   # valid combos pass
+
+
+def test_wire_dtype_is_moe_only(routing, parts):
+    _, _, r = routing
+    ep, tp = parts
+    with pytest.raises(ValueError, match="moe"):
+        nap.operator(r, topo=TOPO, row_part=ep, col_part=tp,
+                     backend="simulate", method="standard", wire_dtype="bf16")
+
+
+def test_dispatch_operator_front_door(routing, parts, data):
+    ids, w, r = routing
+    x, _ = data
+    op = dispatch_operator(_cfg(moe_dispatch="auto"), topo=TOPO,
+                           routing=(ids, w))
+    ref = _sim_op(r, parts, "nap") @ x      # auto resolves to nap here
+    assert np.array_equal(op @ x, ref)
+    rep = op.autotune_report()
+    assert rep["dispatch_resolved"] in ("flat", "nap")
+    assert rep["combine_resolved"] in ("flat", "nap")
+    assert rep["wire_dtype"] == "f32"
